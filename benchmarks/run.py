@@ -1,0 +1,224 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows:
+
+  serialization_*   — paper Fig. 10: TeraAgent IO (zero-copy SoA slab) vs a
+                      generic pack/unpack serializer baseline
+  delta_*           — paper Fig. 11: delta encoding message-size reduction +
+                      distribution-op overhead per benchmark simulation
+  sim_*             — paper Fig. 6 analogue: per-simulation iteration rate
+                      (agent_updates/s, the Biocellion comparison metric §3.8)
+  scaling_*         — paper Fig. 8/9 analogue: strong scaling over placeholder
+                      spatial meshes (subprocess: needs >1 XLA host device)
+  roofline_*        — LM stack: dry-run-derived roofline summary per chosen
+                      cell (reads results/dryrun; skips if absent)
+
+CPU wall-clock here characterizes the harness, not TPU performance; the TPU
+performance analysis lives in EXPERIMENTS.md §Roofline/§Perf.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+ROWS = []
+
+
+def emit(name: str, us: float, derived: str = ""):
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.1f},{derived}")
+
+
+def timeit(fn, n=5, warmup=2):
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(n):
+        fn()
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Fig 10 analogue: serialization
+# ---------------------------------------------------------------------------
+
+def bench_serialization():
+    """TeraAgent IO == the SoA slab itself (serialization is the identity);
+    baseline == generic per-leaf pack/unpack into a byte buffer (the
+    ROOT-IO-style copy pipeline)."""
+    from repro.core import AgentSchema
+    from repro.core.agent_soa import AgentSoA
+    from repro.core.halo import take_slab
+
+    schema = AgentSchema.create({
+        "diameter": ((), jnp.float32), "ctype": ((), jnp.int32)})
+    soa = AgentSoA.empty(schema, 66, 66, 16)
+    soa = soa.replace(valid=soa.valid.at[:, :, :8].set(True))
+
+    def ta_io():
+        # zero-copy: the exchange slab IS the wire format
+        slab = take_slab(soa, 0, 1)
+        return jax.block_until_ready(slab["pos"])
+
+    def generic_pack_unpack():
+        slab = take_slab(soa, 0, 1)
+        bufs = [np.asarray(v).tobytes() for v in slab.values()]  # pack
+        wire = b"".join(bufs)
+        out = []
+        off = 0                                                   # unpack
+        for k, v in slab.items():
+            n = np.asarray(v).nbytes
+            arr = np.frombuffer(wire[off:off + n],
+                                dtype=np.asarray(v).dtype.str)
+            out.append(jnp.asarray(arr.reshape(np.asarray(v).shape)))
+            off += n
+        return jax.block_until_ready(out[0])
+
+    t_ta = timeit(ta_io, n=20)
+    t_gen = timeit(generic_pack_unpack, n=20)
+    emit("serialization_ta_io", t_ta, f"speedup_vs_generic={t_gen/t_ta:.1f}x")
+    emit("serialization_generic", t_gen, "baseline")
+
+
+# ---------------------------------------------------------------------------
+# Fig 11 analogue: delta encoding
+# ---------------------------------------------------------------------------
+
+def bench_delta():
+    from repro.core import DeltaConfig
+    from repro.sims import cell_clustering
+
+    for qd, label in ((jnp.int8, "int8"), (jnp.int16, "int16")):
+        delta = DeltaConfig(enabled=True, qdtype=qd, refresh_interval=16)
+        eng = cell_clustering.make_engine if False else None
+        # plain
+        t0 = time.perf_counter()
+        s_plain, _ = cell_clustering.run(n_agents=300, steps=8)
+        t_plain = time.perf_counter() - t0
+        b_plain = int(s_plain.halo_bytes[0, 0])
+        t0 = time.perf_counter()
+        s_delta, _ = cell_clustering.run(n_agents=300, steps=8, delta=delta)
+        t_delta = time.perf_counter() - t0
+        b_delta = int(s_delta.halo_bytes[0, 0])
+        emit(f"delta_{label}_msg_bytes", t_delta / 8 * 1e6,
+             f"reduction={b_plain/max(b_delta,1):.2f}x "
+             f"({b_plain}->{b_delta}B/iter)")
+    # steady-state analytic reduction for float-only payloads
+    r = 16
+    emit("delta_int8_float_payload", 0.0,
+         f"steady_state_reduction={4*r/(4+(r-1)*1):.2f}x_at_R={r}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 6 / §3.8 analogue: per-sim iteration rate
+# ---------------------------------------------------------------------------
+
+def bench_sims():
+    from repro.sims import (cell_clustering, cell_proliferation,
+                            epidemiology, oncology)
+
+    for name, mod, kw in (
+        ("cell_clustering", cell_clustering, dict(n_agents=400, steps=4)),
+        ("cell_proliferation", cell_proliferation,
+         dict(n_agents=60, steps=4)),
+        ("epidemiology", epidemiology, dict(n_agents=500, steps=4)),
+        ("oncology", oncology, dict(n_agents=30, steps=4)),
+    ):
+        _ = mod.run(**{**kw, "steps": 2})  # warm compile
+        t0 = time.perf_counter()
+        state, _ = mod.run(**kw)
+        dt_iter = (time.perf_counter() - t0) / kw["steps"]
+        from repro.core.engine import total_agents
+
+        n = total_agents(state)
+        emit(f"sim_{name}", dt_iter * 1e6,
+             f"agent_updates_per_s={n/dt_iter:.0f}")
+
+
+# ---------------------------------------------------------------------------
+# Fig 8/9 analogue: strong scaling over spatial meshes (subprocess)
+# ---------------------------------------------------------------------------
+
+def bench_scaling():
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import time, numpy as np, jax
+from repro.sims import cell_clustering
+
+for mesh_shape in ((1, 1), (2, 1), (2, 2)):
+    n_dev = mesh_shape[0] * mesh_shape[1]
+    mesh = (jax.make_mesh(mesh_shape, ("sx", "sy"),
+                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
+            if n_dev > 1 else None)
+    interior = (16 // mesh_shape[0], 16 // mesh_shape[1])
+    _ = cell_clustering.run(n_agents=800, steps=2, interior=interior,
+                            mesh_shape=mesh_shape, mesh=mesh)
+    t0 = time.perf_counter()
+    cell_clustering.run(n_agents=800, steps=6, interior=interior,
+                        mesh_shape=mesh_shape, mesh=mesh)
+    dt = (time.perf_counter() - t0) / 6
+    print(f"scaling_devices_{n_dev},{dt*1e6:.1f},iter_s={dt:.4f}")
+"""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(ROOT / "src")
+    p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
+                       capture_output=True, text=True, timeout=1800, env=env)
+    if p.returncode != 0:
+        emit("scaling_error", 0.0, p.stderr.strip()[-120:])
+        return
+    for line in p.stdout.strip().splitlines():
+        if line.startswith("scaling_"):
+            print(line)
+            name, us, derived = line.split(",", 2)
+            ROWS.append((name, float(us), derived))
+
+
+# ---------------------------------------------------------------------------
+# LM roofline summary (from dry-run records)
+# ---------------------------------------------------------------------------
+
+def bench_roofline():
+    d = ROOT / "results" / "dryrun"
+    if not d.exists():
+        emit("roofline_missing", 0.0, "run repro.launch.dryrun first")
+        return
+    best = {}
+    for p in sorted(d.glob("*__baseline.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            continue
+        key = (r["arch"], r["shape"], r["mesh"])
+        best[key] = r
+    for (arch, shape, mesh), r in sorted(best.items()):
+        if mesh != "single":
+            continue
+        bound = max(r["t_compute_s"], r["t_memory_s"], r["t_collective_s"])
+        emit(f"roofline_{arch}_{shape}", bound * 1e6,
+             f"dominant={r['dominant']};frac={r['roofline_fraction']:.4f}")
+
+
+def main() -> None:
+    bench_serialization()
+    bench_delta()
+    bench_sims()
+    bench_scaling()
+    bench_roofline()
+    print(f"\n# {len(ROWS)} benchmark rows")
+
+
+if __name__ == "__main__":
+    main()

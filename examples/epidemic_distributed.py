@@ -1,0 +1,38 @@
+"""Distributed epidemiology with delta-encoded aura exchange — the paper's
+seamless laptop-to-cluster story (§3.4): the model definition is identical to
+the single-device case; only the mesh changes.
+
+    PYTHONPATH=src python examples/epidemic_distributed.py
+"""
+
+import os
+
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DeltaConfig
+from repro.sims import epidemiology
+
+
+def main():
+    mesh = jax.make_mesh((2, 2), ("sx", "sy"),
+                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    delta = DeltaConfig(enabled=True, qdtype=jnp.int16, refresh_interval=8)
+    state, metrics = epidemiology.run(
+        n_agents=800, steps=60, initial_infected=20,
+        mesh=mesh, mesh_shape=(2, 2), interior=(5, 5), delta=delta)
+    ser = metrics["series"]
+    print("   t     S     I     R")
+    for t in range(0, len(ser), 10):
+        s, i, r = ser[t]
+        print(f"{t:4d} {s:5d} {i:5d} {r:5d}")
+    print(f"\nfinal attack rate: {ser[-1, 2] / ser[0].sum():.1%} "
+          f"(aura wire bytes/iter: {int(state.halo_bytes[0, 0])})")
+    print("4 devices, delta-encoded aura exchange, identical model code.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Quickstart: define agents, behaviors, and run a simulation — the paper's
+three-step modeling workflow (§1) in ~40 lines.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AgentSchema, Behavior, Engine, GridGeom, total_agents
+from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
+
+# 1. What is an agent?  A position plus these attributes:
+schema = AgentSchema.create({
+    "diameter": ((), jnp.float32),
+    "ctype": ((), jnp.int32),
+})
+
+# 2. How does it behave?  Same-type adhesion + soft-sphere repulsion,
+#    overdamped displacement dynamics:
+behavior = Behavior(
+    schema=schema,
+    pair_fn=soft_repulsion_adhesion,
+    pair_attrs=("diameter", "ctype"),
+    update_fn=displacement_update,
+    radius=2.0,
+    params={"repulsion": 2.0, "adhesion": 0.6, "same_type_only": 1.0,
+            "max_step": 0.5},
+)
+
+# 3. Initial condition: 400 agents of two types, uniformly placed.
+engine = Engine(
+    geom=GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1), cap=64),
+    behavior=behavior, dt=0.1,
+)
+rng = np.random.default_rng(0)
+n = 400
+pos = rng.uniform(0.5, 15.5, size=(n, 2)).astype(np.float32)
+state = engine.init_state(pos, {
+    "diameter": np.full((n,), 1.0, np.float32),
+    "ctype": rng.integers(0, 2, n).astype(np.int32),
+}, seed=0)
+
+step = engine.make_local_step()
+for i in range(30):
+    state = step(state, full_halo=True)
+
+print(f"agents: {total_agents(state)} (conserved), "
+      f"iterations: {int(state.it[0, 0])}, "
+      f"dropped: {int(state.dropped.sum())}")
+print("The same Behavior runs unchanged on a multi-pod mesh via "
+      "engine.make_sharded_step(mesh) — see examples/epidemic_distributed.py")

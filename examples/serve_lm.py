@@ -1,0 +1,55 @@
+"""Serving example: batched prefill + autoregressive decode with a KV cache
+(greedy sampling), on the MLA architecture whose cache is the compressed
+latent (minicpm3 family).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import get
+from repro.models import params as P
+from repro.models.model import build_model
+from repro.training.steps import make_serve_decode_step
+
+
+def main():
+    cfg = get("minicpm3-4b").smoke
+    model = build_model(cfg)
+    params = P.init(model.spec, jax.random.PRNGKey(0))
+
+    batch, prompt_len, gen_len = 4, 24, 16
+    max_len = prompt_len + gen_len
+    prompts = jax.random.randint(jax.random.PRNGKey(1),
+                                 (batch, prompt_len), 0, cfg.vocab)
+
+    cache = model.init_cache(batch, max_len)
+    prefill = jax.jit(model.prefill)
+    decode = jax.jit(make_serve_decode_step(model))
+
+    t0 = time.time()
+    logits, cache = prefill(params, {"tokens": prompts}, cache)
+    tok = jnp.argmax(logits[:, -1, :cfg.vocab], axis=-1)[:, None]
+    out = [tok]
+    for t in range(gen_len - 1):
+        logits, cache = decode(params, cache, tok,
+                               jnp.int32(prompt_len + t))
+        tok = jnp.argmax(logits[:, 0, :cfg.vocab], axis=-1)[:, None]
+        out.append(tok)
+    gen = np.asarray(jnp.concatenate(out, axis=1))
+    dt = time.time() - t0
+    print(f"prefill {batch}x{prompt_len} + decode {gen_len} tokens "
+          f"in {dt:.2f}s ({batch * gen_len / dt:.1f} tok/s)")
+    for b in range(batch):
+        print(f"  seq {b}: {gen[b].tolist()}")
+    print("\nMLA cache stores the compressed KV latent "
+          f"({cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim} dims/token vs "
+          f"{2 * cfg.n_heads * 8} for full KV at this scale).")
+
+
+if __name__ == "__main__":
+    main()

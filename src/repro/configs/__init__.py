@@ -1,0 +1,16 @@
+"""Architecture registry: importing this package registers all 10 assigned
+architectures (exact published configs) plus their smoke reductions."""
+
+from repro.configs import (  # noqa: F401
+    hubert_xlarge,
+    internlm2_20b,
+    llava_next_mistral_7b,
+    minicpm3_4b,
+    minicpm_2b,
+    olmo_1b,
+    phi3p5_moe,
+    qwen3_moe,
+    xlstm_1p3b,
+    zamba2_1p2b,
+)
+from repro.configs.base import ArchConfig, ArchSpec, get, names  # noqa: F401

@@ -1,0 +1,21 @@
+"""TeraAgent core: the paper's contribution as composable JAX modules.
+
+Public API:
+  AgentSchema / AgentSoA   — SoA agent container (TeraAgent IO analogue)
+  GridGeom                 — partitioning grid + neighbor-search grid
+  Behavior                 — model definition (pair kernel + update)
+  Engine / SimState        — distributed simulation engine
+  DeltaConfig              — delta-encoded aura exchange (paper §2.3)
+"""
+
+from repro.core.agent_soa import AgentSchema, AgentSoA, GID_COUNT, GID_RANK, POS
+from repro.core.behaviors import Behavior
+from repro.core.delta import DeltaConfig
+from repro.core.engine import Engine, SimState, total_agents
+from repro.core.grid import GridGeom
+
+__all__ = [
+    "AgentSchema", "AgentSoA", "GID_COUNT", "GID_RANK", "POS",
+    "Behavior", "DeltaConfig", "Engine", "SimState", "GridGeom",
+    "total_agents",
+]

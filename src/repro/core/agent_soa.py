@@ -1,0 +1,144 @@
+"""Structure-of-Arrays agent container — the TPU-native analogue of TeraAgent IO.
+
+TeraAgent's serialization insight (paper §2.2): make the wire format identical to
+the in-memory format so that (de)serialization degenerates to a memcpy plus pointer
+fix-up.  On TPU the idiomatic equivalent is stronger: agents live in dense, fixed-
+schema structure-of-arrays slabs, so any halo/migration transfer is a plain array
+collective — the receive buffer *is* the live data structure and there is zero
+pack/unpack work by construction.  Pointer fields (the paper's ``AgentPointer``)
+become integer global-identifier columns; behaviour dispatch (the paper's vtable
+fix-up) becomes data-driven mask columns.
+
+Layout: every attribute is an array of shape ``(hx, hy, K, *attr_shape)`` where
+``(hx, hy)`` is the local neighbor-search-grid (NSG) cell grid *including a one-
+cell halo ring* and ``K`` is the per-cell slot capacity.  A boolean ``valid`` mask
+marks occupied slots.  Global agent identifiers follow the paper's
+``<rank, counter>`` scheme as two int32 columns.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Dict, Mapping, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+# Reserved attribute names every AgentSoA carries.
+POS = "pos"          # (..., 2) float32 absolute position
+GID_RANK = "gid_rank"    # int32 — rank that created the agent
+GID_COUNT = "gid_count"  # int32 — strictly increasing per-rank counter
+
+RESERVED = (POS, GID_RANK, GID_COUNT)
+
+
+@dataclasses.dataclass(frozen=True)
+class AgentSchema:
+    """Static schema: user attribute name -> (trailing shape, dtype).
+
+    The schema is the TPU analogue of the paper's "no schema evolution" design
+    point: it is fixed at trace time, so transfers carry no runtime type tags.
+    """
+
+    fields: Tuple[Tuple[str, Tuple[int, ...], Any], ...]
+
+    @staticmethod
+    def create(spec: Mapping[str, Tuple[Tuple[int, ...], Any]]) -> "AgentSchema":
+        items = []
+        for name, (shape, dtype) in sorted(spec.items()):
+            if name in RESERVED or name == "valid":
+                raise ValueError(f"attribute name {name!r} is reserved")
+            items.append((name, tuple(shape), jnp.dtype(dtype)))
+        return AgentSchema(fields=tuple(items))
+
+    def names(self) -> Tuple[str, ...]:
+        return tuple(n for n, _, _ in self.fields)
+
+    def all_specs(self) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+        """Schema including the reserved columns."""
+        out: Dict[str, Tuple[Tuple[int, ...], Any]] = {
+            POS: ((2,), jnp.float32),
+            GID_RANK: ((), jnp.int32),
+            GID_COUNT: ((), jnp.int32),
+        }
+        for name, shape, dtype in self.fields:
+            out[name] = (shape, dtype)
+        return out
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class AgentSoA:
+    """Agents stored in NSG cell-slot layout: arrays of shape (hx, hy, K, ...)."""
+
+    attrs: Dict[str, Array]   # each (hx, hy, K, *trailing)
+    valid: Array              # (hx, hy, K) bool
+
+    # -- pytree protocol -------------------------------------------------
+    def tree_flatten(self):
+        keys = tuple(sorted(self.attrs))
+        children = tuple(self.attrs[k] for k in keys) + (self.valid,)
+        return children, keys
+
+    @classmethod
+    def tree_unflatten(cls, keys, children):
+        attrs = dict(zip(keys, children[:-1]))
+        return cls(attrs=attrs, valid=children[-1])
+
+    # -- convenience -----------------------------------------------------
+    @property
+    def grid_shape(self) -> Tuple[int, int]:
+        return self.valid.shape[0], self.valid.shape[1]
+
+    @property
+    def capacity(self) -> int:
+        return int(self.valid.shape[2])
+
+    @property
+    def pos(self) -> Array:
+        return self.attrs[POS]
+
+    def count(self) -> Array:
+        return jnp.sum(self.valid.astype(jnp.int32))
+
+    def replace(self, **kw) -> "AgentSoA":
+        return dataclasses.replace(self, **kw)
+
+    def map_attrs(self, fn: Callable[[str, Array], Array]) -> "AgentSoA":
+        return self.replace(attrs={k: fn(k, v) for k, v in self.attrs.items()})
+
+    @staticmethod
+    def empty(schema: AgentSchema, hx: int, hy: int, cap: int) -> "AgentSoA":
+        attrs = {}
+        for name, (shape, dtype) in schema.all_specs().items():
+            attrs[name] = jnp.zeros((hx, hy, cap) + shape, dtype=dtype)
+        valid = jnp.zeros((hx, hy, cap), dtype=jnp.bool_)
+        return AgentSoA(attrs=attrs, valid=valid)
+
+
+def flat_view(soa: AgentSoA) -> Tuple[Dict[str, Array], Array]:
+    """Flatten (hx, hy, K, ...) -> (N, ...) for sorting/packing passes."""
+    hx, hy = soa.grid_shape
+    k = soa.capacity
+    n = hx * hy * k
+    attrs = {name: a.reshape((n,) + a.shape[3:]) for name, a in soa.attrs.items()}
+    return attrs, soa.valid.reshape((n,))
+
+
+def from_flat(
+    attrs: Dict[str, Array], valid: Array, hx: int, hy: int, cap: int
+) -> AgentSoA:
+    out = {name: a.reshape((hx, hy, cap) + a.shape[1:]) for name, a in attrs.items()}
+    return AgentSoA(attrs=out, valid=valid.reshape((hx, hy, cap)))
+
+
+def concat_flat(
+    a: Tuple[Dict[str, Array], Array], b: Tuple[Dict[str, Array], Array]
+) -> Tuple[Dict[str, Array], Array]:
+    """Concatenate two flat agent sets (used for spawn + received migrants)."""
+    attrs = {k: jnp.concatenate([a[0][k], b[0][k]], axis=0) for k in a[0]}
+    return attrs, jnp.concatenate([a[1], b[1]], axis=0)

@@ -1,0 +1,81 @@
+"""Composable agent behaviors — the user-facing modeling API.
+
+Mirrors the paper's three-step model structure (§1): define what an agent is
+(an AgentSchema), define its behaviors (a Behavior: a pair-interaction kernel
+plus a pointwise update), and define the initial condition (an initializer).
+The same Behavior runs unchanged on one device or on a multi-pod mesh —
+the paper's "seamless transition from a laptop to a supercomputer" (§3.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agent_soa import AgentSchema, POS
+from repro.core.neighbors import PairFn
+
+Array = jax.Array
+
+# update(attrs, valid, acc, key, params, dt) ->
+#   (new_attrs, alive_mask, spawn_mask, child_attrs_or_None)
+UpdateFn = Callable[..., Tuple[Dict[str, Array], Array, Array,
+                               Optional[Dict[str, Array]]]]
+
+
+@dataclasses.dataclass(frozen=True)
+class Behavior:
+    """A full agent behavior: local interaction + pointwise update."""
+
+    schema: AgentSchema
+    pair_fn: PairFn                      # neighbor contribution kernel
+    pair_attrs: Tuple[str, ...]          # attrs the pair kernel reads
+    update_fn: UpdateFn                  # pointwise state transition
+    radius: float                        # max interaction distance
+    params: dict = dataclasses.field(default_factory=dict)
+    can_spawn: bool = False              # statically enables the spawn path
+    acc_spec: Dict[str, Tuple[Tuple[int, ...], object]] = dataclasses.field(
+        default_factory=dict
+    )
+
+
+# ---------------------------------------------------------------------------
+# Standard mechanical interactions shared by the biology-flavoured sims.
+# ---------------------------------------------------------------------------
+
+def soft_repulsion_adhesion(attrs_i, attrs_j, disp, dist2, params):
+    """BioDynaMo-style mechanical force: short-range soft-sphere repulsion plus
+    type-aware adhesion within the interaction radius.
+
+    Expects attrs to carry ``diameter`` (float) and ``ctype`` (int32).
+    ``params``: repulsion, adhesion, same_type_only (0/1).
+    """
+    eps = jnp.float32(1e-6)
+    dist = jnp.sqrt(dist2 + eps)
+    unit = disp / dist[..., None]
+    r_sum = 0.5 * (attrs_i["diameter"] + attrs_j["diameter"])
+    overlap = r_sum - dist
+    rep = jnp.where(overlap > 0, params["repulsion"] * overlap, 0.0)
+    same = (attrs_i["ctype"] == attrs_j["ctype"]).astype(jnp.float32)
+    gate = jnp.where(
+        jnp.float32(params.get("same_type_only", 1.0)) > 0, same, 1.0
+    )
+    adh = jnp.where(overlap <= 0, params["adhesion"] * gate, 0.0)
+    force = (rep - adh)[..., None] * unit  # + pushes apart, - pulls together
+    return {"force": -force}  # force ON i points from j towards i
+
+
+def displacement_update(attrs, valid, acc, key, params, dt):
+    """Overdamped dynamics: dx = F * dt, speed-clamped to < one NSG cell."""
+    f = acc["force"]
+    max_step = jnp.float32(params["max_step"])
+    norm = jnp.sqrt(jnp.sum(f * f, axis=-1, keepdims=True) + 1e-12)
+    step = f * jnp.minimum(max_step / norm, dt)
+    new = dict(attrs)
+    new[POS] = attrs[POS] + jnp.where(valid[..., None], step, 0.0)
+    alive = valid
+    spawn = jnp.zeros_like(valid)
+    return new, alive, spawn, None

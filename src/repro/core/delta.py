@@ -1,0 +1,120 @@
+"""Delta encoding of iterative exchanges (paper §2.3), TPU-adapted.
+
+The paper's observation: agent attributes change only gradually between
+iterations, so sender/receiver pairs keep a shared *reference* message and
+transmit only the (compressed) difference, refreshing the reference at regular
+intervals.
+
+TPU adaptation (DESIGN.md §2): byte-granular, branchy LZ4 has no TPU analogue,
+and static shapes rule out dynamically-sized packed payloads.  The TPU-native
+form of "compress the delta" is **precision narrowing of the temporal
+derivative**: float attributes are transmitted as int8/int16 quantized deltas
+against the reference with a per-slab scale.  Because the delta of a slowly-
+varying signal is small, narrow fixed-point holds it with bounded error, and
+the closed-loop reference update (both sides set ``ref <- ref + dequant(q)``)
+gives error feedback: quantization error is re-encoded next iteration instead
+of accumulating.
+
+The paper's agent-reordering stage (match message order to reference order)
+is unnecessary here: SoA cell-slot layout is slot-stable across iterations, so
+sender/receiver alignment is free — this is recorded as a hardware-adaptation
+win in DESIGN.md.
+
+Bytes on the wire are static and exact: f32 full refresh = 4 B/elem, int16
+delta = 2 B/elem, int8 delta = 1 B/elem (plus one f32 scale per slab), so the
+steady-state reduction at refresh interval R is ``4R / (4 + (R-1)*q)`` — e.g.
+3.56x for int8 at R=16, matching the paper's reported 1.1-3.5x delta gain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# A "slab" is a pytree (dict) of arrays: the unit of halo exchange.
+Slab = Dict[str, Array]
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaConfig:
+    enabled: bool = True
+    qdtype: Any = jnp.int8        # int8 or int16 quantized delta payload
+    refresh_interval: int = 16    # full f32 send every R iterations
+
+
+def _is_float(a: Array) -> bool:
+    return jnp.issubdtype(a.dtype, jnp.floating)
+
+
+def encode_full(slab: Slab) -> Tuple[Slab, Slab]:
+    """Full refresh: payload is the raw slab; new reference = slab."""
+    return slab, slab
+
+
+def decode_full(payload: Slab) -> Tuple[Slab, Slab]:
+    return payload, payload
+
+
+def encode_delta(slab: Slab, ref: Slab, cfg: DeltaConfig) -> Tuple[Slab, Slab]:
+    """Quantized-delta encode float attrs; pass-through the rest.
+
+    Returns (payload, new_reference). new_reference equals the receiver-side
+    reconstruction (closed loop).
+    """
+    qinfo = jnp.iinfo(cfg.qdtype)
+    qmax = jnp.float32(qinfo.max)
+    payload: Slab = {}
+    new_ref: Slab = {}
+    for name, x in slab.items():
+        r = ref[name]
+        if _is_float(x):
+            delta = (x - r).astype(jnp.float32)
+            scale = jnp.maximum(jnp.max(jnp.abs(delta)), 1e-30) / qmax
+            q = jnp.clip(jnp.round(delta / scale), qinfo.min, qinfo.max).astype(
+                cfg.qdtype
+            )
+            payload[name] = q
+            payload[name + "/scale"] = scale.astype(jnp.float32)
+            new_ref[name] = (r.astype(jnp.float32) + q.astype(jnp.float32) * scale
+                             ).astype(x.dtype)
+        else:
+            payload[name] = x
+            new_ref[name] = x
+    return payload, new_ref
+
+
+def decode_delta(payload: Slab, ref: Slab, cfg: DeltaConfig) -> Tuple[Slab, Slab]:
+    """Receiver-side inverse of :func:`encode_delta`."""
+    out: Slab = {}
+    for name, q in payload.items():
+        if name.endswith("/scale"):
+            continue
+        r = ref[name]
+        if name + "/scale" in payload:
+            scale = payload[name + "/scale"]
+            x = (r.astype(jnp.float32) + q.astype(jnp.float32) * scale).astype(
+                r.dtype
+            )
+        else:
+            x = q
+        out[name] = x
+    return out, dict(out)
+
+
+def payload_bytes(payload: Slab) -> int:
+    """Exact static wire bytes of a payload pytree."""
+    import math
+
+    total = 0
+    for a in jax.tree_util.tree_leaves(payload):
+        total += int(jnp.dtype(a.dtype).itemsize) * math.prod(a.shape)
+    return total
+
+
+def zeros_like_slab(slab_spec: Slab) -> Slab:
+    return {k: jnp.zeros(v.shape, v.dtype) for k, v in slab_spec.items()}

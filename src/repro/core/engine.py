@@ -1,0 +1,384 @@
+"""The distributed simulation engine: one iteration = aura update ->
+neighbor interaction -> agent update -> agent migration (paper Figure 1).
+
+State layout: every per-device quantity carries two leading device-mesh dims
+``(mx, my)`` (size (1,1) locally inside shard_map), and the agent SoA is
+sharded over its first two (cell-grid) dims.  A single uniform
+``PartitionSpec("sx", "sy")`` therefore shards the whole state, and the same
+``local_step`` body runs unchanged on one device (LocalComm) or on an
+arbitrary spatial mesh (ShardComm inside shard_map) — the paper's seamless
+laptop-to-supercomputer property (§3.4).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agent_soa import (
+    AgentSoA,
+    AgentSchema,
+    GID_COUNT,
+    GID_RANK,
+    POS,
+    flat_view,
+)
+from repro.core.behaviors import Behavior
+from repro.core.delta import DeltaConfig, Slab
+from repro.core.grid import GridGeom, bin_agents, clear_ring
+from repro.core.halo import (
+    Comm,
+    LocalComm,
+    ShardComm,
+    halo_exchange,
+    init_refs,
+    take_slab,
+)
+from repro.core.neighbors import pair_accumulate
+
+Array = jax.Array
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class SimState:
+    soa: AgentSoA                 # (mx*hx, my*hy, K, ...) globally
+    refs: Dict[str, Slab]         # leading (mx, my)
+    it: Array                     # (mx, my) int32
+    key: Array                    # (mx, my, 2) uint32
+    gid_counter: Array            # (mx, my) int32
+    dropped: Array                # (mx, my) int32 cumulative overflow drops
+    halo_bytes: Array             # (mx, my) int32 wire bytes of last aura update
+
+    def tree_flatten(self):
+        ref_keys = tuple(sorted(self.refs))
+        ref_children = tuple(
+            tuple(self.refs[k][f] for f in sorted(self.refs[k]))
+            for k in ref_keys
+        )
+        ref_fields = tuple(tuple(sorted(self.refs[k])) for k in ref_keys)
+        children = (self.soa, ref_children, self.it, self.key,
+                    self.gid_counter, self.dropped, self.halo_bytes)
+        return children, (ref_keys, ref_fields)
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        ref_keys, ref_fields = aux
+        soa, ref_children, it, key, gidc, dropped, hbytes = children
+        refs = {
+            k: dict(zip(fields, vals))
+            for k, fields, vals in zip(ref_keys, ref_fields, ref_children)
+        }
+        return cls(soa=soa, refs=refs, it=it, key=key, gid_counter=gidc,
+                   dropped=dropped, halo_bytes=hbytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class Engine:
+    geom: GridGeom
+    behavior: Behavior
+    delta_cfg: DeltaConfig = DeltaConfig(enabled=False)
+    dt: float = 1.0
+
+    # ------------------------------------------------------------------
+    # Initialization (host side, numpy-friendly)
+    # ------------------------------------------------------------------
+    def init_state(
+        self,
+        positions: np.ndarray,          # (N, 2) global positions
+        attrs: Dict[str, np.ndarray],   # user attrs, (N, ...)
+        seed: int = 0,
+    ) -> SimState:
+        """Distributed initialization (paper §2.4.4): agents are created
+        directly on their authoritative device — no mass migration."""
+        geom = self.geom
+        mx, my = geom.mesh_shape
+        ix, iy = geom.interior
+        hx, hy = geom.local_shape
+        schema = self.behavior.schema
+
+        gx, gy = geom.domain_size
+        if (positions < 0).any() or (positions[:, 0] >= gx).any() or (
+                positions[:, 1] >= gy).any():
+            raise ValueError(
+                f"initial positions outside the domain [0,{gx})x[0,{gy}) — "
+                "out-of-domain agents would land in the halo ring and be "
+                "destroyed by the first aura rebuild")
+        lx = ix * geom.cell_size
+        ly = iy * geom.cell_size
+        dev_x = np.clip((positions[:, 0] // lx).astype(np.int64), 0, mx - 1)
+        dev_y = np.clip((positions[:, 1] // ly).astype(np.int64), 0, my - 1)
+
+        bin_fn = jax.jit(partial(bin_agents, geom))
+
+        blocks = []
+        counters = np.zeros((mx, my), dtype=np.int32)
+        next_gid = 0
+        for cx in range(mx):
+            row = []
+            for cy in range(my):
+                sel = np.flatnonzero((dev_x == cx) & (dev_y == cy))
+                n = sel.size
+                flat: Dict[str, jax.Array] = {}
+                for name, (shape, dtype) in schema.all_specs().items():
+                    if name == POS:
+                        a = positions[sel].astype(np.float32)
+                    elif name == GID_RANK:
+                        a = np.full((n,), cx * my + cy, dtype=np.int32)
+                    elif name == GID_COUNT:
+                        a = np.arange(n, dtype=np.int32)
+                    else:
+                        a = np.asarray(attrs[name][sel], dtype=dtype)
+                    flat[name] = jnp.asarray(a)
+                valid = jnp.ones((n,), jnp.bool_)
+                origin = jnp.asarray(
+                    [cx * lx, cy * ly], dtype=jnp.float32
+                )
+                soa, dropped = bin_fn(flat, valid, origin)
+                if int(dropped) != 0:
+                    raise ValueError(
+                        f"cell capacity overflow at init on device ({cx},{cy}): "
+                        f"{int(dropped)} agents dropped; raise geom.cap"
+                    )
+                counters[cx, cy] = n
+                row.append(soa)
+            blocks.append(row)
+
+        def blockcat(getter):
+            return jnp.concatenate(
+                [jnp.concatenate([getter(b) for b in row], axis=1)
+                 for row in blocks],
+                axis=0,
+            )
+
+        attrs_g = {
+            name: blockcat(lambda b, n=name: b.attrs[n])
+            for name in blocks[0][0].attrs
+        }
+        soa_g = AgentSoA(attrs=attrs_g, valid=blockcat(lambda b: b.valid))
+
+        refs0 = init_refs(geom, blocks[0][0])
+        refs_g = {
+            d: {f: jnp.broadcast_to(v[None, None], (mx, my) + v.shape)
+                for f, v in slab.items()}
+            for d, slab in refs0.items()
+        }
+
+        keys = jax.random.split(jax.random.PRNGKey(seed), mx * my)
+        keys = keys.reshape(mx, my, -1)
+
+        return SimState(
+            soa=soa_g,
+            refs=refs_g,
+            it=jnp.zeros((mx, my), jnp.int32),
+            key=keys,
+            gid_counter=jnp.asarray(counters),
+            dropped=jnp.zeros((mx, my), jnp.int32),
+            halo_bytes=jnp.zeros((mx, my), jnp.int32),
+        )
+
+    # ------------------------------------------------------------------
+    # One iteration (runs per device; comm abstracts the mesh)
+    # ------------------------------------------------------------------
+    def local_step(self, state: SimState, comm: Comm, full_halo: bool
+                   ) -> SimState:
+        geom = self.geom
+        beh = self.behavior
+        hx, hy = geom.local_shape
+        ix, iy = geom.interior
+        k = geom.cap
+        toroidal = geom.boundary == "toroidal"
+
+        cx, cy = comm.coords()
+        origin = geom.device_origin((cx, cy))
+        lrank = comm.linear_rank()
+
+        soa = state.soa
+        refs = {d: {f: v[0, 0] for f, v in slab.items()}
+                for d, slab in state.refs.items()}
+        it = state.it[0, 0]
+        key = state.key[0, 0]
+        gidc = state.gid_counter[0, 0]
+        dropped = state.dropped[0, 0]
+
+        # 1. Aura update (rebuilt from scratch each iteration, §2.2.1).
+        soa = clear_ring(soa)
+        soa, refs, hbytes = halo_exchange(
+            geom, soa, comm, refs, self.delta_cfg, full_halo
+        )
+
+        # 2. Local interaction.
+        acc = pair_accumulate(
+            geom, soa, beh.pair_fn, beh.pair_attrs, beh.radius, beh.params
+        )
+
+        # 3. Pointwise update on interior agents.
+        int_attrs = {n: a[1:hx - 1, 1:hy - 1] for n, a in soa.attrs.items()}
+        int_valid = soa.valid[1:hx - 1, 1:hy - 1]
+        step_key = jax.random.fold_in(jax.random.fold_in(key, it), lrank)
+        new_attrs, alive, spawn, child_attrs = beh.update_fn(
+            int_attrs, int_valid, acc, step_key, beh.params, self.dt
+        )
+        new_valid = int_valid & alive
+
+        # Boundary condition on positions.
+        lxy = jnp.asarray(geom.domain_size, jnp.float32)
+        if geom.boundary == "closed":
+            eps = jnp.float32(1e-4) * geom.cell_size
+            new_attrs[POS] = jnp.clip(new_attrs[POS], eps, lxy - eps)
+
+        # 4. Flatten interior (+children) for re-binning.
+        n_int = ix * iy * k
+        flat = {n: a.reshape((n_int,) + a.shape[3:])
+                for n, a in new_attrs.items()}
+        fvalid = new_valid.reshape((n_int,))
+
+        if beh.can_spawn:
+            sflat = spawn.reshape((n_int,)) & fvalid
+            n_spawn = jnp.sum(sflat.astype(jnp.int32))
+            child = {n: a.reshape((n_int,) + a.shape[3:])
+                     for n, a in child_attrs.items()}
+            order = jnp.cumsum(sflat.astype(jnp.int32)) - 1
+            child[GID_RANK] = jnp.full((n_int,), lrank, jnp.int32)
+            child[GID_COUNT] = gidc + order
+            gidc = gidc + n_spawn
+            flat = {n: jnp.concatenate([flat[n], child[n]]) for n in flat}
+            fvalid = jnp.concatenate([fvalid, sflat])
+
+        soa2, d1 = bin_agents(geom, flat, fvalid, origin)
+        dropped = dropped + d1
+
+        # 5. Agent migration: dimension-ordered ring exchange (x then y).
+        def wrap_pos(slab: Slab) -> Slab:
+            if not toroidal:
+                return slab
+            out = dict(slab)
+            out[POS] = jnp.mod(slab[POS], lxy)
+            return out
+
+        soa3, d2 = self._migrate(soa2, comm, origin, toroidal, lxy)
+        dropped = dropped + d2
+
+        # 6. Repack per-device state.
+        mxmy = state.it.shape
+        new_refs = {
+            d: {f: jnp.broadcast_to(v[None, None], mxmy + v.shape)
+                for f, v in slab.items()}
+            for d, slab in refs.items()
+        }
+        return SimState(
+            soa=soa3,
+            refs=new_refs,
+            it=jnp.broadcast_to((it + 1)[None, None], mxmy),
+            key=state.key,
+            gid_counter=jnp.broadcast_to(gidc[None, None], mxmy),
+            dropped=jnp.broadcast_to(dropped[None, None], mxmy),
+            halo_bytes=jnp.broadcast_to(hbytes[None, None], mxmy),
+        )
+
+    def _migrate(self, soa: AgentSoA, comm: Comm, origin: Array,
+                 toroidal: bool, lxy: Array) -> Tuple[AgentSoA, Array]:
+        """Dimension-ordered emigrant routing: x faces, re-bin, y faces."""
+        geom = self.geom
+        hx, hy = geom.local_shape
+        dropped = jnp.int32(0)
+
+        def wrap_pos(slab: Slab) -> Slab:
+            if not toroidal:
+                return slab
+            out = dict(slab)
+            out[POS] = jnp.mod(slab[POS], lxy)
+            return out
+
+        def fl(slab: Slab):
+            slab = dict(slab)
+            v = slab.pop("valid")
+            return ({n: a.reshape((-1,) + a.shape[2:])
+                     for n, a in slab.items()},
+                    v.reshape((-1,)))
+
+        cur = soa
+        for axis in (0, 1):
+            last = (hx - 1) if axis == 0 else (hy - 1)
+            out_m = wrap_pos(take_slab(cur, axis, 0))
+            out_p = wrap_pos(take_slab(cur, axis, last))
+            recv_p = comm.shift(out_p, axis, +1)  # from -axis neighbor
+            recv_m = comm.shift(out_m, axis, -1)  # from +axis neighbor
+            # Drop my face-ring agents (they now live on the neighbor); keep
+            # the orthogonal ring for the next phase.
+            v = cur.valid
+            if axis == 0:
+                v = v.at[0].set(False).at[hx - 1].set(False)
+            else:
+                v = v.at[:, 0].set(False).at[:, hy - 1].set(False)
+            cur = cur.replace(valid=v)
+            base_attrs, base_valid = flat_view(cur)
+            a1, v1 = fl(recv_p)
+            a2, v2 = fl(recv_m)
+            cat = {n: jnp.concatenate([base_attrs[n], a1[n], a2[n]])
+                   for n in base_attrs}
+            catv = jnp.concatenate([base_valid, v1, v2])
+            cur, d = bin_agents(geom, cat, catv, origin)
+            dropped = dropped + d
+        return cur, dropped
+
+    # ------------------------------------------------------------------
+    # Compiled step factories
+    # ------------------------------------------------------------------
+    def make_local_step(self):
+        comm = LocalComm(toroidal=self.geom.boundary == "toroidal")
+
+        @partial(jax.jit, static_argnames=("full_halo",))
+        def step(state: SimState, full_halo: bool = True) -> SimState:
+            return self.local_step(state, comm, full_halo)
+
+        return step
+
+    def make_sharded_step(self, mesh, axis_names: Tuple[str, str] = ("sx", "sy")):
+        from jax.sharding import PartitionSpec as P
+
+        comm = ShardComm(
+            axis_names=axis_names,
+            mesh_shape=self.geom.mesh_shape,
+            toroidal=self.geom.boundary == "toroidal",
+        )
+        spec = P(*axis_names)
+
+        def body(state: SimState, full_halo: bool) -> SimState:
+            return self.local_step(state, comm, full_halo)
+
+        def make(full_halo: bool):
+            f = partial(body, full_halo=full_halo)
+            return jax.jit(
+                jax.shard_map(
+                    f, mesh=mesh, in_specs=spec, out_specs=spec,
+                    check_vma=False,
+                )
+            )
+
+        step_full = make(True)
+        step_delta = make(False)
+
+        def step(state: SimState, full_halo: bool = True) -> SimState:
+            return step_full(state) if full_halo else step_delta(state)
+
+        return step
+
+    def run(self, state: SimState, n_steps: int, step_fn=None) -> SimState:
+        """Convenience driver honoring the delta refresh schedule."""
+        if step_fn is None:
+            step_fn = self.make_local_step()
+        r = max(int(self.delta_cfg.refresh_interval), 1)
+        for i in range(n_steps):
+            full = (not self.delta_cfg.enabled) or (i % r == 0)
+            state = step_fn(state, full_halo=full)
+        return state
+
+
+def total_agents(state: SimState) -> int:
+    return int(jnp.sum(state.soa.valid))

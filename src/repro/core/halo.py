@@ -1,0 +1,237 @@
+"""Aura (halo) exchange and spatial communication primitives.
+
+The paper exchanges boundary-region agents between neighboring MPI ranks every
+iteration with non-blocking point-to-point sends (§2.1, §2.4.3).  The TPU
+analogue is ``jax.lax.ppermute`` along the axes of a spatial device mesh: a
+neighbor-only collective that XLA schedules asynchronously and overlaps with
+compute (the paper's speculative receives correspond to XLA's async
+collective start/done scheduling).
+
+Exchange is dimension-ordered: x-axis slabs first, then y-axis slabs that
+include the freshly-filled x-ring cells, which propagates corner (diagonal)
+neighbors in two hops — the standard halo trick, and the same reason the
+paper's agent migration needs no diagonal sends.
+
+All slabs are fixed-shape SoA slices (see agent_soa.py): the "serialization"
+of a slab is the identity function.  Optional delta encoding of slabs is
+provided by core.delta and threaded through here.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agent_soa import AgentSoA
+from repro.core.delta import (
+    DeltaConfig,
+    Slab,
+    decode_delta,
+    decode_full,
+    encode_delta,
+    encode_full,
+    payload_bytes,
+)
+from repro.core.grid import GridGeom
+
+Array = jax.Array
+
+
+class Comm:
+    """Spatial communication abstraction over a (sx, sy) device mesh."""
+
+    def shift(self, tree, axis: int, direction: int):
+        """Move data one step along mesh axis; devices with no source get zeros
+        (closed boundary) or wrap (toroidal)."""
+        raise NotImplementedError
+
+    def coords(self) -> Tuple[Array, Array]:
+        raise NotImplementedError
+
+    def linear_rank(self) -> Array:
+        raise NotImplementedError
+
+    def sum_over_all_ranks(self, x):
+        """Paper §3.4 ``SumOverAllRanks`` analogue."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardComm(Comm):
+    """Runs inside shard_map over mesh axes ``axis_names`` of shape
+    ``mesh_shape``."""
+
+    axis_names: Tuple[str, str]
+    mesh_shape: Tuple[int, int]
+    toroidal: bool
+
+    def _perm(self, size: int, direction: int):
+        if direction == +1:
+            perm = [(i, i + 1) for i in range(size - 1)]
+            if self.toroidal:
+                perm.append((size - 1, 0))
+        else:
+            perm = [(i + 1, i) for i in range(size - 1)]
+            if self.toroidal:
+                perm.append((0, size - 1))
+        return perm
+
+    def shift(self, tree, axis: int, direction: int):
+        size = self.mesh_shape[axis]
+        name = self.axis_names[axis]
+        if size == 1:
+            if self.toroidal:
+                return tree
+            return jax.tree_util.tree_map(jnp.zeros_like, tree)
+        perm = self._perm(size, direction)
+        return jax.tree_util.tree_map(
+            lambda x: jax.lax.ppermute(x, name, perm), tree
+        )
+
+    def coords(self) -> Tuple[Array, Array]:
+        return (
+            jax.lax.axis_index(self.axis_names[0]),
+            jax.lax.axis_index(self.axis_names[1]),
+        )
+
+    def linear_rank(self) -> Array:
+        cx, cy = self.coords()
+        return cx * self.mesh_shape[1] + cy
+
+    def sum_over_all_ranks(self, x):
+        return jax.lax.psum(jax.lax.psum(x, self.axis_names[0]),
+                            self.axis_names[1])
+
+
+@dataclasses.dataclass(frozen=True)
+class LocalComm(Comm):
+    """Single-device oracle: 1x1 mesh."""
+
+    toroidal: bool
+
+    def shift(self, tree, axis: int, direction: int):
+        if self.toroidal:
+            return tree
+        return jax.tree_util.tree_map(jnp.zeros_like, tree)
+
+    def coords(self) -> Tuple[Array, Array]:
+        z = jnp.int32(0)
+        return z, z
+
+    def linear_rank(self) -> Array:
+        return jnp.int32(0)
+
+    def sum_over_all_ranks(self, x):
+        return x
+
+
+# ---------------------------------------------------------------------------
+# Slab extraction / insertion
+# ---------------------------------------------------------------------------
+
+def take_slab(soa: AgentSoA, axis: int, index: int) -> Slab:
+    """Extract one cell-row/column (incl. valid mask) as an exchange slab."""
+    if axis == 0:
+        slab = {name: a[index] for name, a in soa.attrs.items()}
+        slab["valid"] = soa.valid[index]
+    else:
+        slab = {name: a[:, index] for name, a in soa.attrs.items()}
+        slab["valid"] = soa.valid[:, index]
+    return slab
+
+
+def put_slab(soa: AgentSoA, axis: int, index: int, slab: Slab) -> AgentSoA:
+    attrs = dict(soa.attrs)
+    if axis == 0:
+        for name in attrs:
+            attrs[name] = attrs[name].at[index].set(slab[name])
+        valid = soa.valid.at[index].set(slab["valid"])
+    else:
+        for name in attrs:
+            attrs[name] = attrs[name].at[:, index].set(slab[name])
+        valid = soa.valid.at[:, index].set(slab["valid"])
+    return AgentSoA(attrs=attrs, valid=valid)
+
+
+def clear_slab_at(soa: AgentSoA, axis: int, index: int) -> AgentSoA:
+    if axis == 0:
+        valid = soa.valid.at[index].set(False)
+    else:
+        valid = soa.valid.at[:, index].set(False)
+    return soa.replace(valid=valid)
+
+
+# Directed edges for delta references: (axis, direction) keyed by name.
+DIRS = {"xm": (0, -1), "xp": (0, +1), "ym": (1, -1), "yp": (1, +1)}
+
+
+def _codec_send(slab, ref, cfg: DeltaConfig, full: bool):
+    if not cfg.enabled or full:
+        return encode_full(slab)
+    return encode_delta(slab, ref, cfg)
+
+
+def _codec_recv(payload, ref, cfg: DeltaConfig, full: bool):
+    if not cfg.enabled or full:
+        return decode_full(payload)
+    return decode_delta(payload, ref, cfg)
+
+
+def halo_exchange(
+    geom: GridGeom,
+    soa: AgentSoA,
+    comm: Comm,
+    refs: Dict[str, Slab],
+    cfg: DeltaConfig,
+    full: bool,
+) -> Tuple[AgentSoA, Dict[str, Slab], Array]:
+    """Rebuild the aura ring from neighbor devices' boundary cells.
+
+    Returns (soa with ring filled, updated delta references, wire bytes).
+
+    ``refs`` carries, for each directed edge d in DIRS, ``d + "_out"`` (what I
+    last sent that way, receiver-reconstructed) and ``d + "_in"`` (what I last
+    received from that way).  Closed-loop invariant: my ``xp_out`` equals my
+    +x neighbor's ``xm_in``.
+    """
+    hx, hy = geom.local_shape
+    new_refs = dict(refs)
+    nbytes = 0
+
+    def _exchange(soa, axis, src_index, dst_index, direction, out_key, in_key):
+        nonlocal nbytes, new_refs
+        slab = take_slab(soa, axis, src_index)
+        payload, ref_out = _codec_send(slab, new_refs[out_key], cfg, full)
+        new_refs[out_key] = ref_out
+        nbytes_local = payload_bytes(payload)
+        recv = comm.shift(payload, axis, direction)
+        recon, ref_in = _codec_recv(recv, new_refs[in_key], cfg, full)
+        new_refs[in_key] = ref_in
+        return put_slab(soa, axis, dst_index, recon), nbytes_local
+
+    # x axis: my east boundary -> +x neighbor's west ring, and vice versa.
+    soa, b = _exchange(soa, 0, hx - 2, 0, +1, "xp_out", "xm_in")
+    nbytes += b
+    soa, b = _exchange(soa, 0, 1, hx - 1, -1, "xm_out", "xp_in")
+    nbytes += b
+    # y axis, full rows including x-ring cells -> corners propagate.
+    soa, b = _exchange(soa, 1, hy - 2, 0, +1, "yp_out", "ym_in")
+    nbytes += b
+    soa, b = _exchange(soa, 1, 1, hy - 1, -1, "ym_out", "yp_in")
+    nbytes += b
+    return soa, new_refs, jnp.int32(nbytes)
+
+
+def init_refs(geom: GridGeom, soa: AgentSoA) -> Dict[str, Slab]:
+    """Zero-valued reference slabs for all eight directed edges."""
+    hx, hy = geom.local_shape
+    refs: Dict[str, Slab] = {}
+    for d, (axis, _) in DIRS.items():
+        proto = take_slab(soa, axis, 0 if axis == 0 else 0)
+        zeros = {k: jnp.zeros_like(v) for k, v in proto.items()}
+        refs[d + "_out"] = dict(zeros)
+        refs[d + "_in"] = dict(zeros)
+    return refs

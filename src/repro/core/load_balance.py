@@ -1,0 +1,157 @@
+"""Load balancing (paper §2.4.5): global RCB and diffusive planners.
+
+TPU adaptation (DESIGN.md §2): XLA's static shapes make per-iteration dynamic
+ownership an anti-pattern, so load balancing is applied at *re-shard
+boundaries*: the planners run on the host over the (tiny) per-box occupancy
+histogram, emit a new ownership/mesh plan, and the engine re-initializes from
+the flattened agent state (the checkpoint path doubles as the mass-migration
+path — the paper notes global RCB "might lead to a new partitioning that
+differs substantially ... causing mass migrations" (§2.4.5); here that cost
+is paid exactly once per re-shard and is also what makes the engine
+**elastic**: the same path restores a checkpoint onto a different device
+count after a node failure).
+
+Two planners, matching the paper:
+
+* ``plan_rcb``     — recursive coordinate bisection over the weighted
+                     occupancy histogram (Zoltan2-RCB analogue).
+* ``plan_diffusive`` — neighboring partitions exchange boundary box columns;
+                     partitions slower than the local average cede boxes to
+                     faster neighbors.
+
+Both return ownership maps (box -> device) plus an imbalance metric; tests
+assert the imbalance strictly improves on skewed densities.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import numpy as np
+
+
+def imbalance(loads: np.ndarray) -> float:
+    """max/mean - 1; 0 is perfect balance."""
+    m = float(np.mean(loads))
+    if m <= 0:
+        return 0.0
+    return float(np.max(loads)) / m - 1.0
+
+
+def device_loads(ownership: np.ndarray, weights: np.ndarray,
+                 n_devices: int) -> np.ndarray:
+    loads = np.zeros((n_devices,), dtype=np.float64)
+    np.add.at(loads, ownership.ravel(), weights.ravel())
+    return loads
+
+
+# ---------------------------------------------------------------------------
+# Global: recursive coordinate bisection (RCB)
+# ---------------------------------------------------------------------------
+
+def plan_rcb(weights: np.ndarray, n_devices: int) -> np.ndarray:
+    """Partition a 2D weight histogram into ``n_devices`` contiguous
+    rectangles by recursive coordinate bisection.
+
+    Args:
+      weights: (BX, BY) per-partitioning-box weight (agent count, optionally
+        scaled by last-iteration runtime, as in the paper).
+      n_devices: number of devices; must be a power of two.
+
+    Returns:
+      ownership: (BX, BY) int32 box -> device map.
+    """
+    if n_devices & (n_devices - 1):
+        raise ValueError("RCB requires a power-of-two device count")
+    bx, by = weights.shape
+    ownership = np.zeros((bx, by), dtype=np.int32)
+
+    def split(x0, x1, y0, y1, dev0, ndev):
+        if ndev == 1:
+            ownership[x0:x1, y0:y1] = dev0
+            return
+        w = weights[x0:x1, y0:y1]
+        # Bisect the longer axis at the weighted median.
+        if (x1 - x0) >= (y1 - y0):
+            prof = w.sum(axis=1)
+            axis_len = x1 - x0
+        else:
+            prof = w.sum(axis=0)
+            axis_len = y1 - y0
+        half = prof.sum() / 2.0
+        cut = int(np.searchsorted(np.cumsum(prof), half)) + 1
+        cut = max(1, min(axis_len - 1, cut))
+        if (x1 - x0) >= (y1 - y0):
+            split(x0, x0 + cut, y0, y1, dev0, ndev // 2)
+            split(x0 + cut, x1, y0, y1, dev0 + ndev // 2, ndev // 2)
+        else:
+            split(x0, x1, y0, y0 + cut, dev0, ndev // 2)
+            split(x0, x1, y0 + cut, y1, dev0 + ndev // 2, ndev // 2)
+
+    split(0, bx, 0, by, 0, n_devices)
+    return ownership
+
+
+# ---------------------------------------------------------------------------
+# Diffusive: neighbor column exchange
+# ---------------------------------------------------------------------------
+
+def plan_diffusive(
+    widths: np.ndarray, col_weights: np.ndarray, runtimes: np.ndarray
+) -> np.ndarray:
+    """One diffusive step over a 1D chain of partitions owning contiguous
+    box-column ranges (paper: "ranks whose runtime exceeds the local average
+    send boxes to neighbors that were faster").
+
+    Args:
+      widths: (D,) number of box columns owned by each device (sum = BX).
+      col_weights: (BX,) weight per box column.
+      runtimes: (D,) last-iteration runtime per device.
+
+    Returns:
+      new widths (D,), each >= 1, sum preserved.
+    """
+    d = len(widths)
+    widths = widths.astype(np.int64).copy()
+    for i in range(d - 1):
+        pair_avg = (runtimes[i] + runtimes[i + 1]) / 2.0
+        if runtimes[i] > pair_avg and widths[i] > 1:
+            widths[i] -= 1
+            widths[i + 1] += 1
+        elif runtimes[i + 1] > pair_avg and widths[i + 1] > 1:
+            widths[i + 1] -= 1
+            widths[i] += 1
+    return widths
+
+
+def widths_to_ownership(widths: np.ndarray) -> np.ndarray:
+    """(D,) column widths -> (BX,) column -> device map."""
+    out = np.zeros((int(np.sum(widths)),), dtype=np.int32)
+    x = 0
+    for dev, w in enumerate(widths):
+        out[x:x + int(w)] = dev
+        x += int(w)
+    return out
+
+
+def choose_mesh_shape(weights: np.ndarray, n_devices: int) -> Tuple[int, int]:
+    """Pick the (mx, my) factorization of ``n_devices`` minimizing RCB-free
+    equal-split imbalance over the density histogram — used by the elastic
+    re-shard path when the device count changes."""
+    best = None
+    m = 1
+    while m <= n_devices:
+        if n_devices % m == 0:
+            mx, my = m, n_devices // m
+            bx, by = weights.shape
+            if bx % mx == 0 and by % my == 0:
+                blocks = weights.reshape(mx, bx // mx, my, by // my)
+                loads = blocks.sum(axis=(1, 3)).ravel()
+                score = imbalance(loads)
+                if best is None or score < best[0]:
+                    best = (score, (mx, my))
+        m *= 2
+    if best is None:
+        raise ValueError("no valid mesh factorization divides the histogram")
+    return best[1]

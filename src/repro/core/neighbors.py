@@ -1,0 +1,110 @@
+"""Neighbor iteration over the uniform NSG (pure-jnp reference path).
+
+For each interior cell, gathers the 3x3 cell neighborhood into a (9*K,) slot
+axis and applies a broadcastable pair kernel between the cell's K agents and
+the 9K candidates, masking invalid slots, self-pairs (by global ID), and
+pairs beyond the interaction radius.  This is the oracle for the Pallas
+``neighbor_interaction`` kernel in repro.kernels.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.agent_soa import AgentSoA, GID_COUNT, GID_RANK, POS
+from repro.core.grid import GridGeom
+
+Array = jax.Array
+
+OFFSETS = [(-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 0), (0, 1),
+           (1, -1), (1, 0), (1, 1)]
+
+# pair_fn(attrs_i, attrs_j, disp, dist2, params) -> dict of contributions,
+# each broadcastable over the pair axes (..., K, 9K) with trailing dims.
+PairFn = Callable[[Dict[str, Array], Dict[str, Array], Array, Array, dict],
+                  Dict[str, Array]]
+
+
+def gather_neighborhood(geom: GridGeom, soa: AgentSoA, names: Tuple[str, ...]):
+    """Stack the 9-cell neighborhood of every interior cell.
+
+    Returns (self_attrs, nbr_attrs, self_valid, nbr_valid) where self arrays
+    have shape (ix, iy, K, ...) and nbr arrays (ix, iy, 9K, ...).
+    """
+    hx, hy = geom.local_shape
+    ix, iy = geom.interior
+    k = geom.cap
+    need = set(names) | {POS, GID_RANK, GID_COUNT}
+
+    self_attrs = {n: soa.attrs[n][1:hx - 1, 1:hy - 1] for n in need}
+    self_valid = soa.valid[1:hx - 1, 1:hy - 1]
+
+    nbr_attrs: Dict[str, Array] = {}
+    for n in need:
+        a = soa.attrs[n]
+        slabs = [a[1 + dx:hx - 1 + dx, 1 + dy:hy - 1 + dy] for dx, dy in OFFSETS]
+        stacked = jnp.stack(slabs, axis=2)  # (ix, iy, 9, K, ...)
+        nbr_attrs[n] = stacked.reshape((ix, iy, 9 * k) + a.shape[3:])
+    v = soa.valid
+    slabs = [v[1 + dx:hx - 1 + dx, 1 + dy:hy - 1 + dy] for dx, dy in OFFSETS]
+    nbr_valid = jnp.stack(slabs, axis=2).reshape((ix, iy, 9 * k))
+    return self_attrs, nbr_attrs, self_valid, nbr_valid
+
+
+def min_image(disp: Array, geom: GridGeom) -> Array:
+    if geom.boundary != "toroidal":
+        return disp
+    lx, ly = geom.domain_size
+    box = jnp.asarray([lx, ly], dtype=disp.dtype)
+    return disp - box * jnp.round(disp / box)
+
+
+def pair_accumulate(
+    geom: GridGeom,
+    soa: AgentSoA,
+    pair_fn: PairFn,
+    pair_attrs: Tuple[str, ...],
+    radius: float,
+    params: dict,
+) -> Dict[str, Array]:
+    """Sum pair-kernel contributions over each interior agent's neighbors.
+
+    Returns a dict of accumulators with shape (ix, iy, K, *trailing).
+    """
+    self_a, nbr_a, self_v, nbr_v = gather_neighborhood(geom, soa, pair_attrs)
+
+    # Broadcast views: i -> (..., K, 1, t), j -> (..., 1, 9K, t)
+    def bi(a):
+        return a[:, :, :, None]
+
+    def bj(a):
+        return a[:, :, None, :]
+
+    attrs_i = {n: bi(a) for n, a in self_a.items()}
+    attrs_j = {n: bj(a) for n, a in nbr_a.items()}
+
+    disp = min_image(attrs_j[POS] - attrs_i[POS], geom)  # (ix,iy,K,9K,2)
+    dist2 = jnp.sum(disp * disp, axis=-1)
+
+    same = (attrs_i[GID_RANK][..., ] == attrs_j[GID_RANK]) & (
+        attrs_i[GID_COUNT] == attrs_j[GID_COUNT]
+    )
+    mask = (
+        bi(self_v)
+        & bj(nbr_v)
+        & ~same
+        & (dist2 <= jnp.float32(radius * radius))
+    )
+
+    contribs = pair_fn(attrs_i, attrs_j, disp, dist2, params)
+
+    out: Dict[str, Array] = {}
+    for name, c in contribs.items():
+        m = mask
+        while m.ndim < c.ndim:
+            m = m[..., None]
+        out[name] = jnp.sum(jnp.where(m, c, jnp.zeros_like(c)), axis=3)
+    return out

@@ -1,0 +1,57 @@
+"""Elastic scaling and straggler mitigation.
+
+Node failure / resize protocol (DESIGN.md §5):
+  1. AsyncCheckpointer keeps the newest K checkpoints on durable storage.
+  2. On failure, the launcher restarts with whatever device count survives;
+     ``elastic_restore`` rebuilds the mesh (largest (data, model)
+     factorization that divides the parameter shapes), re-derives all
+     NamedShardings against the new mesh, and places the checkpoint.
+  3. The deterministic data pipeline (batch = f(seed, step)) resumes from
+     the checkpointed step with zero data-loader state — this is also the
+     straggler story: any peer can recompute any shard's batch, so a slow
+     host can be dropped at a step boundary without coordination.
+
+For the ABM engine, re-partitioning uses the load-balance planners
+(core.load_balance) to pick the new spatial mesh from the occupancy
+histogram before re-initializing device state.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Optional, Tuple
+
+import jax
+
+from repro.distributed import checkpoint as ckpt_lib
+from repro.distributed.sharding import Rules
+from repro.launch.mesh import make_mesh
+
+
+def choose_lm_mesh(n_devices: int, model_parallel: int = 16
+                   ) -> Tuple[Tuple[int, int], Tuple[str, str]]:
+    """Largest (data, model) factorization for a (possibly degraded) device
+    count: keep model parallelism at ``model_parallel`` if it divides, else
+    fall back to the largest power-of-two divisor."""
+    mp = model_parallel
+    while mp > 1 and n_devices % mp:
+        mp //= 2
+    return (n_devices // mp, mp), ("data", "model")
+
+
+def elastic_restore(ckpt_dir: str, model, *, n_devices: Optional[int] = None,
+                    rules: Optional[Rules] = None, step: Optional[int] = None):
+    """Restore (params, opt_state-free) training state onto the current
+    device population.  Returns (step, params, mesh)."""
+    from repro.launch.specs import params_specs
+
+    n = n_devices if n_devices is not None else len(jax.devices())
+    shape, axes = choose_lm_mesh(n)
+    mesh = make_mesh(shape, axes)
+    abstract = params_specs(model, mesh, rules)
+    shardings = jax.tree_util.tree_map(
+        lambda a: a.sharding, abstract,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    step, params, extras = ckpt_lib.restore(
+        ckpt_dir, step=step, like=abstract, shardings=shardings)
+    return step, params, mesh, extras

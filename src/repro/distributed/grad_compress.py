@@ -1,0 +1,131 @@
+"""Delta-encoded gradient compression with error feedback — the paper's §2.3
+insight (iterative state changes gradually; transmit a narrow delta against a
+shared reference) applied beyond-paper to data-parallel training.
+
+Two layers:
+
+* ``DeltaEFCompressor`` — a grad_transform hook for make_train_step:
+  maintains per-leaf f32 references (the previous step's transmitted
+  gradient) and error-feedback residuals; emits
+  ``dequant(quant(grad + residual - ref))`` and folds the quantization error
+  into the next step's residual.  This is the closed-loop scheme of
+  core.delta applied to gradients; wire bytes drop 4x (int8) / 2x (int16)
+  versus f32 and the EF residual guarantees the *sum over steps* of
+  transmitted gradients converges to the sum of true gradients (standard
+  EF-SGD argument).
+
+* ``compressed_psum`` — the explicit-collective building block: inside
+  shard_map, quantize locally, psum the int32-accumulated int8 payload,
+  dequantize.  The lowered HLO's all-reduce operand is int8 — the 4x
+  collective-byte reduction is directly visible to the roofline parser.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class DeltaEFCompressor:
+    qdtype: Any = jnp.int8
+    refresh_interval: int = 16   # full-precision sync every R steps
+
+    def init(self, params) -> dict:
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "ref": jax.tree_util.tree_map(zeros, params),
+            "residual": jax.tree_util.tree_map(zeros, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def wire_bytes(self, params, full: bool) -> int:
+        import math
+
+        n = sum(math.prod(p.shape)
+                for p in jax.tree_util.tree_leaves(params))
+        itemsize = 4 if full else jnp.dtype(self.qdtype).itemsize
+        return n * itemsize
+
+    def __call__(self, grads, ctx: Optional[dict]) -> Tuple[Any, dict]:
+        assert ctx is not None, "pass ctx=compressor.init(params)"
+        qinfo = jnp.iinfo(self.qdtype)
+        qmax = jnp.float32(qinfo.max)
+        step = ctx["step"]
+        full = (step % self.refresh_interval) == 0
+
+        def one(g, ref, res):
+            g = g.astype(jnp.float32) + res
+            delta = g - ref
+
+            def q_path():
+                scale = jnp.maximum(jnp.max(jnp.abs(delta)), 1e-30) / qmax
+                q = jnp.clip(jnp.round(delta / scale), qinfo.min, qinfo.max)
+                recon = ref + q * scale
+                return recon
+
+            recon = jnp.where(full, g, q_path())
+            residual = g - recon        # error feedback
+            return recon, recon, residual
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_ref = treedef.flatten_up_to(ctx["ref"])
+        flat_res = treedef.flatten_up_to(ctx["residual"])
+        outs = [one(g, r, e) for g, r, e in zip(flat_g, flat_ref, flat_res)]
+        new_grads = treedef.unflatten([o[0] for o in outs])
+        new_ctx = {
+            "ref": treedef.unflatten([o[1] for o in outs]),
+            "residual": treedef.unflatten([o[2] for o in outs]),
+            "step": step + 1,
+        }
+        return new_grads, new_ctx
+
+
+def compressed_psum(x: Array, axis_name: str, axis_size: int,
+                    qdtype=jnp.int8) -> Array:
+    """int8-on-the-wire all-reduce (call inside shard_map).
+
+    Canonical two-phase compressed ring all-reduce (1-bit-Adam-style):
+      1. quantize the local vector per destination chunk; ``all_to_all`` the
+         int8 payload (each device becomes the reducer of its chunk),
+      2. dequantize + sum in f32, re-quantize the reduced chunk, and
+         ``all_gather`` the int8 result.
+    Wire bytes: ~2 * N * 1 B vs ~2 * N * 4 B for a ring f32 all-reduce — a
+    4x collective-byte reduction, with both wire ops visibly int8 in the
+    lowered HLO (asserted in tests).  Naive ``psum(int8.astype(int32))``
+    would put s32 on the wire and save nothing.
+    """
+    qinfo = jnp.iinfo(qdtype)
+    qmax = jnp.float32(qinfo.max)
+    n = axis_size
+    orig_shape = x.shape
+    flat = x.reshape(-1).astype(jnp.float32)
+    pad = (-flat.size) % n
+    if pad:
+        flat = jnp.concatenate([flat, jnp.zeros((pad,), jnp.float32)])
+    chunks = flat.reshape(n, -1)                       # (n, N/n)
+
+    # phase 1: per-chunk quantize + all_to_all (int8 wire)
+    s1 = jnp.maximum(jnp.max(jnp.abs(chunks), axis=1), 1e-30) / qmax  # (n,)
+    q1 = jnp.clip(jnp.round(chunks / s1[:, None]), qinfo.min, qinfo.max
+                  ).astype(qdtype)
+    rq = jax.lax.all_to_all(q1, axis_name, split_axis=0, concat_axis=0)
+    rs = jax.lax.all_to_all(s1.reshape(n, 1), axis_name, split_axis=0,
+                            concat_axis=0)             # (n, 1) peer scales
+    part = jnp.sum(rq.astype(jnp.float32) * rs, axis=0)  # reduced chunk
+
+    # phase 2: re-quantize + all_gather (int8 wire)
+    s2 = jnp.maximum(jnp.max(jnp.abs(part)), 1e-30) / qmax
+    q2 = jnp.clip(jnp.round(part / s2), qinfo.min, qinfo.max).astype(qdtype)
+    all_q = jax.lax.all_gather(q2, axis_name)          # (n, N/n) int8
+    all_s = jax.lax.all_gather(s2, axis_name)          # (n,)
+    out = (all_q.astype(jnp.float32) * all_s[:, None]).reshape(-1)
+    if pad:
+        out = out[:-pad]
+    return out.reshape(orig_shape)

@@ -1,0 +1,157 @@
+"""Logical-axis sharding rules with divisibility-aware fallback.
+
+Every parameter/activation dimension carries a logical name; rules map each
+logical name to an ordered list of mesh-axis candidates.  An axis candidate
+is accepted only if (a) it is not already used by another dim of the same
+array and (b) its size divides the dim — otherwise the next candidate is
+tried, falling back to replication.  This auto-degradation guarantees that
+every (arch x mesh) cell lowers and compiles; the roofline/hillclimb loop
+then improves the rules where degradation costs performance.
+"""
+
+from __future__ import annotations
+
+import math
+from typing import Dict, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> ordered candidate mesh axes (tuples = combined axes)
+Rules = Dict[str, Tuple[object, ...]]
+
+# Default rules. "fsdp" composes data (+pod): weights' embed dim is sharded
+# over the data axes, ZeRO-3 style; XLA inserts the all-gathers.
+DEFAULT_RULES: Rules = {
+    "batch": (("pod", "data"), "data"),
+    "seq": ("model",),            # sequence parallelism for long decode
+    "vocab": ("model",),
+    "embed": ("fsdp",),           # resolved to ("pod","data") or ("data",)
+    "heads": ("model",),
+    "kv_heads": ("model",),
+    "head_dim": (),
+    "mlp": ("model",),
+    "experts": ("model",),
+    "expert_mlp": (),
+    "layers": (),
+    "state": (),
+    "conv": (),
+    "lora": (),
+    "frontend": (),
+    "patches": (),
+    # activation dims
+    "seq_act": (),
+    "embed_act": (),
+    "vocab_act": ("model",),
+    "heads_act": ("model",),
+    "mlp_act": ("model",),
+    # attention fallback: when heads don't divide the model axis, shard the
+    # query sequence dim instead (sequence-parallel attention) so attention
+    # compute/memory never replicates over "model"
+    "qseq_act": ("model",),
+    "val_act": ("model",),
+    # MoE dispatch: experts over model (EP), capacity over data so the
+    # (E, C, D) dispatched-token tensor is fully sharded
+    "capacity": ("fsdp",),
+}
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if isinstance(axis, tuple):
+        return math.prod(mesh.shape[a] for a in axis)
+    return mesh.shape[axis]
+
+
+def _resolve(axis, mesh: Mesh):
+    """Map virtual axes to concrete mesh axes."""
+    if axis == "fsdp":
+        return ("pod", "data") if "pod" in mesh.shape else ("data",)
+    if isinstance(axis, tuple):
+        out = []
+        for a in axis:
+            if a in mesh.shape:
+                out.append(a)
+        return tuple(out) if out else None
+    return axis if axis in mesh.shape else None
+
+
+def spec_for(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Rules] = None,
+) -> P:
+    """Build a PartitionSpec for ``shape`` whose dims are named ``logical``."""
+    rules = {**DEFAULT_RULES, **(rules or {})}
+    used: set = set()
+    parts = []
+    for dim, name in zip(shape, logical):
+        chosen = None
+        if name is not None and name in rules:
+            for cand in rules[name]:
+                cand = _resolve(cand, mesh)
+                if cand is None:
+                    continue
+                axes = cand if isinstance(cand, tuple) else (cand,)
+                if any(a in used for a in axes):
+                    continue
+                size = math.prod(mesh.shape[a] for a in axes)
+                if size > 1 and dim % size == 0:
+                    chosen = cand
+                    used.update(axes)
+                    break
+        parts.append(chosen)
+    while parts and parts[-1] is None:
+        parts.pop()
+    return P(*parts)
+
+
+def sharding_for(shape, logical, mesh, rules=None) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(shape, logical, mesh, rules))
+
+
+def tree_specs(spec_tree, mesh: Mesh, rules: Optional[Rules] = None):
+    """Map a pytree of (shape, logical) ParamSpec leaves to PartitionSpecs."""
+    from repro.models.params import ParamSpec
+
+    def one(leaf):
+        if isinstance(leaf, ParamSpec):
+            return spec_for(leaf.shape, leaf.logical, mesh, rules)
+        raise TypeError(f"unexpected spec leaf {leaf!r}")
+
+    return jax.tree_util.tree_map(
+        one, spec_tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Activation sharding constraints (MaxText-style logical constraints)
+# ---------------------------------------------------------------------------
+
+import contextlib
+import threading
+
+_ACTIVE = threading.local()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh, rules: Optional[Rules] = None):
+    """While active, ``constrain`` pins intermediate activations to the mesh.
+    A no-op outside this context (CPU unit tests, single-device runs)."""
+    old = getattr(_ACTIVE, "v", None)
+    _ACTIVE.v = (mesh, rules)
+    try:
+        yield
+    finally:
+        _ACTIVE.v = old
+
+
+def constrain(x, logical: Sequence[Optional[str]]):
+    """Pin an activation's sharding by logical dim names (no-op when no
+    activation_sharding context is active)."""
+    active = getattr(_ACTIVE, "v", None)
+    if active is None:
+        return x
+    mesh, rules = active
+    spec = spec_for(x.shape, logical, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

@@ -1,0 +1,10 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+  flash_attention      — blocked attention (LM stack hot spot)
+  neighbor_interaction — cell-list pairwise force pass (ABM hot spot)
+  delta_codec          — delta encode/decode (paper §2.3)
+
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
+interpret=True on CPU, Mosaic on real TPU (ops.INTERPRET = False).
+EXAMPLE.md documents the pattern.
+"""

@@ -1,0 +1,61 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+``interpret`` defaults to True (CPU container; kernels execute via the
+Pallas interpreter).  On real TPU runtimes set
+``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False) and the
+same kernels compile to Mosaic.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import delta_codec, flash_attention, neighbor_interaction
+
+INTERPRET = True
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
+def flash_attention_bhsd(q, k, v, *, causal=True, bq=128, bk=128):
+    """q (B, H, Sq, hd); k/v (B, Hkv, Skv, hd).  GQA handled by repeating KV
+    head groups (documented VMEM trade-off vs. grouped kernel)."""
+    b, h, sq, hd = q.shape
+    hkv = k.shape[1]
+    if hkv != h:
+        rep = h // hkv
+        k = jnp.repeat(k, rep, axis=1)
+        v = jnp.repeat(v, rep, axis=1)
+    qf = q.reshape(b * h, sq, hd)
+    kf = k.reshape(b * h, k.shape[2], hd)
+    vf = v.reshape(b * h, v.shape[2], v.shape[3])
+    out = flash_attention.flash_attention_kernel(
+        qf, kf, vf, causal=causal, bq=bq, bk=bk, interpret=INTERPRET)
+    return out.reshape(b, h, sq, v.shape[3])
+
+
+@functools.partial(jax.jit, static_argnames=("radius", "repulsion",
+                                             "adhesion", "same_type_only"))
+def neighbor_force(pos_i, diam_i, type_i, valid_i, gid_i,
+                   pos_j, diam_j, type_j, valid_j, gid_j,
+                   *, radius, repulsion, adhesion, same_type_only=True):
+    return neighbor_interaction.neighbor_force_kernel(
+        pos_i, diam_i, type_i, valid_i, gid_i,
+        pos_j, diam_j, type_j, valid_j, gid_j,
+        radius=radius, repulsion=repulsion, adhesion=adhesion,
+        same_type_only=same_type_only, interpret=INTERPRET)
+
+
+@jax.jit
+def delta_encode(x, ref):
+    """(N, L) f32 slab -> (q int8, scale f32)."""
+    scale = jnp.maximum(jnp.max(jnp.abs(x - ref)), 1e-30) / 127.0
+    q = delta_codec.delta_encode_kernel(x, ref, scale, interpret=INTERPRET)
+    return q, scale
+
+
+@jax.jit
+def delta_decode(q, ref, scale):
+    return delta_codec.delta_decode_kernel(q, ref, scale, interpret=INTERPRET)

@@ -1,0 +1,60 @@
+"""Pure-jnp oracles for every Pallas kernel in this package."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(q, k, v, *, causal=True, scale=None):
+    """q (BH, Sq, hd), k (BH, Skv, hd), v (BH, Skv, hdv) -> (BH, Sq, hdv)."""
+    bh, sq, hd = q.shape
+    skv = k.shape[1]
+    scale = hd ** -0.5 if scale is None else scale
+    s = jnp.einsum("bqd,bkd->bqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    if causal:
+        mask = jnp.arange(sq)[:, None] >= jnp.arange(skv)[None, :]
+        s = jnp.where(mask[None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v.astype(jnp.float32)).astype(q.dtype)
+
+
+def neighbor_force_ref(pos_i, diam_i, type_i, valid_i,
+                       pos_j, diam_j, type_j, valid_j,
+                       gid_i, gid_j, *, radius, repulsion, adhesion,
+                       same_type_only=True):
+    """Per-cell pairwise mechanical force (the ABM hot spot).
+
+    i: (C, K, ...) own agents; j: (C, 9K, ...) neighborhood agents.
+    Returns force (C, K, 2).  Matches core.behaviors.soft_repulsion_adhesion
+    + core.neighbors masking semantics.
+    """
+    disp = pos_j[:, None, :, :] - pos_i[:, :, None, :]       # (C,K,9K,2)
+    dist2 = jnp.sum(disp * disp, axis=-1)
+    eps = jnp.float32(1e-6)
+    dist = jnp.sqrt(dist2 + eps)
+    unit = disp / dist[..., None]
+    r_sum = 0.5 * (diam_i[:, :, None] + diam_j[:, None, :])
+    overlap = r_sum - dist
+    rep = jnp.where(overlap > 0, repulsion * overlap, 0.0)
+    same = (type_i[:, :, None] == type_j[:, None, :]).astype(jnp.float32)
+    gate = same if same_type_only else jnp.ones_like(same)
+    adh = jnp.where(overlap <= 0, adhesion * gate, 0.0)
+    f = -(rep - adh)[..., None] * unit
+    mask = (valid_i[:, :, None] & valid_j[:, None, :]
+            & (gid_i[:, :, None] != gid_j[:, None, :])
+            & (dist2 <= radius * radius))
+    return jnp.sum(jnp.where(mask[..., None], f, 0.0), axis=2)
+
+
+def delta_encode_ref(x, ref, scale):
+    """int8 quantized delta: q = clip(round((x - ref)/scale))."""
+    q = jnp.clip(jnp.round((x - ref) / scale), -127, 127).astype(jnp.int8)
+    return q
+
+
+def delta_decode_ref(q, ref, scale):
+    return ref + q.astype(jnp.float32) * scale

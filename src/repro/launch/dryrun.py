@@ -1,0 +1,190 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture x input-shape) cell, lowers and compiles the
+train/prefill/decode step against the production mesh — 16x16 single-pod and
+2x16x16 multi-pod — with ShapeDtypeStruct inputs (no allocation), then
+records memory_analysis, cost_analysis, and the loop-aware HLO cost model
+(repro.roofline) into results/dryrun/<cell>.json.
+
+Usage:
+  python -m repro.launch.dryrun --arch olmo-1b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all [--mesh single|multi|both]
+  python -m repro.launch.dryrun --list
+"""
+
+import argparse
+import json
+import pathlib
+import sys
+import time
+import traceback
+
+import jax
+
+from repro.configs.base import get, names
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import SHAPES, cells, input_specs, skip_reason
+from repro.roofline import Roofline, analyze_hlo, model_flops_for_cell
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def build_fn(kind: str, model, accum_steps: int = 1, remat: str = "dots"):
+    if kind == "train":
+        from repro.training.optimizer import AdamW
+        from repro.training.steps import make_train_step
+
+        return make_train_step(model, AdamW(), accum_steps=accum_steps,
+                               remat=remat)
+    if kind == "prefill":
+        if model.cfg.family == "audio":
+            return lambda params, batch, cache: model.logits(
+                params, batch, remat=remat)
+        return lambda params, batch, cache: model.prefill(
+            params, batch, cache)
+    if kind == "decode":
+        from repro.training.steps import make_serve_decode_step
+
+        return make_serve_decode_step(model)
+    raise ValueError(kind)
+
+
+def run_cell(arch: str, shape: str, mesh_kind: str, accum_steps: int = 1,
+             remat: str = "dots", save: bool = True, tag: str = "baseline",
+             rules=None):
+    cfg = get(arch).full
+    reason = skip_reason(cfg, shape)
+    if reason is not None:
+        rec = {"arch": arch, "shape": shape, "mesh": mesh_kind,
+               "status": "skip", "reason": reason}
+        if save:
+            _save(rec, arch, shape, mesh_kind, tag)
+        print(f"SKIP  {arch} x {shape}: {reason}")
+        return rec
+
+    multi = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi)
+    chips = mesh.devices.size
+    from repro.launch.specs import rules_for
+
+    rules = rules_for(cfg, rules)
+    kind, model, args = input_specs(arch, shape, mesh, rules)
+    fn = build_fn(kind, model, accum_steps=accum_steps, remat=remat)
+
+    from repro.distributed.sharding import activation_sharding
+
+    t0 = time.time()
+    with mesh, activation_sharding(mesh, rules):
+        lowered = jax.jit(fn).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = {}
+    try:
+        ma = compiled.memory_analysis()
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "generated_code_size_in_bytes",
+                  "alias_size_in_bytes"):
+            mem[k] = getattr(ma, k, None)
+    except Exception as e:  # pragma: no cover
+        mem["error"] = str(e)
+
+    ca = {}
+    try:
+        raw = compiled.cost_analysis()
+        ca = {k: raw[k] for k in ("flops", "bytes accessed") if k in raw}
+    except Exception as e:  # pragma: no cover
+        ca["error"] = str(e)
+
+    txt = compiled.as_text()
+    cost = analyze_hlo(txt)
+    per_dev_bytes = None
+    if mem.get("argument_size_in_bytes") is not None:
+        per_dev_bytes = (mem.get("argument_size_in_bytes", 0)
+                         + (mem.get("temp_size_in_bytes") or 0))
+
+    rl = Roofline(
+        arch=arch, shape=shape, mesh=mesh_kind, chips=chips,
+        flops_per_device=cost.flops,
+        hbm_bytes_per_device=cost.hbm_bytes,
+        coll_bytes_per_device=cost.coll_bytes,
+        coll_by_kind=cost.coll_by_kind,
+        model_flops_global=model_flops_for_cell(arch, shape),
+        per_device_memory_bytes=per_dev_bytes,
+    )
+    rec = {
+        "status": "ok", "kind": kind, "tag": tag,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory_analysis": mem, "cost_analysis": ca,
+        "accum_steps": accum_steps, "remat": remat,
+        "hlo_bytes": len(txt),
+        **rl.row(),
+    }
+    if save:
+        _save(rec, arch, shape, mesh_kind, tag)
+    print(f"OK    {arch} x {shape} x {mesh_kind}: dominant={rl.dominant} "
+          f"t=({rl.t_compute:.3f},{rl.t_memory:.3f},{rl.t_collective:.3f})s "
+          f"frac={rl.roofline_fraction:.3f} compile={t_compile:.0f}s")
+    return rec
+
+
+def _save(rec, arch, shape, mesh_kind, tag):
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    p = RESULTS / f"{arch}__{shape}__{mesh_kind}__{tag}.json"
+    p.write_text(json.dumps(rec, indent=1, default=str))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--mesh", default="single",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--tag", default="baseline")
+    ap.add_argument("--skip-done", action="store_true")
+    args = ap.parse_args()
+
+    if args.list:
+        for arch, shape, reason in cells(include_skips=True):
+            state = f"SKIP({reason})" if reason else "run"
+            print(f"{arch:28s} {shape:12s} {state}")
+        return
+
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    todo = []
+    if args.all:
+        for arch, shape, reason in cells(include_skips=True):
+            for mk in meshes:
+                todo.append((arch, shape, mk))
+    else:
+        todo = [(args.arch, args.shape, mk) for mk in meshes]
+
+    failures = []
+    for arch, shape, mk in todo:
+        out = RESULTS / f"{arch}__{shape}__{mk}__{args.tag}.json"
+        if args.skip_done and out.exists():
+            print(f"DONE  {arch} x {shape} x {mk} (cached)")
+            continue
+        try:
+            run_cell(arch, shape, mk, accum_steps=args.accum,
+                     remat=args.remat, tag=args.tag)
+        except Exception as e:
+            failures.append((arch, shape, mk, repr(e)))
+            traceback.print_exc()
+            print(f"FAIL  {arch} x {shape} x {mk}: {e}")
+    if failures:
+        print(f"\n{len(failures)} FAILURES")
+        sys.exit(1)
+    print("\nALL CELLS OK")
+
+
+if __name__ == "__main__":
+    main()

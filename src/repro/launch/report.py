@@ -1,0 +1,51 @@
+"""Aggregate dry-run records into the EXPERIMENTS.md roofline table."""
+
+import json
+import pathlib
+import sys
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "results" / "dryrun"
+
+
+def load(tag="baseline"):
+    rows = []
+    for p in sorted(RESULTS.glob(f"*__{tag}.json")):
+        rows.append(json.loads(p.read_text()))
+    return rows
+
+
+def fmt_row(r):
+    if r.get("status") == "skip":
+        return None
+    mem = r.get("memory_analysis", {})
+    hbm_gb = ((mem.get("argument_size_in_bytes") or 0)
+              + (mem.get("temp_size_in_bytes") or 0)) / 1e9
+    return {
+        "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+        "kind": r.get("kind", "?"),
+        "tc": r["t_compute_s"], "tm": r["t_memory_s"],
+        "tx": r["t_collective_s"], "dom": r["dominant"],
+        "useful": r["useful_flops_ratio"], "frac": r["roofline_fraction"],
+        "mem_gb": hbm_gb, "compile_s": r.get("compile_s", 0),
+    }
+
+
+def main():
+    tag = sys.argv[1] if len(sys.argv) > 1 else "baseline"
+    rows = [fmt_row(r) for r in load(tag)]
+    rows = [r for r in rows if r]
+    print(f"| arch | shape | mesh | kind | t_comp(s) | t_mem(s) | t_coll(s) "
+          f"| dominant | 6ND/HLO | frac | mem(GB) |")
+    print("|" + "---|" * 11)
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        print(f"| {r['arch']} | {r['shape']} | {r['mesh']} | {r['kind']} "
+              f"| {r['tc']:.4f} | {r['tm']:.4f} | {r['tx']:.4f} "
+              f"| {r['dom']} | {r['useful']:.3f} | {r['frac']:.4f} "
+              f"| {r['mem_gb']:.1f} |")
+    # summary stats
+    n_skip = sum(1 for r in load(tag) if r.get("status") == "skip")
+    print(f"\n{len(rows)} compiled cells, {n_skip} recorded skips")
+
+
+if __name__ == "__main__":
+    main()

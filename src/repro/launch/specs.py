@@ -1,0 +1,250 @@
+"""Input shape sets and ShapeDtypeStruct stand-ins for every dry-run cell.
+
+Shapes (assigned to every LM arch):
+  train_4k     seq 4,096   global_batch 256   -> train_step
+  prefill_32k  seq 32,768  global_batch 32    -> prefill (encoder fwd for audio)
+  decode_32k   seq 32,768  global_batch 128   -> serve_step (1 new token, KV cache)
+  long_500k    seq 524,288 global_batch 1     -> serve_step; sub-quadratic archs only
+
+Skip rules (recorded per DESIGN.md §Shape-skips):
+  * decode shapes for encoder-only (audio) archs
+  * long_500k for pure full-attention archs
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig, get
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.sharding import spec_for
+from repro.models.model import Model, build_model
+from repro.models.params import abstract as abstract_params
+
+SHAPES: Dict[str, Dict[str, int]] = {
+    "train_4k": {"seq": 4096, "batch": 256, "kind": "train"},
+    "prefill_32k": {"seq": 32768, "batch": 32, "kind": "prefill"},
+    "decode_32k": {"seq": 32768, "batch": 128, "kind": "decode"},
+    "long_500k": {"seq": 524288, "batch": 1, "kind": "decode"},
+}
+
+
+def skip_reason(cfg: ArchConfig, shape_name: str) -> Optional[str]:
+    kind = SHAPES[shape_name]["kind"]
+    if cfg.family == "audio" and kind == "decode":
+        return "encoder-only arch has no autoregressive decode step"
+    if shape_name == "long_500k" and not cfg.sub_quadratic:
+        return ("pure full-attention arch: 512k context requires a "
+                "sub-quadratic mechanism the published arch lacks")
+    return None
+
+
+def cells(include_skips: bool = False):
+    """Every (arch, shape) pair; skipped pairs carry their reason."""
+    from repro.configs.base import names
+
+    out = []
+    for arch in names():
+        cfg = get(arch).full
+        for shape in SHAPES:
+            reason = skip_reason(cfg, shape)
+            if reason is None or include_skips:
+                out.append((arch, shape, reason))
+    return out
+
+
+def _sds(shape, dtype, mesh, logical, rules=None):
+    if mesh is None:
+        return jax.ShapeDtypeStruct(shape, dtype)
+    return jax.ShapeDtypeStruct(
+        shape, dtype,
+        sharding=jax.sharding.NamedSharding(
+            mesh, spec_for(shape, logical, mesh, rules)),
+    )
+
+
+def batch_specs(cfg: ArchConfig, shape_name: str, mesh, rules=None):
+    """Abstract training/prefill batch with shardings attached."""
+    s = SHAPES[shape_name]
+    seq, b = s["seq"], s["batch"]
+    i32, bf16 = jnp.int32, jnp.bfloat16
+    if cfg.family == "audio":
+        return {
+            "frames": _sds((b, seq, cfg.frontend_dim), bf16, mesh,
+                           ("batch", "seq_act", "frontend"), rules),
+            "labels": _sds((b, seq), i32, mesh, ("batch", "seq_act"), rules),
+        }
+    if cfg.family == "vlm":
+        st = seq - cfg.n_patches
+        return {
+            "tokens": _sds((b, st), i32, mesh, ("batch", "seq_act"), rules),
+            "patches": _sds((b, cfg.n_patches, cfg.frontend_dim), bf16, mesh,
+                            ("batch", "patches", "frontend"), rules),
+            "labels": _sds((b, st), i32, mesh, ("batch", "seq_act"), rules),
+        }
+    return {
+        "tokens": _sds((b, seq), i32, mesh, ("batch", "seq_act"), rules),
+        "labels": _sds((b, seq), i32, mesh, ("batch", "seq_act"), rules),
+    }
+
+
+def cache_specs(cfg: ArchConfig, batch: int, max_len: int, mesh, rules=None):
+    """Abstract KV/state cache with shardings."""
+    bf16, f32 = jnp.bfloat16, jnp.float32
+
+    def sds(shape, dtype, logical):
+        return _sds(shape, dtype, mesh, logical, rules)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.attention == "mla":
+            m = cfg.mla
+            return sds((cfg.n_layers, batch, max_len,
+                        m.kv_lora_rank + m.qk_rope_head_dim), bf16,
+                       ("layers", "batch", "seq", "lora"))
+        hd = cfg.hd
+        kv = ("layers", "batch", "kv_heads", "seq", "head_dim")
+        return (
+            sds((cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd), bf16, kv),
+            sds((cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd), bf16, kv),
+        )
+    if cfg.family == "ssm":
+        xc = cfg.xlstm
+        n_seg = cfg.n_layers // xc.slstm_every
+        di = int(cfg.d_model * xc.proj_factor)
+        h = cfg.n_heads
+        p = di // h
+        dc = xc.conv_kernel
+        d = cfg.d_model
+        lead = (n_seg, xc.slstm_every - 1)
+        ll = ("layers", "layers2")
+        ml = {
+            "c": sds(lead + (batch, h, p, p), f32,
+                     ll + ("batch", "heads", "head_dim", "mlp")),
+            "n": sds(lead + (batch, h, p), f32,
+                     ll + ("batch", "heads", "head_dim")),
+            "m": sds(lead + (batch, h), f32, ll + ("batch", "heads")),
+            "conv": sds(lead + (batch, dc - 1, di), bf16,
+                        ll + ("batch", "conv", "mlp")),
+        }
+        sl = {
+            "c": sds((n_seg, batch, d), f32, ("layers", "batch", "embed")),
+            "n": sds((n_seg, batch, d), f32, ("layers", "batch", "embed")),
+            "h": sds((n_seg, batch, d), f32, ("layers", "batch", "embed")),
+            "m": sds((n_seg, batch, d), f32, ("layers", "batch", "embed")),
+        }
+        from repro.models.xlstm import MLSTMState, SLSTMState
+
+        return {
+            "mlstm": MLSTMState(c=ml["c"], n=ml["n"], m=ml["m"],
+                                conv=ml["conv"]),
+            "slstm": SLSTMState(c=sl["c"], n=sl["n"], h=sl["h"], m=sl["m"]),
+        }
+    if cfg.family == "hybrid":
+        from repro.models.mamba2 import Mamba2State
+
+        k = cfg.shared_attn_every
+        n_full, rem = divmod(cfg.n_layers, k)
+        sc = cfg.ssm
+        di = sc.expand * cfg.d_model
+        h, p, n = sc.n_heads, sc.expand * cfg.d_model // sc.n_heads, sc.d_state
+        ll = ("layers", "layers2")
+
+        def mstate(lead, lnames):
+            return Mamba2State(
+                ssm=sds(lead + (batch, h, p, n), f32,
+                        lnames + ("batch", "heads", "head_dim", "state")),
+                conv=sds(lead + (batch, sc.d_conv - 1, di + 2 * n), bf16,
+                         lnames + ("batch", "conv", "mlp")),
+            )
+
+        hd = cfg.hd
+        kvl = ("layers", "batch", "kv_heads", "seq", "head_dim")
+        out = {
+            "mamba": mstate((n_full, k), ll),
+            "attn": (
+                sds((n_full, batch, cfg.n_kv_heads, max_len, hd), bf16, kvl),
+                sds((n_full, batch, cfg.n_kv_heads, max_len, hd), bf16, kvl),
+            ),
+        }
+        if rem:
+            out["mamba_tail"] = mstate((rem,), ("layers",))
+        return out
+    raise ValueError(cfg.family)
+
+
+def params_specs(model: Model, mesh, rules=None):
+    from repro.models.params import abstract_sharded
+
+    if mesh is None:
+        return abstract_params(model.spec)
+    return abstract_sharded(model.spec, mesh, rules)
+
+
+def opt_specs(params_abs, mesh=None):
+    """AdamW state mirrors the param tree (f32) + scalar step."""
+    from repro.training.optimizer import AdamWState
+
+    def f32_like(p):
+        return jax.ShapeDtypeStruct(p.shape, jnp.float32,
+                                    sharding=getattr(p, "sharding", None))
+
+    t = jax.tree_util.tree_map(f32_like, params_abs)
+    step = jax.ShapeDtypeStruct((), jnp.int32)
+    return AdamWState(step=step, master=t,
+                      m=jax.tree_util.tree_map(f32_like, params_abs),
+                      v=jax.tree_util.tree_map(f32_like, params_abs))
+
+
+# Per-family sharding-rule overrides (§Perf hc-xlstm-6): the xLSTM family
+# has no TP-friendly dimension — its block-diagonal projections and
+# sequential sLSTM recurrence turn every model-axis shard into per-step
+# collectives.  Pure data parallelism over ALL mesh axes (batch 256 = 1 seq
+# per chip) with FSDP weight sharding is strictly better: measured 56s ->
+# see EXPERIMENTS.md §Perf.
+# NOTE: a pure-DP profile for the ssm family (batch over all axes, no TP)
+# was tried and REFUTED — the batch/FSDP axis conflict made GSPMD replicate
+# the gate activations (t_mem 20s -> 81s); see EXPERIMENTS.md §Perf
+# hc-xlstm-6.
+FAMILY_RULES: Dict[str, Dict] = {}
+
+
+def rules_for(cfg: ArchConfig, rules=None):
+    fam = FAMILY_RULES.get(cfg.family, {})
+    return {**fam, **(rules or {})} if (fam or rules) else None
+
+
+def input_specs(arch: str, shape_name: str, mesh=None, rules=None):
+    """All abstract inputs for one dry-run cell.
+
+    Returns (kind, model, args) where args feed the lowered callable:
+      train   -> (params, opt_state, batch)
+      prefill -> (params, batch, cache)
+      decode  -> (params, cache, tokens, index)
+    """
+    cfg = get(arch).full
+    model = build_model(cfg)
+    s = SHAPES[shape_name]
+    kind = s["kind"]
+    rules = rules_for(cfg, rules)
+    params = params_specs(model, mesh, rules)
+
+    if kind == "train":
+        return kind, model, (params, opt_specs(params, mesh),
+                             batch_specs(cfg, shape_name, mesh, rules))
+    if kind == "prefill":
+        cache = None
+        if cfg.family != "audio":
+            cache = cache_specs(cfg, s["batch"], s["seq"], mesh, rules)
+        batch = batch_specs(cfg, shape_name, mesh, rules)
+        batch.pop("labels", None)
+        return kind, model, (params, batch, cache)
+    # decode
+    b = s["batch"]
+    cache = cache_specs(cfg, b, s["seq"], mesh, rules)
+    tokens = _sds((b, 1), jnp.int32, mesh, ("batch", None), rules)
+    index = jax.ShapeDtypeStruct((), jnp.int32)
+    return kind, model, (params, cache, tokens, index)

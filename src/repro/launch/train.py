@@ -1,0 +1,107 @@
+"""Production training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch olmo-1b --smoke \
+        --steps 50 --seq 128 --batch 8 --ckpt-dir /tmp/ckpt
+
+On a real TPU cluster the same entry point runs per host (jax.distributed
+initializes from the standard TPU environment); device placeholders are
+never forced here — only dryrun.py does that.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+
+from repro.configs.base import get
+from repro.data.pipeline import SyntheticLM
+from repro.distributed import checkpoint as ck
+from repro.distributed.elastic import choose_lm_mesh
+from repro.distributed.grad_compress import DeltaEFCompressor
+from repro.distributed.sharding import activation_sharding
+from repro.launch.mesh import make_mesh
+from repro.models import params as P
+from repro.models.model import build_model
+from repro.training.optimizer import AdamW, WSDSchedule
+from repro.training.steps import make_train_step
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="use the reduced config (CPU-sized)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--accum", type=int, default=1)
+    ap.add_argument("--remat", default="dots")
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=100)
+    ap.add_argument("--grad-compress", action="store_true",
+                    help="delta+error-feedback int8 gradient compression")
+    args = ap.parse_args()
+
+    spec = get(args.arch)
+    cfg = spec.smoke if args.smoke else spec.full
+    model = build_model(cfg)
+    opt = AdamW(schedule=WSDSchedule(
+        warmup_steps=max(args.steps // 10, 1),
+        stable_steps=max(args.steps * 8 // 10, 1),
+        decay_steps=max(args.steps // 10, 1)))
+
+    n_dev = len(jax.devices())
+    mesh = None
+    if n_dev > 1:
+        shape, axes = choose_lm_mesh(n_dev)
+        mesh = make_mesh(shape, axes)
+        print(f"mesh: {dict(zip(axes, shape))}")
+
+    compressor = DeltaEFCompressor() if args.grad_compress else None
+    step_fn = make_train_step(model, opt, accum_steps=args.accum,
+                              remat=args.remat,
+                              grad_transform=compressor)
+    pipe = SyntheticLM(cfg, seq_len=args.seq, global_batch=args.batch)
+
+    params = P.init(model.spec, jax.random.PRNGKey(0))
+    opt_state = opt.init(params)
+    grad_ctx = compressor.init(params) if compressor else None
+    start = 0
+    ckpt = ck.AsyncCheckpointer(args.ckpt_dir) if args.ckpt_dir else None
+    if ckpt and ck.latest_step(args.ckpt_dir) is not None:
+        start, restored, _ = ck.restore(
+            args.ckpt_dir, like={"params": params, "opt": opt_state})
+        params, opt_state = restored["params"], restored["opt"]
+        print(f"resumed from step {start}")
+
+    jit_step = jax.jit(step_fn, donate_argnums=(0, 1))
+    ctx = activation_sharding(mesh) if mesh is not None else None
+    t0 = time.time()
+    for i in range(start, args.steps):
+        batch = pipe.batch_for_step(i)
+        if ctx is not None:
+            with ctx:
+                out = jit_step(params, opt_state, batch, grad_ctx) \
+                    if compressor else jit_step(params, opt_state, batch)
+        else:
+            out = jit_step(params, opt_state, batch, grad_ctx) \
+                if compressor else jit_step(params, opt_state, batch)
+        if compressor:
+            params, opt_state, metrics, grad_ctx = out
+        else:
+            params, opt_state, metrics = out
+        if (i + 1) % 10 == 0:
+            tps = (args.batch * args.seq * (i + 1 - start)
+                   / (time.time() - t0))
+            print(f"step {i+1:5d}  loss {float(metrics['loss']):.4f}  "
+                  f"gnorm {float(metrics['grad_norm']):.3f}  tok/s {tps:.0f}")
+        if ckpt and (i + 1) % args.ckpt_every == 0:
+            ckpt.save(i + 1, {"params": params, "opt": opt_state})
+    if ckpt:
+        ckpt.wait()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,296 @@
+"""Attention variants: GQA (chunked-flash + decode) and MLA.
+
+Two execution paths share one math definition:
+
+* ``chunked`` — lax.scan over KV blocks with online softmax; memory-bounded,
+  lowers on every backend — this is the dry-run/default path, and on TPU it
+  compiles to the same blocked dataflow a hand-written kernel would use.
+* ``pallas``  — repro.kernels.flash_attention, the TPU kernel (validated
+  against the reference in interpret mode); selected via ``backend=``.
+
+Decode (single query token against a long, possibly sequence-sharded KV
+cache) uses a single-shot softmax so GSPMD can keep the cache sharded along
+sequence and insert the partial-softmax all-reduces automatically.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models.layers import rope
+from repro.models.params import ParamSpec
+
+# q: shard heads over "model" when divisible, else fall back to sharding the
+# query sequence (sequence-parallel attention).  k/v stay on their kv-head
+# sharding (or replicated) so the KV-block scan never slices across shards.
+Q_ACT = ("batch", "heads_act", "qseq_act", None)
+KV_ACT = ("batch", "kv_heads", None, None)
+
+Array = jax.Array
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Core scaled-dot-product with GQA head grouping
+# ---------------------------------------------------------------------------
+
+def _group_heads(q: Array, n_kv: int) -> Array:
+    """(B, Hq, S, hd) -> (B, Hkv, G, S, hd)."""
+    b, hq, s, hd = q.shape
+    return q.reshape(b, n_kv, hq // n_kv, s, hd)
+
+
+def sdpa_chunked(
+    q: Array,           # (B, Hq, Sq, hd)
+    k: Array,           # (B, Hkv, Skv, hd)
+    v: Array,           # (B, Hkv, Skv, hdv)
+    causal: bool,
+    q_offset: int = 0,
+    chunk: int = 512,
+    scale: Optional[float] = None,
+) -> Array:
+    """Online-softmax attention, scanning KV in blocks (flash-style)."""
+    b, hq, sq, hd = q.shape
+    _, hkv, skv, _ = k.shape
+    hdv = v.shape[-1]
+    g = hq // hkv
+    scale = scale if scale is not None else hd ** -0.5
+
+    chunk = min(chunk, skv)
+    n_chunks = skv // chunk
+    rem = skv - n_chunks * chunk
+    assert rem == 0, f"Skv={skv} not divisible by chunk={chunk}"
+
+    qg = _group_heads(q, hkv) * jnp.asarray(scale, q.dtype)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def body(carry, inputs):
+        m, l, acc = carry
+        kc, vc, start = inputs
+        s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kc).astype(jnp.float32)
+        if causal:
+            k_pos = start + jnp.arange(chunk)
+            mask = q_pos[:, None] >= k_pos[None, :]
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + jnp.sum(p, axis=-1)
+        acc_new = acc * corr[..., None] + jnp.einsum(
+            "bhgqk,bhkd->bhgqd", p.astype(v.dtype), vc
+        ).astype(jnp.float32)
+        return (m_new, l_new, acc_new), None
+
+    kc = k.reshape(b, hkv, n_chunks, chunk, hd).transpose(2, 0, 1, 3, 4)
+    vc = v.reshape(b, hkv, n_chunks, chunk, hdv).transpose(2, 0, 1, 3, 4)
+    starts = jnp.arange(n_chunks) * chunk
+
+    m0 = jnp.full((b, hkv, g, sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    a0 = jnp.zeros((b, hkv, g, sq, hdv), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), (kc, vc, starts))
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.reshape(b, hq, sq, hdv).astype(q.dtype)
+
+
+def sdpa_decode(
+    q: Array,           # (B, Hq, 1, hd)
+    k: Array,           # (B, Hkv, S, hd)
+    v: Array,           # (B, Hkv, S, hdv)
+    length_mask: Array, # (B, S) bool — valid cache positions
+    scale: Optional[float] = None,
+) -> Array:
+    """Single-shot decode attention; keeps a sequence-sharded cache sharded."""
+    b, hq, _, hd = q.shape
+    hkv = k.shape[1]
+    scale = scale if scale is not None else hd ** -0.5
+    qg = _group_heads(q, hkv) * jnp.asarray(scale, q.dtype)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k).astype(jnp.float32)
+    s = jnp.where(length_mask[:, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p.astype(v.dtype), v)
+    return out.reshape(b, hq, 1, v.shape[-1])
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def gqa_spec(cfg: ArchConfig):
+    d, hq, hkv, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    return {
+        "wq": ParamSpec((d, hq, hd), ("embed", "heads", "head_dim")),
+        "wk": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wv": ParamSpec((d, hkv, hd), ("embed", "kv_heads", "head_dim")),
+        "wo": ParamSpec((hq, hd, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def gqa_apply(
+    params,
+    cfg: ArchConfig,
+    x: Array,                     # (B, S, D)
+    positions: Array,             # (S,) or (B, S)
+    cache: Optional[Tuple[Array, Array]] = None,   # (k, v): (B, Hkv, T, hd)
+    cache_index: Optional[Array] = None,           # scalar int — write offset
+    length_mask: Optional[Array] = None,           # (B, T) for decode
+    backend: str = "chunked",
+    chunk: int = 512,
+):
+    b, s, d = x.shape
+    q = jnp.einsum("bsd,dhk->bhsk", x, params["wq"])
+    k = jnp.einsum("bsd,dhk->bhsk", x, params["wk"])
+    v = jnp.einsum("bsd,dhk->bhsk", x, params["wv"])
+    if cfg.pos == "rope":
+        q = rope(q, positions, cfg.rope_theta)
+        k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, Q_ACT)
+    k = constrain(k, KV_ACT)
+    v = constrain(v, KV_ACT)
+
+    new_cache = None
+    if cache is not None:
+        ck, cv = cache
+        ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                          (0, 0, cache_index, 0))
+        cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                          (0, 0, cache_index, 0))
+        new_cache = (ck, cv)
+        if s == 1:  # decode
+            out = sdpa_decode(q, ck, cv, length_mask)
+        else:       # prefill into cache
+            out = sdpa_chunked(q, k, v, cfg.causal, q_offset=0, chunk=chunk)
+    else:
+        if backend == "pallas":
+            from repro.kernels import ops as kernel_ops
+
+            out = kernel_ops.flash_attention_bhsd(q, k, v, causal=cfg.causal)
+        else:
+            out = sdpa_chunked(q, k, v, cfg.causal, chunk=chunk)
+    y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    return y, new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA — Multi-head Latent Attention (MiniCPM3 / DeepSeek-V2 style)
+# ---------------------------------------------------------------------------
+
+def mla_spec(cfg: ArchConfig):
+    d, h = cfg.d_model, cfg.n_heads
+    m = cfg.mla
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    return {
+        "wq_down": ParamSpec((d, m.q_lora_rank), ("embed", "lora")),
+        "wq_up": ParamSpec((m.q_lora_rank, h, qk_hd),
+                           ("lora", "heads", "head_dim")),
+        "wkv_down": ParamSpec((d, m.kv_lora_rank + m.qk_rope_head_dim),
+                              ("embed", "lora")),
+        "wk_up": ParamSpec((m.kv_lora_rank, h, m.qk_nope_head_dim),
+                           ("lora", "heads", "head_dim")),
+        "wv_up": ParamSpec((m.kv_lora_rank, h, m.v_head_dim),
+                           ("lora", "heads", "head_dim")),
+        "wo": ParamSpec((h, m.v_head_dim, d), ("heads", "head_dim", "embed")),
+    }
+
+
+def mla_apply(
+    params,
+    cfg: ArchConfig,
+    x: Array,
+    positions: Array,
+    cache: Optional[Array] = None,          # latent cache (B, T, r + rope_hd)
+    cache_index: Optional[Array] = None,
+    length_mask: Optional[Array] = None,
+    backend: str = "chunked",
+    chunk: int = 512,
+):
+    """MLA: the KV cache stores only the compressed latent (the paper-analogue
+    'small slowly-varying state'), up-projected per use."""
+    m = cfg.mla
+    b, s, d = x.shape
+    h = cfg.n_heads
+    r = m.kv_lora_rank
+
+    cq = jnp.einsum("bsd,dr->bsr", x, params["wq_down"])
+    q = jnp.einsum("bsr,rhk->bhsk", cq, params["wq_up"])
+    q_nope, q_rope = q[..., : m.qk_nope_head_dim], q[..., m.qk_nope_head_dim:]
+    q_rope = rope(q_rope, positions, cfg.rope_theta)
+
+    ckv = jnp.einsum("bsd,dr->bsr", x, params["wkv_down"])  # (B,S,r+rope)
+    latent, k_rope_flat = ckv[..., :r], ckv[..., r:]
+    k_rope = rope(k_rope_flat[:, None], positions, cfg.rope_theta)  # (B,1,S,rp)
+
+    new_cache = None
+    if cache is not None:
+        packed = jnp.concatenate(
+            [latent, k_rope[:, 0]], axis=-1
+        )  # (B, S, r+rope)
+        cache = jax.lax.dynamic_update_slice(
+            cache, packed.astype(cache.dtype), (0, cache_index, 0)
+        )
+        new_cache = cache
+        latent_all = cache[..., :r].astype(x.dtype)
+        k_rope_all = cache[:, None, :, r:].astype(x.dtype)
+    else:
+        latent_all, k_rope_all = latent, k_rope
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    if s == 1 and new_cache is not None:
+        # §Perf hc-mla-2: absorbed decode.  Fold wk_up into the query and
+        # wv_up into the output so attention runs directly against the
+        # compressed latent cache — K/V are never materialized (the naive
+        # path reconstructs (B, H, T, 160) per layer per token: ~3.3 GB of
+        # traffic per layer at 32k, measured).  This is the latent-space
+        # analogue of the paper's "use the received buffer directly".
+        t = latent_all.shape[1]
+        q_abs = jnp.einsum("bhsk,rhk->bhsr", q_nope, params["wk_up"])
+        s_nope = jnp.einsum("bhsr,btr->bhst", q_abs, latent_all)
+        s_rope = jnp.einsum("bhsk,btk->bhst", q_rope,
+                            cache[:, :, r:].astype(x.dtype))
+        logits_att = (s_nope + s_rope).astype(jnp.float32) * scale
+        lm = length_mask if length_mask is not None else jnp.ones(
+            (b, t), jnp.bool_)
+        logits_att = jnp.where(lm[:, None, None, :], logits_att, NEG_INF)
+        probs = jax.nn.softmax(logits_att, axis=-1).astype(x.dtype)
+        ctx = jnp.einsum("bhst,btr->bhsr", probs, latent_all)
+        out = jnp.einsum("bhsr,rhk->bhsk", ctx, params["wv_up"])
+        y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+        return y, new_cache
+
+    k_nope = jnp.einsum("btr,rhk->bhtk", latent_all, params["wk_up"])
+    vv = jnp.einsum("btr,rhk->bhtk", latent_all, params["wv_up"])
+    t = latent_all.shape[1]
+    k_full = jnp.concatenate(
+        [k_nope, jnp.broadcast_to(k_rope_all, (b, h, t, m.qk_rope_head_dim))],
+        axis=-1,
+    )
+    q_full = jnp.concatenate([q_nope, q_rope], axis=-1)
+    q_full = constrain(q_full, Q_ACT)
+    if cache is not None:
+        # decode/prefill: the up-projected K/V inherit the latent cache's
+        # sequence sharding (heads 40 don't divide the model axis; forcing
+        # head/replicated layout here all-gathered 2 GB x 62 layers of
+        # reconstructed KV per decode step — §Perf hc-mla-1)
+        k_full = constrain(k_full, ("batch", None, "qseq_act", None))
+        vv = constrain(vv, ("batch", None, "qseq_act", None))
+    else:
+        k_full = constrain(k_full, ("batch", "heads_act", None, None))
+        vv = constrain(vv, ("batch", "heads_act", None, None))
+
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    if s == 1 and cache is not None:
+        lm = length_mask if length_mask is not None else jnp.ones(
+            (b, t), jnp.bool_
+        )
+        out = sdpa_decode(q_full, k_full, vv, lm, scale=scale)
+    else:
+        out = sdpa_chunked(q_full, k_full, vv, cfg.causal, chunk=chunk,
+                           scale=scale)
+    y = jnp.einsum("bhsk,hkd->bsd", out, params["wo"])
+    return y, new_cache

@@ -1,0 +1,114 @@
+"""Shared neural layers: norms, rotary embeddings, MLPs."""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+
+
+# -- Norms -------------------------------------------------------------
+
+def rmsnorm_spec(d: int):
+    return {"scale": ParamSpec((d,), ("embed",), jnp.float32, "ones")}
+
+
+def rmsnorm(params, x: Array, eps: float = 1e-6) -> Array:
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(x.dtype)
+
+
+def layernorm_spec(d: int):
+    return {
+        "scale": ParamSpec((d,), ("embed",), jnp.float32, "ones"),
+        "bias": ParamSpec((d,), ("embed",), jnp.float32, "zeros"),
+    }
+
+
+def layernorm(params, x: Array, eps: float = 1e-5) -> Array:
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    y = (xf - mu) * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"] + params["bias"]).astype(x.dtype)
+
+
+def nonparametric_ln(params, x: Array, eps: float = 1e-5) -> Array:
+    """OLMo-style LayerNorm without scale/bias (non-parametric)."""
+    del params
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return ((xf - mu) * jax.lax.rsqrt(var + eps)).astype(x.dtype)
+
+
+NORM_SPECS = {
+    "rmsnorm": rmsnorm_spec,
+    "layernorm": layernorm_spec,
+    "nonparametric_ln": lambda d: {},
+}
+NORM_FNS = {
+    "rmsnorm": rmsnorm,
+    "layernorm": layernorm,
+    "nonparametric_ln": nonparametric_ln,
+}
+
+
+# -- Rotary ------------------------------------------------------------
+
+def rope(x: Array, positions: Array, theta: float) -> Array:
+    """Apply rotary embedding.  x: (..., S, hd), positions: (S,) or (B, S)."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    # broadcast over head axis: x (..., H, S, hd) vs ang (..., S, half)
+    while cos.ndim < x.ndim - 1:
+        cos, sin = cos[..., None, :, :], sin[..., None, :, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- MLPs --------------------------------------------------------------
+
+def swiglu_spec(d: int, f: int):
+    return {
+        "w_gate": ParamSpec((d, f), ("embed", "mlp")),
+        "w_up": ParamSpec((d, f), ("embed", "mlp")),
+        "w_down": ParamSpec((f, d), ("mlp", "embed")),
+    }
+
+
+def swiglu(params, x: Array) -> Array:
+    g = jnp.einsum("...d,df->...f", x, params["w_gate"])
+    u = jnp.einsum("...d,df->...f", x, params["w_up"])
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(x.dtype) * u
+    return jnp.einsum("...f,fd->...d", h, params["w_down"])
+
+
+def gelu_mlp_spec(d: int, f: int):
+    return {
+        "w_in": ParamSpec((d, f), ("embed", "mlp")),
+        "b_in": ParamSpec((f,), ("mlp",), jnp.float32, "zeros"),
+        "w_out": ParamSpec((f, d), ("mlp", "embed")),
+        "b_out": ParamSpec((d,), ("embed",), jnp.float32, "zeros"),
+    }
+
+
+def gelu_mlp(params, x: Array) -> Array:
+    h = jnp.einsum("...d,df->...f", x, params["w_in"]) + params["b_in"].astype(
+        x.dtype
+    )
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(x.dtype)
+    return jnp.einsum("...f,fd->...d", h, params["w_out"]) + params[
+        "b_out"
+    ].astype(x.dtype)

@@ -1,0 +1,179 @@
+"""Mamba2 (State-Space Duality) block — chunked-parallel train/prefill path
+plus a single-step recurrence for decode.
+
+Structure follows the published block: in-projection to (z, x, B, C, dt),
+short causal depthwise conv on (x, B, C), SSD state-space mixing with
+per-head scalar decay A, gated (SiLU(z)) RMS-normed out-projection.
+
+The chunked SSD algorithm scans over sequence chunks carrying the (H, P, N)
+state — O(S) compute and memory, which is what makes the ``long_500k`` cell
+runnable for the SSM/hybrid architectures while full-attention archs skip it.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rmsnorm
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+
+
+class Mamba2State(NamedTuple):
+    ssm: Array    # (B, H, P, N) carried SSD state
+    conv: Array   # (B, d_conv-1, d_inner + 2*N) conv tail cache
+
+
+def _dims(cfg: ArchConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = s.n_heads
+    p = d_inner // n_heads
+    return d_inner, n_heads, p, s.d_state, s.d_conv, s.chunk
+
+
+def mamba2_spec(cfg: ArchConfig):
+    d = cfg.d_model
+    di, h, p, n, dc, _ = _dims(cfg)
+    conv_ch = di + 2 * n
+    return {
+        "w_in": ParamSpec((d, 2 * di + 2 * n + h), ("embed", "mlp")),
+        "conv_w": ParamSpec((dc, conv_ch), ("conv", "mlp"), jnp.float32,
+                            "scaled"),
+        "conv_b": ParamSpec((conv_ch,), ("mlp",), jnp.float32, "zeros"),
+        "a_log": ParamSpec((h,), ("heads",), jnp.float32, "zeros"),
+        "dt_bias": ParamSpec((h,), ("heads",), jnp.float32, "zeros"),
+        "d_skip": ParamSpec((h,), ("heads",), jnp.float32, "ones"),
+        "norm_scale": ParamSpec((di,), ("mlp",), jnp.float32, "ones"),
+        "w_out": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _split_proj(cfg: ArchConfig, zxbcdt: Array):
+    di, h, p, n, _, _ = _dims(cfg)
+    z = zxbcdt[..., :di]
+    x = zxbcdt[..., di:2 * di]
+    bb = zxbcdt[..., 2 * di:2 * di + n]
+    cc = zxbcdt[..., 2 * di + n:2 * di + 2 * n]
+    dt = zxbcdt[..., 2 * di + 2 * n:]
+    return z, x, bb, cc, dt
+
+
+def _conv(params, u: Array, tail: Optional[Array]) -> Tuple[Array, Array]:
+    """Causal depthwise conv over (B, S, C) with cached tail for decode."""
+    dc = params["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], dc - 1, u.shape[-1]), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)                # (B, S+dc-1, C)
+    w = params["conv_w"].astype(u.dtype)                    # (dc, C)
+    out = sum(
+        ext[:, i:i + u.shape[1]] * w[i][None, None] for i in range(dc)
+    ) + params["conv_b"].astype(u.dtype)
+    new_tail = ext[:, -(dc - 1):] if dc > 1 else ext[:, :0]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype), new_tail
+
+
+def mamba2_apply(
+    params,
+    cfg: ArchConfig,
+    xin: Array,                      # (B, S, D)
+    state: Optional[Mamba2State] = None,
+) -> Tuple[Array, Optional[Mamba2State]]:
+    di, h, p, n, dc, chunk = _dims(cfg)
+    b, s, d = xin.shape
+
+    zxbcdt = jnp.einsum("bsd,de->bse", xin, params["w_in"])
+    z, xproj, _, _, dt_raw = _split_proj(cfg, zxbcdt)
+    conv_in = zxbcdt[..., di:2 * di + 2 * n]                # x ++ B ++ C
+    conv_out, new_tail = _conv(params, conv_in,
+                               state.conv if state is not None else None)
+    x = conv_out[..., :di]
+    bb = conv_out[..., di:di + n]
+    cc = conv_out[..., di + n:]
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])               # (B, S, H)
+    a = -jnp.exp(params["a_log"])                           # (H,) negative
+    da = dt * a[None, None]                                 # (B, S, H) log-decay
+    xh = x.reshape(b, s, h, p)
+
+    if s == 1 and state is not None:
+        # -- decode recurrence ----------------------------------------
+        dta = jnp.exp(da[:, 0])                             # (B, H)
+        dbx = jnp.einsum("bh,bhp,bn->bhpn", dt[:, 0],
+                         xh[:, 0].astype(jnp.float32),
+                         bb[:, 0].astype(jnp.float32))
+        ssm = state.ssm * dta[..., None, None] + dbx
+        y = jnp.einsum("bhpn,bn->bhp", ssm, cc[:, 0].astype(jnp.float32))
+        y = y + params["d_skip"][None, :, None] * xh[:, 0].astype(jnp.float32)
+        y = y.reshape(b, 1, di).astype(xin.dtype)
+        new_state = Mamba2State(ssm=ssm, conv=new_tail)
+    else:
+        # -- chunked SSD scan ------------------------------------------
+        l = min(chunk, s)
+        assert s % l == 0, f"S={s} not divisible by chunk={l}"
+        nc = s // l
+
+        def reshape_c(t):  # (B, S, ...) -> (nc, B, L, ...)
+            return t.reshape(b, nc, l, *t.shape[2:]).swapaxes(0, 1)
+
+        da_c = reshape_c(da)                                # (nc, B, L, H)
+        dt_c = reshape_c(dt)
+        x_c = reshape_c(xh.astype(jnp.float32))             # (nc, B, L, H, P)
+        b_c = reshape_c(bb.astype(jnp.float32))             # (nc, B, L, N)
+        c_c = reshape_c(cc.astype(jnp.float32))
+
+        ssm0 = (state.ssm if state is not None
+                else jnp.zeros((b, h, p, n), jnp.float32))
+
+        def body(carry, inp):
+            ssm = carry
+            dac, dtc, xc, bc, ccc = inp
+            cum = jnp.cumsum(dac, axis=1)                   # (B, L, H)
+            # intra-chunk "attention": decay(i<-j) = exp(cum_i - cum_j)
+            rel = cum[:, :, None, :] - cum[:, None, :, :]   # (B, L, L, H)
+            tri = jnp.tril(jnp.ones((l, l), jnp.float32))
+            seg = jnp.exp(rel) * tri[None, :, :, None]
+            scores = jnp.einsum("bin,bjn->bij", ccc, bc)    # (B, L, L)
+            w = scores[..., None] * seg * dtc[:, None]      # (B,L,L,H)
+            y_intra = jnp.einsum("bijh,bjhp->bihp", w, xc)
+            # inter-chunk: contribution of carried state
+            y_inter = jnp.einsum(
+                "bin,bhpn,bih->bihp", ccc, ssm, jnp.exp(cum)
+            )
+            # state update: decay whole chunk + inject chunk outer products
+            tail_decay = jnp.exp(cum[:, -1:, :] - cum)      # (B, L, H)
+            inject = jnp.einsum(
+                "blh,blhp,bln->bhpn", dtc * tail_decay, xc, bc
+            )
+            # cum[:, -1] is (B, H) -> broadcast to the (B, H, P, N) state
+            ssm_new = ssm * jnp.exp(cum[:, -1])[..., None, None] + inject
+            return ssm_new, (y_intra + y_inter)
+
+        ssm_f, y_chunks = jax.lax.scan(
+            body, ssm0, (da_c, dt_c, x_c, b_c, c_c)
+        )
+        y = y_chunks.swapaxes(0, 1).reshape(b, s, h, p)
+        y = y + params["d_skip"][None, None, :, None] * xh.astype(jnp.float32)
+        y = y.reshape(b, s, di).astype(xin.dtype)
+        new_state = Mamba2State(ssm=ssm_f, conv=new_tail) if (
+            state is not None) else None
+
+    # gated output
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_out"])
+    return out, new_state
+
+
+def init_state(cfg: ArchConfig, batch: int) -> Mamba2State:
+    di, h, p, n, dc, _ = _dims(cfg)
+    return Mamba2State(
+        ssm=jnp.zeros((batch, h, p, n), jnp.float32),
+        conv=jnp.zeros((batch, dc - 1, di + 2 * n), jnp.bfloat16),
+    )

@@ -1,0 +1,498 @@
+"""Model assembly: builds every assigned architecture family from ArchConfig.
+
+Families and their block stacks:
+  dense   — [GQA|MLA attention + SwiGLU MLP] x L, scanned over layers
+  moe     — [GQA attention + MoE FFN] x L, scanned
+  ssm     — xLSTM: segments of (slstm_every-1) mLSTM blocks + 1 sLSTM block
+  hybrid  — zamba2: Mamba2 blocks with one *shared* attention block applied
+            every ``shared_attn_every`` layers (weight re-use)
+  audio   — hubert: encoder-only bidirectional attention + GeLU MLP; the conv
+            frontend is a stub — inputs are precomputed frame embeddings
+  vlm     — llava: Mistral decoder over [patch-embedding prefix ++ tokens];
+            the vision tower is a stub — inputs are precomputed anyres patch
+            embeddings
+
+Layers are stacked and scanned (jax.lax.scan) with configurable remat policy:
+essential for HLO size / compile time at 94 layers, and the unit the
+dry-run's roofline reads.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import attention as attn_mod
+from repro.models import mamba2 as m2
+from repro.models import moe as moe_mod
+from repro.models import xlstm as xl
+from repro.models.layers import (
+    NORM_FNS,
+    NORM_SPECS,
+    gelu_mlp,
+    gelu_mlp_spec,
+    swiglu,
+    swiglu_spec,
+)
+from repro.models.params import ParamSpec, is_spec
+
+Array = jax.Array
+
+
+def _stack_specs(spec_tree, n: int):
+    """Add a leading scanned-layers dim to every ParamSpec leaf."""
+    def one(s: ParamSpec) -> ParamSpec:
+        return ParamSpec((n,) + s.shape, ("layers",) + s.logical, s.dtype,
+                         s.init, s.scale)
+    return jax.tree_util.tree_map(one, spec_tree, is_leaf=is_spec)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+        )
+    if policy == "dots+moe":
+        # §Perf hc-qwen-1: additionally save the MoE block output so the
+        # backward pass does NOT re-execute the expert-parallel shard_map
+        # (its all_to_all + FSDP weight gathers were re-issued during
+        # rematerialization — measured 3x the forward collective bill).
+        pol = jax.checkpoint_policies.save_from_both_policies(
+            jax.checkpoint_policies.dots_with_no_batch_dims_saveable,
+            jax.checkpoint_policies.save_only_these_names("moe_out"),
+        )
+        return jax.checkpoint(fn, policy=pol)
+    return jax.checkpoint(fn)  # "full"
+
+
+# ---------------------------------------------------------------------------
+# Decoder/encoder transformer block (dense / moe / audio / vlm)
+# ---------------------------------------------------------------------------
+
+def _block_spec(cfg: ArchConfig):
+    spec: Dict[str, Any] = {
+        "ln1": NORM_SPECS[cfg.norm](cfg.d_model),
+        "ln2": NORM_SPECS[cfg.norm](cfg.d_model),
+    }
+    if cfg.attention == "gqa":
+        spec["attn"] = attn_mod.gqa_spec(cfg)
+    elif cfg.attention == "mla":
+        spec["attn"] = attn_mod.mla_spec(cfg)
+    if cfg.moe is not None:
+        spec["ffn"] = moe_mod.moe_spec(cfg)
+    elif cfg.family == "audio":
+        spec["ffn"] = gelu_mlp_spec(cfg.d_model, cfg.d_ff)
+    else:
+        spec["ffn"] = swiglu_spec(cfg.d_model, cfg.d_ff)
+    return spec
+
+
+def _block_apply(params, cfg: ArchConfig, x, positions, cache=None,
+                 cache_index=None, length_mask=None, backend="chunked"):
+    norm = NORM_FNS[cfg.norm]
+    attn_fn = attn_mod.gqa_apply if cfg.attention == "gqa" else (
+        attn_mod.mla_apply)
+    h, new_cache = attn_fn(
+        params["attn"], cfg, norm(params["ln1"], x), positions,
+        cache=cache, cache_index=cache_index, length_mask=length_mask,
+        backend=backend,
+    )
+    x = x + h
+    z = norm(params["ln2"], x)
+    aux = jnp.float32(0.0)
+    if cfg.moe is not None:
+        f, aux = moe_mod.moe_apply_ep(params["ffn"], cfg, z)
+        from jax.ad_checkpoint import checkpoint_name
+        f = checkpoint_name(f, "moe_out")
+    elif cfg.family == "audio":
+        f = gelu_mlp(params["ffn"], z)
+    else:
+        f = swiglu(params["ffn"], z)
+    return x + f, new_cache, aux
+
+
+# ---------------------------------------------------------------------------
+# Model spec + apply
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ArchConfig
+    spec: Any                 # pytree of ParamSpec
+
+    # logits over the full input sequence (training / prefill-no-cache)
+    def logits(self, params, batch: Dict[str, Array],
+               backend: str = "chunked", remat: str = "dots") -> Array:
+        return _forward(params, self.cfg, batch, backend, remat)
+
+    def prefill(self, params, batch, cache):
+        return _prefill(params, self.cfg, batch, cache)
+
+    def decode_step(self, params, tokens, cache, index, length_mask):
+        return _decode(params, self.cfg, tokens, cache, index, length_mask)
+
+    def init_cache(self, batch: int, max_len: int):
+        return _init_cache(self.cfg, batch, max_len)
+
+
+def build_model(cfg: ArchConfig) -> Model:
+    d, v = cfg.d_model, cfg.padded_vocab
+    spec: Dict[str, Any] = {}
+    if cfg.family == "audio":
+        spec["frontend"] = {
+            "w": ParamSpec((cfg.frontend_dim, d), ("frontend", "embed"))
+        }
+        spec["embed"] = {"w": ParamSpec((v, d), ("vocab", "embed"))}
+    elif cfg.family == "vlm":
+        spec["embed"] = {"w": ParamSpec((v, d), ("vocab", "embed"))}
+        spec["frontend"] = {
+            "w": ParamSpec((cfg.frontend_dim, d), ("frontend", "embed"))
+        }
+    else:
+        spec["embed"] = {"w": ParamSpec((v, d), ("vocab", "embed"))}
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        spec["blocks"] = _stack_specs(_block_spec(cfg), cfg.n_layers)
+    elif cfg.family == "ssm":      # xLSTM
+        xc = cfg.xlstm
+        n_seg = cfg.n_layers // xc.slstm_every
+        spec["mlstm"] = _stack_specs(
+            _stack_specs(xl.mlstm_spec(cfg), xc.slstm_every - 1), n_seg)
+        spec["slstm"] = _stack_specs(xl.slstm_spec(cfg), n_seg)
+        spec["ln_m"] = _stack_specs(
+            _stack_specs(NORM_SPECS[cfg.norm](d), xc.slstm_every - 1), n_seg)
+        spec["ln_s"] = _stack_specs(NORM_SPECS[cfg.norm](d), n_seg)
+    elif cfg.family == "hybrid":   # zamba2
+        k = cfg.shared_attn_every
+        n_full, rem = divmod(cfg.n_layers, k)
+        spec["mamba"] = _stack_specs(
+            _stack_specs(m2.mamba2_spec(cfg), k), n_full)
+        spec["ln_mamba"] = _stack_specs(
+            _stack_specs(NORM_SPECS[cfg.norm](d), k), n_full)
+        if rem:
+            spec["mamba_tail"] = _stack_specs(m2.mamba2_spec(cfg), rem)
+            spec["ln_tail"] = _stack_specs(NORM_SPECS[cfg.norm](d), rem)
+        spec["shared_attn"] = _block_spec(cfg)  # ONE set of weights, reused
+    else:
+        raise ValueError(cfg.family)
+
+    spec["ln_f"] = NORM_SPECS[cfg.norm](d)
+    if not cfg.tie_embeddings:
+        spec["head"] = {"w": ParamSpec((d, v), ("embed", "vocab"))}
+    return Model(cfg=cfg, spec=spec)
+
+
+# ---------------------------------------------------------------------------
+# Forward passes
+# ---------------------------------------------------------------------------
+
+ACT = ("batch", "seq_act", "embed_act")
+
+
+def _embed_inputs(params, cfg: ArchConfig, batch) -> Array:
+    if cfg.family == "audio":
+        x = jnp.einsum("bsf,fd->bsd", batch["frames"],
+                       params["frontend"]["w"])
+        return constrain(x, ACT)
+    emb = params["embed"]["w"]
+    x = emb[batch["tokens"]]
+    if cfg.family == "vlm":
+        p = jnp.einsum("bnf,fd->bnd", batch["patches"],
+                       params["frontend"]["w"])
+        x = jnp.concatenate([p, x], axis=1)
+    return constrain(x, ACT)
+
+
+def _head(params, cfg: ArchConfig, x: Array) -> Array:
+    x = NORM_FNS[cfg.norm](params["ln_f"], x)
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["embed"]["w"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["head"]["w"])
+    if cfg.padded_vocab != cfg.vocab:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab
+        logits = jnp.where(pad_mask, logits,
+                           jnp.asarray(-1e30, logits.dtype))
+    return constrain(logits, ("batch", "seq_act", "vocab_act"))
+
+
+def _forward(params, cfg: ArchConfig, batch, backend: str, remat: str
+             ) -> Array:
+    x = _embed_inputs(params, cfg, batch)
+    b, s, d = x.shape
+    positions = jnp.arange(s)
+
+    if cfg.family in ("dense", "moe", "audio", "vlm"):
+        def body(carry, layer_params):
+            y, _, aux = _block_apply(layer_params, cfg, carry, positions,
+                                     backend=backend)
+            return constrain(y, ACT), aux
+
+        x, _ = jax.lax.scan(_remat(body, remat), x, params["blocks"])
+    elif cfg.family == "ssm":
+        def seg(carry, seg_params):
+            mp, sp, lm, ls = seg_params
+
+            def m_body(c, lp):
+                blk, ln = lp
+                h, _ = xl.mlstm_apply(blk, cfg, NORM_FNS[cfg.norm](ln, c))
+                return constrain(c + h, ACT), None
+
+            carry, _ = jax.lax.scan(_remat(m_body, remat), carry, (mp, lm))
+            h, _ = xl.slstm_apply(sp, cfg, NORM_FNS[cfg.norm](ls, carry))
+            return constrain(carry + h, ACT), None
+
+        x, _ = jax.lax.scan(
+            seg, x,
+            (params["mlstm"], params["slstm"], params["ln_m"],
+             params["ln_s"]),
+        )
+    elif cfg.family == "hybrid":
+        def group(carry, gp):
+            mp, ln = gp
+
+            def m_body(c, lp):
+                blk, lnp = lp
+                h, _ = m2.mamba2_apply(blk, cfg, NORM_FNS[cfg.norm](lnp, c))
+                return constrain(c + h, ACT), None
+
+            carry, _ = jax.lax.scan(_remat(m_body, remat), carry, (mp, ln))
+            y, _, _ = _block_apply(params["shared_attn"], cfg, carry,
+                                   positions, backend=backend)
+            return constrain(y, ACT), None
+
+        x, _ = jax.lax.scan(group, x,
+                            (params["mamba"], params["ln_mamba"]))
+        if "mamba_tail" in params:
+            def t_body(c, lp):
+                blk, lnp = lp
+                h, _ = m2.mamba2_apply(blk, cfg, NORM_FNS[cfg.norm](lnp, c))
+                return c + h, None
+
+            x, _ = jax.lax.scan(
+                _remat(t_body, remat), x,
+                (params["mamba_tail"], params["ln_tail"]))
+    else:
+        raise ValueError(cfg.family)
+
+    return _head(params, cfg, x)
+
+
+# ---------------------------------------------------------------------------
+# Serving: cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+def _init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.attention == "mla":
+            m = cfg.mla
+            return jnp.zeros(
+                (cfg.n_layers, batch, max_len,
+                 m.kv_lora_rank + m.qk_rope_head_dim), jnp.bfloat16)
+        hd = cfg.hd
+        return (
+            jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd),
+                      jnp.bfloat16),
+            jnp.zeros((cfg.n_layers, batch, cfg.n_kv_heads, max_len, hd),
+                      jnp.bfloat16),
+        )
+    if cfg.family == "ssm":
+        xc = cfg.xlstm
+        n_seg = cfg.n_layers // xc.slstm_every
+        ml = xl.mlstm_init_state(cfg, batch)
+        ml = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a[None, None],
+                (n_seg, xc.slstm_every - 1) + a.shape).copy(), ml)
+        sl = xl.slstm_init_state(cfg, batch)
+        sl = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a[None], (n_seg,) + a.shape).copy(),
+            sl)
+        return {"mlstm": ml, "slstm": sl}
+    if cfg.family == "hybrid":
+        k = cfg.shared_attn_every
+        n_full, rem = divmod(cfg.n_layers, k)
+        ms = m2.init_state(cfg, batch)
+        groups = jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(
+                a[None, None], (n_full, k) + a.shape).copy(), ms)
+        hd = cfg.hd
+        attn = (
+            jnp.zeros((n_full, batch, cfg.n_kv_heads, max_len, hd),
+                      jnp.bfloat16),
+            jnp.zeros((n_full, batch, cfg.n_kv_heads, max_len, hd),
+                      jnp.bfloat16),
+        )
+        out = {"mamba": groups, "attn": attn}
+        if rem:
+            out["mamba_tail"] = jax.tree_util.tree_map(
+                lambda a: jnp.broadcast_to(a[None], (rem,) + a.shape).copy(),
+                ms)
+        return out
+    raise ValueError(f"no cache for family {cfg.family}")
+
+
+def _prefill(params, cfg: ArchConfig, batch, cache):
+    """Run the full prompt, filling the cache; returns (last_logits, cache)."""
+    x = _embed_inputs(params, cfg, batch)
+    b, s, d = x.shape
+    positions = jnp.arange(s)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, inp):
+            layer_params, layer_cache = inp
+            y, new_c, _ = _block_apply(
+                layer_params, cfg, carry, positions,
+                cache=layer_cache, cache_index=0)
+            return y, new_c
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        return _head(params, cfg, x[:, -1:]), new_cache
+
+    if cfg.family == "ssm":
+        def seg(carry, inp):
+            (mp, sp, lm, ls), (mc, sc) = inp
+
+            def m_body(c, lp):
+                (blk, ln), st = lp
+                h, st2 = xl.mlstm_apply(blk, cfg, NORM_FNS[cfg.norm](ln, c),
+                                        state=st)
+                return c + h, st2
+
+            carry, mc2 = jax.lax.scan(m_body, carry, ((mp, lm), mc))
+            h, sc2 = xl.slstm_apply(sp, cfg, NORM_FNS[cfg.norm](ls, carry),
+                                    state=sc)
+            return carry + h, (mc2, sc2)
+
+        x, (mc, sc) = jax.lax.scan(
+            seg, x,
+            ((params["mlstm"], params["slstm"], params["ln_m"],
+              params["ln_s"]),
+             (cache["mlstm"], cache["slstm"])))
+        return _head(params, cfg, x[:, -1:]), {"mlstm": mc, "slstm": sc}
+
+    if cfg.family == "hybrid":
+        def group(carry, inp):
+            (mp, ln), mst, ac = inp
+
+            def m_body(c, lp):
+                (blk, lnp), st = lp
+                h, st2 = m2.mamba2_apply(blk, cfg,
+                                         NORM_FNS[cfg.norm](lnp, c), state=st)
+                return c + h, st2
+
+            carry, mst2 = jax.lax.scan(m_body, carry, ((mp, ln), mst))
+            y, ac2, _ = _block_apply(params["shared_attn"], cfg, carry,
+                                     positions, cache=ac, cache_index=0)
+            return y, (mst2, ac2)
+
+        x, (mst, ac) = jax.lax.scan(
+            group, x,
+            ((params["mamba"], params["ln_mamba"]), cache["mamba"],
+             cache["attn"]))
+        new_cache = {"mamba": mst, "attn": ac}
+        if "mamba_tail" in params:
+            def t_body(c, lp):
+                (blk, lnp), st = lp
+                h, st2 = m2.mamba2_apply(blk, cfg,
+                                         NORM_FNS[cfg.norm](lnp, c), state=st)
+                return c + h, st2
+
+            x, tst = jax.lax.scan(
+                t_body, x,
+                ((params["mamba_tail"], params["ln_tail"]),
+                 cache["mamba_tail"]))
+            new_cache["mamba_tail"] = tst
+        return _head(params, cfg, x[:, -1:]), new_cache
+
+    raise ValueError(cfg.family)
+
+
+def _decode(params, cfg: ArchConfig, tokens, cache, index, length_mask):
+    """One autoregressive step.  tokens: (B, 1); index: scalar write offset."""
+    batch = {"tokens": tokens}
+    if cfg.family == "vlm":
+        # decode beyond the image prefix: plain token embedding
+        x = params["embed"]["w"][tokens]
+    else:
+        x = _embed_inputs(params, cfg, batch)
+    positions = jnp.full((1,), index)
+
+    if cfg.family in ("dense", "moe", "vlm"):
+        def body(carry, inp):
+            layer_params, layer_cache = inp
+            y, new_c, _ = _block_apply(
+                layer_params, cfg, carry, positions,
+                cache=layer_cache, cache_index=index,
+                length_mask=length_mask)
+            return y, new_c
+
+        x, new_cache = jax.lax.scan(body, x, (params["blocks"], cache))
+        return _head(params, cfg, x), new_cache
+
+    if cfg.family == "ssm":
+        def seg(carry, inp):
+            (mp, sp, lm, ls), (mc, sc) = inp
+
+            def m_body(c, lp):
+                (blk, ln), st = lp
+                h, st2 = xl.mlstm_apply(blk, cfg, NORM_FNS[cfg.norm](ln, c),
+                                        state=st)
+                return c + h, st2
+
+            carry, mc2 = jax.lax.scan(m_body, carry, ((mp, lm), mc))
+            h, sc2 = xl.slstm_apply(sp, cfg, NORM_FNS[cfg.norm](ls, carry),
+                                    state=sc)
+            return carry + h, (mc2, sc2)
+
+        x, (mc, sc) = jax.lax.scan(
+            seg, x,
+            ((params["mlstm"], params["slstm"], params["ln_m"],
+              params["ln_s"]),
+             (cache["mlstm"], cache["slstm"])))
+        return _head(params, cfg, x), {"mlstm": mc, "slstm": sc}
+
+    if cfg.family == "hybrid":
+        def group(carry, inp):
+            (mp, ln), mst, ac = inp
+
+            def m_body(c, lp):
+                (blk, lnp), st = lp
+                h, st2 = m2.mamba2_apply(blk, cfg,
+                                         NORM_FNS[cfg.norm](lnp, c), state=st)
+                return c + h, st2
+
+            carry, mst2 = jax.lax.scan(m_body, carry, ((mp, ln), mst))
+            y, ac2, _ = _block_apply(params["shared_attn"], cfg, carry,
+                                     positions, cache=ac, cache_index=index,
+                                     length_mask=length_mask)
+            return y, (mst2, ac2)
+
+        x, (mst, ac) = jax.lax.scan(
+            group, x,
+            ((params["mamba"], params["ln_mamba"]), cache["mamba"],
+             cache["attn"]))
+        new_cache = {"mamba": mst, "attn": ac}
+        if "mamba_tail" in params:
+            def t_body(c, lp):
+                (blk, lnp), st = lp
+                h, st2 = m2.mamba2_apply(blk, cfg,
+                                         NORM_FNS[cfg.norm](lnp, c), state=st)
+                return c + h, st2
+
+            x, tst = jax.lax.scan(
+                t_body, x,
+                ((params["mamba_tail"], params["ln_tail"]),
+                 cache["mamba_tail"]))
+            new_cache["mamba_tail"] = tst
+        return _head(params, cfg, x), new_cache
+
+    raise ValueError(cfg.family)

@@ -1,0 +1,79 @@
+"""Parameter specification trees: shape + dtype + logical axis names + init.
+
+Models declare their parameters as a pytree of ``ParamSpec``; ``init`` turns
+the tree into arrays (optionally already placed with NamedShardings so giant
+models can be *created* sharded), and ``abstract`` turns it into
+ShapeDtypeStructs for the allocation-free dry-run path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ParamSpec:
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: object = jnp.bfloat16
+    init: str = "normal"        # normal | zeros | ones | scaled
+    scale: float = 0.02
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.logical), (self.shape, self.logical)
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def abstract(spec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+        spec_tree, is_leaf=is_spec,
+    )
+
+
+def abstract_sharded(spec_tree, mesh, rules=None):
+    from repro.distributed.sharding import sharding_for
+
+    return jax.tree_util.tree_map(
+        lambda s: jax.ShapeDtypeStruct(
+            s.shape, s.dtype, sharding=sharding_for(s.shape, s.logical, mesh, rules)
+        ),
+        spec_tree, is_leaf=is_spec,
+    )
+
+
+def init(spec_tree, key: jax.Array):
+    leaves, treedef = jax.tree_util.tree_flatten(spec_tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+
+    def one(s: ParamSpec, k):
+        if s.init == "zeros":
+            return jnp.zeros(s.shape, s.dtype)
+        if s.init == "ones":
+            return jnp.ones(s.shape, s.dtype)
+        fan_in = s.shape[0] if len(s.shape) > 1 else max(s.shape[-1], 1)
+        scale = s.scale if s.init == "normal" else 1.0 / np.sqrt(fan_in)
+        return (jax.random.normal(k, s.shape, jnp.float32) * scale).astype(s.dtype)
+
+    return jax.tree_util.tree_unflatten(
+        treedef, [one(s, k) for s, k in zip(leaves, keys)]
+    )
+
+
+def count_params(spec_tree) -> int:
+    """Exact parameter count from a spec tree."""
+    import math
+
+    total = 0
+    for s in jax.tree_util.tree_leaves(
+            spec_tree, is_leaf=is_spec):
+        total += math.prod(s.shape)
+    return total

@@ -1,0 +1,335 @@
+"""xLSTM blocks: mLSTM (matrix-memory, chunkwise-parallel) and sLSTM
+(scalar-memory, sequential scan), following arXiv:2405.04517.
+
+mLSTM is exponential-gated linear attention: state C (P x Pv matrix per
+head), normalizer n, and a running log-stabilizer m.  We implement the
+stabilized chunkwise-parallel form (the TPU-friendly formulation — compute
+is dense matmuls over (L, L) chunk tiles plus an O(S/L) state scan), with a
+single-step recurrence for decode.  sLSTM keeps per-head scalar memory with
+block-diagonal recurrence and is scanned over time.
+
+xlstm-1.3b assembles 48 blocks, every ``slstm_every``-th an sLSTM, the rest
+mLSTM (the published 7:1 mixing).  Linear-time state makes the arch
+``long_500k``-eligible.
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.layers import rmsnorm
+from repro.models.params import ParamSpec
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+class MLSTMState(NamedTuple):
+    c: Array   # (B, H, P, Pv)
+    n: Array   # (B, H, P)
+    m: Array   # (B, H)
+    conv: Array  # (B, dc-1, di)
+
+
+def _mdims(cfg: ArchConfig):
+    di = int(cfg.d_model * cfg.xlstm.proj_factor)
+    h = cfg.n_heads
+    p = di // h
+    return di, h, p, cfg.xlstm.conv_kernel
+
+
+def mlstm_spec(cfg: ArchConfig):
+    d = cfg.d_model
+    di, h, p, dc = _mdims(cfg)
+    return {
+        "w_up": ParamSpec((d, 2 * di), ("embed", "mlp")),
+        "conv_w": ParamSpec((dc, di), ("conv", "mlp"), jnp.float32, "scaled"),
+        "conv_b": ParamSpec((di,), ("mlp",), jnp.float32, "zeros"),
+        # block-diagonal per-head projections (official xLSTM BlockDiagonal).
+        # §Perf hc-xlstm-7: replicated over "model" (4 MB each) — sharding
+        # their output dim forced a per-layer (B,S,H,P) all-reduce in the
+        # backward pass (1.07 GB x 42 measured); FSDP over "data" only.
+        "wq": ParamSpec((h, p, p), ("heads", "head_dim", None)),
+        "wk": ParamSpec((h, p, p), ("heads", "head_dim", None)),
+        "wv": ParamSpec((h, p, p), ("heads", "head_dim", None)),
+        "w_if": ParamSpec((di, 2 * h), ("mlp", "heads"), jnp.float32),
+        "b_if": ParamSpec((2 * h,), ("heads",), jnp.float32, "zeros"),
+        "lskip": ParamSpec((di,), ("mlp",), jnp.float32, "ones"),
+        "norm_scale": ParamSpec((di,), ("mlp",), jnp.float32, "ones"),
+        "w_down": ParamSpec((di, d), ("mlp", "embed")),
+    }
+
+
+def _causal_conv(params, u: Array, tail: Optional[Array]):
+    dc = params["conv_w"].shape[0]
+    if tail is None:
+        tail = jnp.zeros((u.shape[0], dc - 1, u.shape[-1]), u.dtype)
+    ext = jnp.concatenate([tail, u], axis=1)
+    w = params["conv_w"].astype(u.dtype)
+    out = sum(ext[:, i:i + u.shape[1]] * w[i][None, None] for i in range(dc))
+    out = out + params["conv_b"].astype(u.dtype)
+    new_tail = ext[:, -(dc - 1):] if dc > 1 else ext[:, :0]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(u.dtype), new_tail
+
+
+def mlstm_apply(
+    params,
+    cfg: ArchConfig,
+    xin: Array,                    # (B, S, D)
+    state: Optional[MLSTMState] = None,
+    chunk: int = 256,
+) -> Tuple[Array, Optional[MLSTMState]]:
+    di, h, p, dc = _mdims(cfg)
+    b, s, d = xin.shape
+
+    up = jnp.einsum("bsd,de->bse", xin, params["w_up"])
+    xi, gate = up[..., :di], up[..., di:]
+    xc, new_tail = _causal_conv(params, xi,
+                                state.conv if state is not None else None)
+
+    xch = xc.reshape(b, s, h, p)
+    xih = xi.reshape(b, s, h, p)
+    q = jnp.einsum("bshp,hpq->bshq", xch, params["wq"]) * (p ** -0.5)
+    k = jnp.einsum("bshp,hpq->bshq", xch, params["wk"])
+    v = jnp.einsum("bshp,hpq->bshq", xih, params["wv"])
+    # NOTE(perf/§Perf hc-xlstm-3): an earlier val_act->model constraint on v
+    # triggered involuntary full rematerialization copies in the SPMD
+    # partitioner (state-dim resharding against the chunk scan); batch/data
+    # sharding alone is strictly better here.
+    gates = jnp.einsum("bse,eg->bsg", xc.astype(jnp.float32), params["w_if"]
+                       ) + params["b_if"]
+    li = gates[..., :h]                                  # input gate (log)
+    lf = jax.nn.log_sigmoid(gates[..., h:])              # forget gate (log)
+
+    # §Perf hc-xlstm-2: keep q/k/v bf16 through the chunk scan — the scanned
+    # xs and their backward dus-stacks are the dominant HBM term; f32
+    # promotion happens only where the stabilized math needs it.
+    qf = q.astype(jnp.float32)  # decode path still uses f32 directly
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    if s == 1 and state is not None:
+        m_new = jnp.maximum(state.m + lf[:, 0], li[:, 0])        # (B, H)
+        decay = jnp.exp(state.m + lf[:, 0] - m_new)
+        w_in = jnp.exp(li[:, 0] - m_new)
+        c_new = state.c * decay[..., None, None] + jnp.einsum(
+            "bhp,bhq->bhpq", kf[:, 0] * w_in[..., None], vf[:, 0]
+        )
+        n_new = state.n * decay[..., None] + kf[:, 0] * w_in[..., None]
+        num = jnp.einsum("bhp,bhpq->bhq", qf[:, 0], c_new)
+        den = jnp.abs(jnp.einsum("bhp,bhp->bh", qf[:, 0], n_new))
+        den = jnp.maximum(den, jnp.exp(-m_new))[..., None]
+        y = (num / den).reshape(b, 1, di)
+        new_state = MLSTMState(c=c_new, n=n_new, m=m_new, conv=new_tail)
+    else:
+        l = min(chunk, s)
+        assert s % l == 0, f"S={s} %% chunk {l}"
+        nc = s // l
+
+        def rc(t):
+            return t.reshape(b, nc, l, *t.shape[2:]).swapaxes(0, 1)
+
+        q_c, k_c, v_c = rc(q), rc(k), rc(v)   # bf16 scan xs (hc-xlstm-2)
+        li_c, lf_c = rc(li), rc(lf)
+
+        c0 = (state.c if state is not None
+              else jnp.zeros((b, h, p, p), jnp.float32))
+        n0 = (state.n if state is not None
+              else jnp.zeros((b, h, p), jnp.float32))
+        m0 = (state.m if state is not None
+              else jnp.full((b, h), -1e30, jnp.float32))
+
+        tri = jnp.tril(jnp.ones((l, l), jnp.float32))
+
+        def body(carry, inp):
+            c, n, m = carry
+            qc, kc, vc, lic, lfc = inp
+            cum = jnp.cumsum(lfc, axis=1)                    # (B, L, H)
+            total = cum[:, -1]                               # (B, H)
+            # log survival of j's write at chunk end
+            w_end = total[:, None] - cum + lic               # (B, L, H)
+            m_c = jnp.max(w_end, axis=1)                     # (B, H)
+            m_new = jnp.maximum(m + total, m_c)
+            sc_old = jnp.exp(m + total - m_new)
+            wj = jnp.exp(w_end - m_new[:, None])             # (B, L, H)
+            # §Perf hc-xlstm-1: gates/state/stabilizers stay f32; the dense
+            # chunk matmuls run on bf16 operands with f32 accumulation
+            # (flash-attention-style) — halves chunk HBM traffic.
+            qb, kb, vb = qc, kc, vc           # already bf16
+            f32 = jnp.float32
+            # XLA:CPU cannot execute bf16 x bf16 -> f32 dots (DotThunk);
+            # accumulate in f32 on accelerators, bf16+cast on CPU.
+            pe = f32 if jax.default_backend() != "cpu" else jnp.bfloat16
+            kwj = kc.astype(f32) * wj[..., None]
+            c_new = c * sc_old[..., None, None] + jnp.einsum(
+                "blhp,blhq->bhpq", kwj.astype(jnp.bfloat16), vb,
+                preferred_element_type=pe).astype(f32)
+            n_new = n * sc_old[..., None] + jnp.einsum("blhp->bhp", kwj)
+            # per-position stabilizers
+            rel = cum[:, :, None, :] - cum[:, None, :, :] + lic[:, None]
+            rel = jnp.where(tri[None, :, :, None] > 0, rel, -1e30)
+            m_i = jnp.maximum(jnp.max(rel, axis=2), m[:, None] + cum)
+            # intra-chunk
+            sc_rel = jnp.exp(rel - m_i[:, :, None])          # (B,L,L,H)
+            scores = jnp.einsum("blhp,bjhp->bljh", qb, kb,
+                                preferred_element_type=pe).astype(f32)
+            num_intra = jnp.einsum(
+                "bljh,bjhq->blhq",
+                (scores * sc_rel).astype(jnp.bfloat16), vb,
+                preferred_element_type=pe).astype(f32)
+            den_intra = jnp.einsum("bljh->blh", scores * sc_rel)
+            # inter-chunk (old state)
+            sc_i = jnp.exp(m[:, None] + cum - m_i)           # (B, L, H)
+            num_inter = jnp.einsum(
+                "blhp,bhpq->blhq", qb, c.astype(jnp.bfloat16),
+                preferred_element_type=pe).astype(f32) * sc_i[..., None]
+            den_inter = jnp.einsum("blhp,bhp->blh", qc.astype(f32), n) * sc_i
+            num = num_intra + num_inter
+            den = jnp.maximum(jnp.abs(den_intra + den_inter),
+                              jnp.exp(-m_i))
+            # bf16 chunk outputs: halves the scan's output-stacking traffic
+            return (c_new, n_new, m_new), (
+                num / den[..., None]).astype(jnp.bfloat16)
+
+        (cf, nf, mf), y_c = jax.lax.scan(
+            body, (c0, n0, m0), (q_c, k_c, v_c, li_c, lf_c))
+        y = y_c.swapaxes(0, 1).reshape(b, s, di)
+        new_state = (MLSTMState(c=cf, n=nf, m=mf, conv=new_tail)
+                     if state is not None else None)
+
+    y = y.astype(xin.dtype) + params["lskip"].astype(xin.dtype) * xc
+    y = y * jax.nn.silu(gate.astype(jnp.float32)).astype(y.dtype)
+    y = rmsnorm({"scale": params["norm_scale"]}, y)
+    out = jnp.einsum("bse,ed->bsd", y, params["w_down"])
+    return out, new_state
+
+
+def mlstm_init_state(cfg: ArchConfig, batch: int) -> MLSTMState:
+    di, h, p, dc = _mdims(cfg)
+    return MLSTMState(
+        c=jnp.zeros((batch, h, p, p), jnp.float32),
+        n=jnp.zeros((batch, h, p), jnp.float32),
+        m=jnp.full((batch, h), -1e30, jnp.float32),
+        conv=jnp.zeros((batch, dc - 1, di), jnp.bfloat16),
+    )
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+class SLSTMState(NamedTuple):
+    c: Array   # (B, di)
+    n: Array   # (B, di)
+    h: Array   # (B, di)
+    m: Array   # (B, di)
+
+
+def slstm_spec(cfg: ArchConfig):
+    d = cfg.d_model
+    h = cfg.n_heads
+    p = d // h
+    return {
+        "w_gates": ParamSpec((d, 4 * d), ("embed", "mlp")),
+        # §Perf hc-xlstm-4: recurrent matrix REPLICATED (8 MB) — sharding it
+        # over "model" forced an all-reduce every timestep of the sequential
+        # scan (2.1 MB x 24576 steps measured)
+        "r_gates": ParamSpec((h, p, 4 * p), ("heads", "head_dim", None),
+                             jnp.float32, "scaled"),
+        "b_gates": ParamSpec((4 * d,), ("mlp",), jnp.float32, "zeros"),
+        "norm_scale": ParamSpec((d,), ("embed",), jnp.float32, "ones"),
+        "w_mlp_in": ParamSpec((d, 2 * d), ("embed", "mlp")),
+        "w_mlp_out": ParamSpec((d, d), ("mlp", "embed")),
+    }
+
+
+def slstm_apply(
+    params,
+    cfg: ArchConfig,
+    xin: Array,
+    state: Optional[SLSTMState] = None,
+) -> Tuple[Array, Optional[SLSTMState]]:
+    b, s, d = xin.shape
+    h = cfg.n_heads
+    p = d // h
+
+    gx = jnp.einsum("bsd,dg->bsg", xin.astype(jnp.float32),
+                    params["w_gates"].astype(jnp.float32)
+                    ) + params["b_gates"]
+
+    if state is None:
+        st = SLSTMState(
+            c=jnp.zeros((b, d), jnp.float32),
+            n=jnp.zeros((b, d), jnp.float32),
+            h=jnp.zeros((b, d), jnp.float32),
+            m=jnp.full((b, d), -1e30, jnp.float32),
+        )
+    else:
+        st = state
+
+    r = params["r_gates"]                                   # (H, P, 4P)
+
+    def step(carry: SLSTMState, g_t: Array):
+        # NOTE(§Perf hc-xlstm-8, REFUTED): pinning the carry sharding per
+        # step forced a reshard inside the checkpointed segment and doubled
+        # both memory and collective terms — per-step constraints inside
+        # scan bodies fight the partitioner; leave the carry layout to
+        # propagation.
+        hh = carry.h.reshape(b, h, p)
+        gr = jnp.einsum("bhp,hpq->bhq", hh, r)              # (B, H, 4P)
+        z_r, i_r, f_r, o_r = jnp.split(gr, 4, axis=-1)      # (B, H, P)
+        g = g_t.reshape(b, 4, d)
+        z = jnp.tanh(g[:, 0] + z_r.reshape(b, d))
+        li = g[:, 1] + i_r.reshape(b, d)                    # log input gate
+        lf = jax.nn.log_sigmoid(g[:, 2] + f_r.reshape(b, d))
+        o = jax.nn.sigmoid(g[:, 3] + o_r.reshape(b, d))
+        m_new = jnp.maximum(lf + carry.m, li)
+        ig = jnp.exp(li - m_new)
+        fg = jnp.exp(lf + carry.m - m_new)
+        c_new = fg * carry.c + ig * z
+        n_new = fg * carry.n + ig
+        h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+        return SLSTMState(c=c_new, n=n_new, h=h_new, m=m_new), h_new
+
+    gx_t = gx.swapaxes(0, 1)                                # (S, B, 4d)
+    # §Perf hc-xlstm-5: segment-checkpointed recurrence — the backward pass
+    # of a flat 4096-step scan stacks every per-step intermediate (the
+    # dominant HBM term, measured 1.65 TB/device); checkpointing 64-step
+    # segments saves only the (B, d) boundary states and recomputes inside.
+    seg = 64
+    if s % seg == 0 and s > seg:
+        gseg = gx_t.reshape(s // seg, seg, b, 4 * d)
+
+        @jax.checkpoint
+        def outer(carry, g):
+            return jax.lax.scan(step, carry, g)
+
+        st_f, hs = jax.lax.scan(outer, st, gseg)
+        hs = hs.reshape(s, b, d)
+    else:
+        st_f, hs = jax.lax.scan(step, st, gx_t)
+    y = hs.swapaxes(0, 1).astype(xin.dtype)                 # (B, S, d)
+    y = rmsnorm({"scale": params["norm_scale"]}, y)
+    u = jnp.einsum("bsd,de->bse", y, params["w_mlp_in"])
+    u1, u2 = jnp.split(u, 2, axis=-1)                       # GeGLU halves
+    z = jax.nn.gelu(u1.astype(jnp.float32)).astype(u2.dtype) * u2
+    out = jnp.einsum("bse,ed->bsd", z, params["w_mlp_out"])
+    new_state = st_f if state is not None else None
+    return out, new_state
+
+
+def slstm_init_state(cfg: ArchConfig, batch: int) -> SLSTMState:
+    d = cfg.d_model
+    return SLSTMState(
+        c=jnp.zeros((batch, d), jnp.float32),
+        n=jnp.zeros((batch, d), jnp.float32),
+        h=jnp.zeros((batch, d), jnp.float32),
+        m=jnp.full((batch, d), -1e30, jnp.float32),
+    )

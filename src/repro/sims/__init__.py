@@ -1,0 +1,2 @@
+"""The paper's four benchmark simulations (§3.1): cell clustering, cell
+proliferation, epidemiology (SIR), oncology (tumor spheroid)."""

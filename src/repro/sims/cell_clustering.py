@@ -1,0 +1,68 @@
+"""Cell clustering (paper §3.1): two cell types with same-type adhesion and
+short-range repulsion self-organize into clusters — the paper's canonical
+benchmark (Figure 3 shows its first three iterations)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AgentSchema, Behavior
+from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
+from repro.sims.common import make_engine, run_sim, uniform_positions
+
+SCHEMA = AgentSchema.create({
+    "diameter": ((), jnp.float32),
+    "ctype": ((), jnp.int32),
+})
+
+
+def behavior(repulsion=2.0, adhesion=0.6, radius=2.0, max_step=0.5
+             ) -> Behavior:
+    return Behavior(
+        schema=SCHEMA,
+        pair_fn=soft_repulsion_adhesion,
+        pair_attrs=("diameter", "ctype"),
+        update_fn=displacement_update,
+        radius=radius,
+        params={"repulsion": repulsion, "adhesion": adhesion,
+                "same_type_only": 1.0, "max_step": max_step},
+    )
+
+
+def init(engine, n_agents: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    pos = uniform_positions(rng, n_agents, engine.geom)
+    attrs = {
+        "diameter": np.full((n_agents,), 1.0, np.float32),
+        "ctype": rng.integers(0, 2, n_agents).astype(np.int32),
+    }
+    return engine.init_state(pos, attrs, seed=seed)
+
+
+def same_type_fraction(state, engine) -> float:
+    """Clustering metric: fraction of neighbor pairs with equal type."""
+    import jax
+
+    from repro.core.neighbors import pair_accumulate
+
+    def pair_fn(ai, aj, disp, dist2, params):
+        same = (ai["ctype"] == aj["ctype"]).astype(jnp.float32)
+        return {"same": same, "cnt": jnp.ones_like(same)}
+
+    acc = pair_accumulate(engine.geom, state.soa, pair_fn, ("ctype",),
+                          engine.behavior.radius, {})
+    same = float(jnp.sum(acc["same"]))
+    cnt = float(jnp.sum(acc["cnt"]))
+    return same / max(cnt, 1.0)
+
+
+def run(n_agents=400, steps=30, seed=0, mesh=None, mesh_shape=(1, 1),
+        interior=(8, 8), delta=None):
+    eng = make_engine(behavior(), interior=interior, mesh_shape=mesh_shape,
+                      delta=delta)
+    state = init(eng, n_agents, seed)
+    f0 = same_type_fraction(state, eng)
+    state, _ = run_sim(eng, state, steps, mesh=mesh)
+    f1 = same_type_fraction(state, eng)
+    return state, {"same_frac_initial": f0, "same_frac_final": f1}

@@ -1,0 +1,70 @@
+"""Shared scaffolding for the paper's benchmark simulations (§3.1)."""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AgentSchema, Behavior, DeltaConfig, Engine, GridGeom
+from repro.core.engine import SimState, total_agents
+
+
+@dataclasses.dataclass
+class SimSetup:
+    engine: Engine
+    state: SimState
+    step: Callable
+
+
+def make_engine(
+    behavior: Behavior,
+    *,
+    interior: Tuple[int, int] = (8, 8),
+    mesh_shape: Tuple[int, int] = (1, 1),
+    cell_size: float = 2.0,
+    cap: int = 24,
+    boundary: str = "closed",
+    delta: Optional[DeltaConfig] = None,
+    dt: float = 0.1,
+    mesh=None,
+) -> Engine:
+    geom = GridGeom(cell_size=cell_size, interior=interior,
+                    mesh_shape=mesh_shape, cap=cap, boundary=boundary)
+    return Engine(geom=geom, behavior=behavior,
+                  delta_cfg=delta or DeltaConfig(enabled=False), dt=dt)
+
+
+def uniform_positions(rng: np.random.Generator, n: int, geom: GridGeom,
+                      margin: float = 0.5) -> np.ndarray:
+    lx, ly = geom.domain_size
+    return rng.uniform([margin, margin], [lx - margin, ly - margin],
+                       size=(n, 2)).astype(np.float32)
+
+
+def disk_positions(rng: np.random.Generator, n: int, center, radius
+                   ) -> np.ndarray:
+    th = rng.uniform(0, 2 * np.pi, n)
+    r = radius * np.sqrt(rng.uniform(0, 1, n))
+    return np.stack([center[0] + r * np.cos(th),
+                     center[1] + r * np.sin(th)], axis=1).astype(np.float32)
+
+
+def run_sim(engine: Engine, state: SimState, steps: int, mesh=None,
+            collect: Optional[Callable] = None):
+    """Drive a simulation; optionally collect per-step metrics."""
+    if mesh is not None:
+        step = engine.make_sharded_step(mesh)
+    else:
+        step = engine.make_local_step()
+    r = max(int(engine.delta_cfg.refresh_interval), 1)
+    series = []
+    for i in range(steps):
+        full = (not engine.delta_cfg.enabled) or (i % r == 0)
+        state = step(state, full_halo=full)
+        if collect is not None:
+            series.append(collect(state))
+    return state, series

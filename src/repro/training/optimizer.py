@@ -1,0 +1,94 @@
+"""AdamW with Warmup-Stable-Decay (WSD) schedule (MiniCPM, arXiv:2404.06395).
+
+Optimizer state keeps f32 master weights plus f32 first/second moments;
+model params stay bf16 (recast from the master copy each step).  All state
+arrays inherit the parameter sharding, so the optimizer is ZeRO-sharded for
+free wherever params are FSDP-sharded.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+@dataclasses.dataclass(frozen=True)
+class WSDSchedule:
+    peak_lr: float = 3e-4
+    warmup_steps: int = 100
+    stable_steps: int = 1000
+    decay_steps: int = 100
+    final_frac: float = 0.1
+
+    def __call__(self, step: Array) -> Array:
+        s = step.astype(jnp.float32)
+        warm = self.peak_lr * jnp.minimum(s / max(self.warmup_steps, 1), 1.0)
+        t_decay = s - (self.warmup_steps + self.stable_steps)
+        frac = jnp.clip(t_decay / max(self.decay_steps, 1), 0.0, 1.0)
+        decay_mult = 1.0 - (1.0 - self.final_frac) * frac
+        return jnp.where(
+            s < self.warmup_steps + self.stable_steps, warm,
+            self.peak_lr * decay_mult,
+        )
+
+
+class AdamWState(NamedTuple):
+    step: Array
+    master: Any   # f32 copy of params
+    m: Any
+    v: Any
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: WSDSchedule = WSDSchedule()
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+
+    def init(self, params) -> AdamWState:
+        f32 = lambda p: p.astype(jnp.float32)
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return AdamWState(
+            step=jnp.zeros((), jnp.int32),
+            master=jax.tree_util.tree_map(f32, params),
+            m=jax.tree_util.tree_map(zeros, params),
+            v=jax.tree_util.tree_map(zeros, params),
+        )
+
+    def update(self, grads, state: AdamWState, params
+               ) -> Tuple[Any, AdamWState]:
+        step = state.step + 1
+        lr = self.schedule(step)
+        b1, b2 = self.b1, self.b2
+        bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+        bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+        def upd(g, m, v, master, p):
+            g = g.astype(jnp.float32)
+            m2 = b1 * m + (1 - b1) * g
+            v2 = b2 * v + (1 - b2) * g * g
+            mh = m2 / bc1
+            vh = v2 / bc2
+            new_master = master - lr * (
+                mh / (jnp.sqrt(vh) + self.eps) + self.weight_decay * master
+            )
+            return m2, v2, new_master, new_master.astype(p.dtype)
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state.m)
+        flat_v = treedef.flatten_up_to(state.v)
+        flat_w = treedef.flatten_up_to(state.master)
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(*t) for t in zip(flat_g, flat_m, flat_v, flat_w, flat_p)]
+        m2 = treedef.unflatten([o[0] for o in out])
+        v2 = treedef.unflatten([o[1] for o in out])
+        w2 = treedef.unflatten([o[2] for o in out])
+        p2 = treedef.unflatten([o[3] for o in out])
+        return p2, AdamWState(step=step, master=w2, m=m2, v=v2)

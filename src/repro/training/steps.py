@@ -1,0 +1,136 @@
+"""Train / serve step functions — the units the dry-run lowers and compiles.
+
+``make_train_step`` builds ``(params, opt_state, batch) -> (params,
+opt_state, metrics)`` with optional gradient accumulation and optional
+delta-encoded gradient compression on the data-parallel all-reduce (the
+paper's §2.3 insight applied beyond-paper; see
+repro.distributed.grad_compress).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.models.model import Model
+from repro.training.optimizer import AdamW, AdamWState
+
+Array = jax.Array
+
+
+def cross_entropy(logits: Array, labels: Array, mask: Optional[Array] = None
+                  ) -> Array:
+    """Mean token cross-entropy in f32; logits (B, S, V), labels (B, S)."""
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - gold
+    if mask is not None:
+        m = mask.astype(jnp.float32)
+        return jnp.sum(nll * m) / jnp.maximum(jnp.sum(m), 1.0)
+    return jnp.mean(nll)
+
+
+def loss_fn(model: Model, params, batch: Dict[str, Array],
+            backend: str = "chunked", remat: str = "dots") -> Array:
+    cfg = model.cfg
+    logits = model.logits(params, batch, backend=backend, remat=remat)
+    if cfg.family == "vlm":
+        # loss only on the text span (logits cover patches ++ text)
+        logits = logits[:, cfg.n_patches:]
+    return cross_entropy(logits, batch["labels"], batch.get("loss_mask"))
+
+
+def make_train_step(
+    model: Model,
+    opt: AdamW,
+    accum_steps: int = 1,
+    backend: str = "chunked",
+    remat: str = "dots",
+    grad_transform: Optional[Callable] = None,
+):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``grad_transform(grads, ctx) -> (grads, ctx)`` hooks gradient compression
+    between backward and optimizer (identity if None).
+    """
+
+    def compute_grads(params, batch):
+        if accum_steps == 1:
+            return jax.value_and_grad(
+                lambda p: loss_fn(model, p, batch, backend, remat))(params)
+
+        def micro(carry, mb):
+            loss_acc, g_acc = carry
+            l, g = jax.value_and_grad(
+                lambda p: loss_fn(model, p, mb, backend, remat))(params)
+            g_acc = jax.tree_util.tree_map(jnp.add, g_acc, g)
+            return (loss_acc + l, g_acc), None
+
+        def split(x):
+            b = x.shape[0]
+            return x.reshape((accum_steps, b // accum_steps) + x.shape[1:])
+
+        micro_batches = jax.tree_util.tree_map(split, batch)
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss, grads), _ = jax.lax.scan(
+            micro, (jnp.float32(0.0), zeros), micro_batches)
+        inv = 1.0 / accum_steps
+        return loss * inv, jax.tree_util.tree_map(
+            lambda g: g * inv, grads)
+
+    def train_step(params, opt_state: AdamWState, batch, grad_ctx=None):
+        loss, grads = compute_grads(params, batch)
+        if grad_transform is not None:
+            grads, grad_ctx = grad_transform(grads, grad_ctx)
+        new_params, new_opt = opt.update(grads, opt_state, params)
+        gnorm = jnp.sqrt(sum(
+            jnp.sum(g.astype(jnp.float32) ** 2)
+            for g in jax.tree_util.tree_leaves(grads)))
+        metrics = {"loss": loss, "grad_norm": gnorm,
+                   "lr": opt.schedule(new_opt.step)}
+        if grad_transform is not None:
+            return new_params, new_opt, metrics, grad_ctx
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def make_serve_decode_step(model: Model):
+    """decode_step(params, cache, tokens, index) -> (logits, cache)."""
+
+    def step(params, cache, tokens: Array, index: Array):
+        b = tokens.shape[0]
+        max_len = _cache_len(model.cfg, cache)
+        length_mask = (jnp.arange(max_len)[None, :]
+                       <= index) & jnp.ones((b, 1), jnp.bool_)
+        logits, new_cache = model.decode_step(
+            params, tokens, cache, index, length_mask)
+        return logits, new_cache
+
+    return step
+
+
+def _cache_len(cfg: ArchConfig, cache) -> int:
+    if cfg.family in ("dense", "moe", "vlm"):
+        if cfg.attention == "mla":
+            return cache.shape[2]
+        return cache[0].shape[3]
+    if cfg.family == "hybrid":
+        return cache["attn"][0].shape[3]
+    if cfg.family == "ssm":
+        return 1  # recurrent state only; mask unused
+    raise ValueError(cfg.family)
+
+
+def make_prefill_step(model: Model):
+    def step(params, batch, cache):
+        return model.prefill(params, batch, cache)
+
+    return step

@@ -1,0 +1,225 @@
+"""Unit + property tests for the TeraAgent core engine (single device)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    AgentSchema, Behavior, DeltaConfig, Engine, GridGeom, total_agents,
+)
+from repro.core.agent_soa import AgentSoA, POS
+from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
+from repro.core.delta import (
+    DeltaConfig as DC, decode_delta, encode_delta, payload_bytes,
+)
+from repro.core.grid import bin_agents
+from repro.core import load_balance as lb
+
+
+SCHEMA = AgentSchema.create({
+    "diameter": ((), jnp.float32),
+    "ctype": ((), jnp.int32),
+})
+
+
+def make_engine(interior=(8, 8), cap=16, boundary="closed", delta=None):
+    geom = GridGeom(cell_size=2.0, interior=interior, mesh_shape=(1, 1),
+                    cap=cap, boundary=boundary)
+    beh = Behavior(
+        schema=SCHEMA, pair_fn=soft_repulsion_adhesion,
+        pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+        radius=2.0,
+        params={"repulsion": 2.0, "adhesion": 0.4, "same_type_only": 1.0,
+                "max_step": 0.5})
+    return Engine(geom=geom, behavior=beh,
+                  delta_cfg=delta or DeltaConfig(enabled=False), dt=0.1)
+
+
+def make_state(eng, n=200, seed=0):
+    rng = np.random.default_rng(seed)
+    lx, ly = eng.geom.domain_size
+    pos = rng.uniform(0.5, lx - 0.5, size=(n, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": rng.integers(0, 2, n).astype(np.int32)}
+    return eng.init_state(pos, attrs, seed=seed)
+
+
+# ---------------------------------------------------------------------------
+# binning
+# ---------------------------------------------------------------------------
+
+def test_binning_places_agents_in_correct_cells():
+    eng = make_engine()
+    geom = eng.geom
+    pos = np.array([[0.1, 0.1], [3.9, 0.1], [15.9, 15.9]], np.float32)
+    attrs = {
+        POS: jnp.asarray(pos),
+        "gid_rank": jnp.zeros(3, jnp.int32),
+        "gid_count": jnp.arange(3, dtype=jnp.int32),
+        "diameter": jnp.ones(3, jnp.float32),
+        "ctype": jnp.zeros(3, jnp.int32),
+    }
+    soa, dropped = bin_agents(geom, attrs, jnp.ones(3, bool),
+                              jnp.zeros(2, jnp.float32))
+    assert int(dropped) == 0
+    # cell (0,0) interior = index (1,1); (3.9,0.1) -> (2,1); (15.9,15.9)->(8,8)
+    assert bool(soa.valid[1, 1].any())
+    assert bool(soa.valid[2, 1].any())
+    assert bool(soa.valid[8, 8].any())
+    assert int(soa.valid.sum()) == 3
+
+
+def test_binning_overflow_detected():
+    eng = make_engine(cap=2)
+    geom = eng.geom
+    n = 5
+    attrs = {
+        POS: jnp.full((n, 2), 0.5),
+        "gid_rank": jnp.zeros(n, jnp.int32),
+        "gid_count": jnp.arange(n, dtype=jnp.int32),
+        "diameter": jnp.ones(n, jnp.float32),
+        "ctype": jnp.zeros(n, jnp.int32),
+    }
+    _, dropped = bin_agents(geom, attrs, jnp.ones(n, bool),
+                            jnp.zeros(2, jnp.float32))
+    assert int(dropped) == 3
+
+
+# ---------------------------------------------------------------------------
+# step invariants
+# ---------------------------------------------------------------------------
+
+def test_agent_count_conserved_and_finite():
+    eng = make_engine()
+    state = make_state(eng, 300)
+    step = eng.make_local_step()
+    for _ in range(10):
+        state = step(state, full_halo=True)
+    assert total_agents(state) == 300
+    assert int(state.dropped.sum()) == 0
+    pos = np.asarray(state.soa.attrs[POS])
+    assert np.isfinite(pos).all()
+
+
+def test_closed_boundary_keeps_agents_inside():
+    eng = make_engine(boundary="closed")
+    state = make_state(eng, 200)
+    step = eng.make_local_step()
+    for _ in range(15):
+        state = step(state, full_halo=True)
+    lx, ly = eng.geom.domain_size
+    pos = np.asarray(state.soa.attrs[POS]).reshape(-1, 2)
+    v = np.asarray(state.soa.valid).ravel()
+    assert (pos[v] >= 0).all() and (pos[v, 0] <= lx).all() \
+        and (pos[v, 1] <= ly).all()
+
+
+def test_gids_remain_unique():
+    eng = make_engine()
+    state = make_state(eng, 250)
+    step = eng.make_local_step()
+    for _ in range(5):
+        state = step(state, full_halo=True)
+    v = np.asarray(state.soa.valid).ravel()
+    gr = np.asarray(state.soa.attrs["gid_rank"]).ravel()[v]
+    gc = np.asarray(state.soa.attrs["gid_count"]).ravel()[v]
+    keys = gr.astype(np.int64) * (1 << 32) + gc
+    assert len(np.unique(keys)) == len(keys)
+
+
+# ---------------------------------------------------------------------------
+# delta codec (module-level, property-based)
+# ---------------------------------------------------------------------------
+
+@given(seed=st.integers(0, 2**31 - 1),
+       amp=st.floats(1e-2, 1e2),
+       qdtype=st.sampled_from(["int8", "int16"]))
+@settings(max_examples=20, deadline=None)
+def test_delta_closed_loop_refs_stay_in_sync(seed, amp, qdtype):
+    """Sender's new reference must equal receiver's reconstruction, and the
+    error is bounded by the quantization step."""
+    cfg = DC(enabled=True, qdtype=jnp.dtype(qdtype), refresh_interval=8)
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    ref = {"pos": jax.random.normal(k1, (16, 4), jnp.float32) * amp,
+           "flag": jnp.zeros((16,), jnp.int32)}
+    x = {"pos": ref["pos"] + jax.random.normal(k2, (16, 4)) * amp * 0.01,
+         "flag": jnp.ones((16,), jnp.int32)}
+    payload, ref_sender = encode_delta(x, ref, cfg)
+    recon, ref_receiver = decode_delta(payload, ref, cfg)
+    for k in ref_sender:
+        np.testing.assert_array_equal(np.asarray(ref_sender[k]),
+                                      np.asarray(ref_receiver[k]))
+    qmax = 127.0 if qdtype == "int8" else 32767.0
+    err = np.max(np.abs(np.asarray(recon["pos"]) - np.asarray(x["pos"])))
+    max_delta = np.max(np.abs(np.asarray(x["pos"] - ref["pos"])))
+    # quantization half-step + f32 rounding on values of magnitude ~amp
+    assert err <= max_delta / qmax * 0.51 + 4e-6 * amp
+    # non-float attrs pass through exactly
+    np.testing.assert_array_equal(np.asarray(recon["flag"]),
+                                  np.asarray(x["flag"]))
+
+
+def test_delta_payload_bytes_reduction():
+    cfg8 = DC(enabled=True, qdtype=jnp.int8)
+    ref = {"pos": jnp.zeros((64, 4), jnp.float32)}
+    x = {"pos": jnp.ones((64, 4), jnp.float32)}
+    p8, _ = encode_delta(x, ref, cfg8)
+    full_bytes = payload_bytes(x)
+    assert payload_bytes(p8) <= full_bytes // 4 + 8  # + scale scalar
+
+
+def test_delta_engine_drift_bounded():
+    """End-to-end: delta-encoded halo exchange drifts < 1e-3 vs exact."""
+    eng_exact = make_engine()
+    eng_delta = make_engine(delta=DeltaConfig(
+        enabled=True, qdtype=jnp.int16, refresh_interval=8))
+    s1 = make_state(eng_exact, 200)
+    s2 = make_state(eng_delta, 200)
+    step1 = eng_exact.make_local_step()
+    step2 = eng_delta.make_local_step()
+    for i in range(10):
+        s1 = step1(s1, full_halo=True)
+        s2 = step2(s2, full_halo=(i % 8 == 0))
+    p1 = np.sort(np.asarray(s1.soa.attrs[POS]).reshape(-1, 2)[
+        np.asarray(s1.soa.valid).ravel()], axis=0)
+    p2 = np.sort(np.asarray(s2.soa.attrs[POS]).reshape(-1, 2)[
+        np.asarray(s2.soa.valid).ravel()], axis=0)
+    assert np.max(np.abs(p1 - p2)) < 1e-3
+
+
+# ---------------------------------------------------------------------------
+# load balancing planners
+# ---------------------------------------------------------------------------
+
+def test_rcb_improves_imbalance_on_skewed_density():
+    rng = np.random.default_rng(0)
+    w = rng.uniform(0, 1, size=(32, 32))
+    w[:8, :8] += 20.0  # hot corner
+    own_naive = np.repeat(np.repeat(
+        np.arange(16).reshape(4, 4), 8, axis=0), 8, axis=1)
+    before = lb.imbalance(lb.device_loads(own_naive, w, 16))
+    own = lb.plan_rcb(w, 16)
+    after = lb.imbalance(lb.device_loads(own, w, 16))
+    assert after < before * 0.5
+    assert set(np.unique(own)) == set(range(16))
+
+
+def test_diffusive_step_moves_load_toward_balance():
+    widths = np.array([8, 8, 8, 8])
+    col_w = np.ones(32)
+    col_w[:8] = 10.0  # device 0 overloaded
+    runtimes = np.array([10.0, 1.0, 1.0, 1.0])
+    new = lb.plan_diffusive(widths, col_w, runtimes)
+    assert new[0] < 8 and new.sum() == 32 and (new >= 1).all()
+
+
+def test_choose_mesh_shape_prefers_balanced_split():
+    w = np.ones((16, 16))
+    w[:, :4] = 100.0  # load concentrated in a y-band -> prefer y-splits
+    mx, my = lb.choose_mesh_shape(w, 4)
+    assert (mx, my) in [(1, 4), (2, 2), (4, 1)]
+    loads_chosen = w.reshape(mx, 16 // mx, my, 16 // my).sum(axis=(1, 3))
+    assert lb.imbalance(loads_chosen.ravel()) <= 0.01

@@ -1,0 +1,162 @@
+"""Distributed ABM engine tests.
+
+These run in subprocesses because they need XLA placeholder devices
+(``xla_force_host_platform_device_count``) which must be set before jax
+initializes — and the main pytest process must keep seeing 1 device.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 4, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    p = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+COMMON = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import AgentSchema, Behavior, DeltaConfig, Engine, GridGeom, total_agents
+from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
+
+schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                             "ctype": ((), jnp.int32)})
+beh = Behavior(schema=schema, pair_fn=soft_repulsion_adhesion,
+               pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+               radius=2.0, params={"repulsion": 2.0, "adhesion": 0.4,
+                                   "same_type_only": 1.0, "max_step": 0.5})
+rng = np.random.default_rng(0)
+n = 300
+pos = rng.uniform(0.5, 31.5, size=(n, 2)).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, size=(n,)).astype(np.int32)}
+
+def sorted_positions(state):
+    v = np.asarray(state.soa.valid).ravel()
+    p = np.asarray(state.soa.attrs["pos"]).reshape(-1, 2)[v]
+    return p[np.lexsort(p.T)]
+"""
+
+
+def test_distributed_matches_single_device_oracle():
+    out = run_sub(COMMON + """
+geom1 = GridGeom(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1), cap=16)
+eng1 = Engine(geom=geom1, behavior=beh, dt=0.1)
+s1 = eng1.init_state(pos, attrs, seed=0)
+step1 = eng1.make_local_step()
+for _ in range(10):
+    s1 = step1(s1, full_halo=True)
+
+geom4 = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=16)
+eng4 = Engine(geom=geom4, behavior=beh, dt=0.1)
+s4 = eng4.init_state(pos, attrs, seed=0)
+mesh = jax.make_mesh((2, 2), ("sx", "sy"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+step4 = eng4.make_sharded_step(mesh)
+for _ in range(10):
+    s4 = step4(s4, full_halo=True)
+
+assert total_agents(s4) == n, "agent loss"
+err = np.max(np.abs(sorted_positions(s1) - sorted_positions(s4)))
+assert err < 1e-4, f"divergence {err}"
+print("OK", err)
+""")
+    assert "OK" in out
+
+
+def test_distributed_delta_encoding_bounded_drift_and_byte_reduction():
+    out = run_sub(COMMON + """
+geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=16)
+mesh = jax.make_mesh((2, 2), ("sx", "sy"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+def run(enabled):
+    cfg = DeltaConfig(enabled=enabled, qdtype=jnp.int16, refresh_interval=8)
+    eng = Engine(geom=geom, behavior=beh, delta_cfg=cfg, dt=0.1)
+    s = eng.init_state(pos, attrs, seed=0)
+    step = eng.make_sharded_step(mesh)
+    byts = []
+    for i in range(12):
+        full = (not enabled) or (i % 8 == 0)
+        s = step(s, full_halo=full)
+        byts.append(int(s.halo_bytes[0, 0]))
+    return s, byts
+
+s0, b0 = run(False)
+s1, b1 = run(True)
+assert total_agents(s0) == total_agents(s1) == n
+drift = np.max(np.abs(sorted_positions(s0) - sorted_positions(s1)))
+assert drift < 0.05, drift
+ratio = b0[1] / b1[1]
+assert ratio > 1.2, f"no byte reduction: {ratio}"
+print("OK drift=%.5f ratio=%.2f" % (drift, ratio))
+""")
+    assert "OK" in out
+
+
+def test_toroidal_migration_wraps_domain_seam():
+    out = run_sub(COMMON + """
+# agents drifting east across the seam must reappear on device 0
+# NB: 2x1 mesh of 8x8-cell interiors => domain is 32 x 16
+pos = rng.uniform([0.5, 0.5], [31.5, 15.5], size=(n, 2)).astype(np.float32)
+geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 1), cap=16,
+                boundary="toroidal")
+mesh = jax.make_mesh((2, 1), ("sx", "sy"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+
+def drift_update(attrs, valid, acc, key, params, dt):
+    new = dict(attrs)
+    new["pos"] = attrs["pos"] + jnp.where(
+        valid[..., None], jnp.asarray([1.5, 0.0]), 0.0)
+    return new, valid, jnp.zeros_like(valid), None
+
+beh2 = Behavior(schema=schema, pair_fn=soft_repulsion_adhesion,
+                pair_attrs=("diameter", "ctype"), update_fn=drift_update,
+                radius=2.0, params=beh.params)
+eng = Engine(geom=geom, behavior=beh2, dt=1.0)
+s = eng.init_state(pos, attrs, seed=0)
+step = eng.make_sharded_step(mesh)
+for _ in range(30):   # 30 * 1.5 = 45 > domain length 32: full wrap
+    s = step(s, full_halo=True)
+assert total_agents(s) == n, total_agents(s)
+lx, ly = geom.domain_size
+p = np.asarray(s.soa.attrs["pos"]).reshape(-1, 2)[np.asarray(s.soa.valid).ravel()]
+assert (p[:, 0] >= 0).all() and (p[:, 0] <= lx).all()
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_spawn_conservation_distributed():
+    """Proliferation on 2x2 mesh: spawned counts equal single-device run."""
+    out = run_sub("""
+import numpy as np, jax
+from repro.sims import cell_proliferation as cp
+from repro.core.engine import total_agents
+
+mesh = jax.make_mesh((2, 2), ("sx", "sy"),
+                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+s1, m1 = cp.run(n_agents=40, steps=10, interior=(8, 8), mesh_shape=(1, 1))
+s4, m4 = cp.run(n_agents=40, steps=10, interior=(4, 4), mesh_shape=(2, 2),
+                mesh=mesh)
+# spawning is RNG-dependent per device, so counts differ slightly; both must
+# grow and conserve (no drops)
+assert m1["n_final"] > m1["n_initial"]
+assert m4["n_final"] > m4["n_initial"]
+assert int(s4.dropped.sum()) == 0
+print("OK", m1["n_final"], m4["n_final"])
+""")
+    assert "OK" in out

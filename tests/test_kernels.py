@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps + hypothesis
+property tests (deliverable c)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.kernels import ops, ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("bh,sq,skv,hd", [
+    (2, 128, 128, 64),
+    (1, 256, 256, 128),
+    (3, 128, 256, 32),
+])
+@pytest.mark.parametrize("causal", [True, False])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_matches_ref(bh, sq, skv, hd, causal, dtype):
+    if causal and sq != skv:
+        pytest.skip("causal requires square layout in this sweep")
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(k1, (bh, sq, hd), dtype)
+    k = jax.random.normal(k2, (bh, skv, hd), dtype)
+    v = jax.random.normal(k3, (bh, skv, hd), dtype)
+    from repro.kernels.flash_attention import flash_attention_kernel
+
+    out = flash_attention_kernel(q, k, v, causal=causal, interpret=True)
+    want = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(want, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_gqa_wrapper():
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(k1, (2, 8, 128, 64), jnp.float32)
+    k = jax.random.normal(k2, (2, 2, 128, 64), jnp.float32)
+    v = jax.random.normal(k3, (2, 2, 128, 64), jnp.float32)
+    out = ops.flash_attention_bhsd(q, k, v, causal=True)
+    # oracle via repeat
+    kr = jnp.repeat(k, 4, axis=1).reshape(16, 128, 64)
+    vr = jnp.repeat(v, 4, axis=1).reshape(16, 128, 64)
+    want = ref.flash_attention_ref(q.reshape(16, 128, 64), kr, vr,
+                                   causal=True).reshape(2, 8, 128, 64)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_model_path():
+    """Kernel must agree with the chunked-scan attention used in models."""
+    from repro.models.attention import sdpa_chunked
+
+    k1, k2, k3 = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(k1, (1, 4, 256, 64), jnp.float32)
+    k = jax.random.normal(k2, (1, 4, 256, 64), jnp.float32)
+    v = jax.random.normal(k3, (1, 4, 256, 64), jnp.float32)
+    got = ops.flash_attention_bhsd(q, k, v, causal=True)
+    want = sdpa_chunked(q, k, v, causal=True, chunk=128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=3e-5)
+
+
+# ---------------------------------------------------------------------------
+# neighbor interaction
+# ---------------------------------------------------------------------------
+
+def _random_cells(key, c, k, dtype=jnp.float32):
+    ks = jax.random.split(key, 6)
+    pos_i = jax.random.uniform(ks[0], (c, k, 2), dtype, 0, 10)
+    diam_i = jax.random.uniform(ks[1], (c, k), dtype, 0.5, 1.5)
+    type_i = jax.random.randint(ks[2], (c, k), 0, 2)
+    valid_i = jax.random.bernoulli(ks[3], 0.8, (c, k))
+    gid_i = jax.random.randint(ks[4], (c, k), 0, 10_000)
+    return pos_i, diam_i, type_i, valid_i, gid_i
+
+
+@pytest.mark.parametrize("c,k", [(8, 8), (16, 16), (4, 32)])
+def test_neighbor_force_matches_ref(c, k):
+    key = jax.random.PRNGKey(0)
+    k1, k2 = jax.random.split(key)
+    pos_i, diam_i, type_i, valid_i, gid_i = _random_cells(k1, c, k)
+    pos_j, diam_j, type_j, valid_j, gid_j = _random_cells(k2, c, 9 * k)
+    kw = dict(radius=2.0, repulsion=2.0, adhesion=0.4)
+    got = ops.neighbor_force(pos_i, diam_i, type_i, valid_i, gid_i,
+                             pos_j, diam_j, type_j, valid_j, gid_j, **kw)
+    want = ref.neighbor_force_ref(pos_i, diam_i, type_i, valid_i,
+                                  pos_j, diam_j, type_j, valid_j,
+                                  gid_i, gid_j, **kw)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# delta codec
+# ---------------------------------------------------------------------------
+
+@given(
+    n=st.sampled_from([8, 64, 256]),
+    l=st.sampled_from([4, 128]),
+    seed=st.integers(0, 2**31 - 1),
+    amplitude=st.floats(1e-3, 1e3),
+)
+@settings(max_examples=25, deadline=None)
+def test_delta_codec_roundtrip_error_bound(n, l, seed, amplitude):
+    """Property: |decode(encode(x)) - x| <= scale/2 (+eps), scale exact max."""
+    key = jax.random.PRNGKey(seed)
+    k1, k2 = jax.random.split(key)
+    ref_slab = jax.random.normal(k1, (n, l), jnp.float32) * amplitude
+    delta = jax.random.normal(k2, (n, l), jnp.float32) * amplitude * 0.01
+    x = ref_slab + delta
+    q, scale = ops.delta_encode(x, ref_slab)
+    out = ops.delta_decode(q, ref_slab, scale)
+    err = np.max(np.abs(np.asarray(out) - np.asarray(x)))
+    assert err <= float(scale) * 0.5 + 1e-6 * amplitude
+    assert q.dtype == jnp.int8
+
+
+def test_delta_codec_matches_ref():
+    key = jax.random.PRNGKey(3)
+    k1, k2 = jax.random.split(key)
+    r = jax.random.normal(k1, (64, 32), jnp.float32)
+    x = r + jax.random.normal(k2, (64, 32), jnp.float32) * 0.01
+    q, scale = ops.delta_encode(x, r)
+    want_q = ref.delta_encode_ref(x, r, scale)
+    np.testing.assert_array_equal(np.asarray(q), np.asarray(want_q))
+    out = ops.delta_decode(q, r, scale)
+    want_x = ref.delta_decode_ref(q, r, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want_x),
+                               rtol=1e-6)
+
+
+def test_delta_codec_wire_bytes():
+    """int8 payload is exactly 4x smaller than the f32 slab."""
+    x = jnp.ones((128, 16), jnp.float32)
+    q, scale = ops.delta_encode(x, jnp.zeros_like(x))
+    assert q.nbytes * 4 == x.nbytes
