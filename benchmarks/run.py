@@ -103,7 +103,6 @@ def bench_delta():
 
     for qd, label in ((jnp.int8, "int8"), (jnp.int16, "int16")):
         delta = DeltaConfig(enabled=True, qdtype=qd, refresh_interval=16)
-        eng = cell_clustering.make_engine if False else None
         # plain
         t0 = time.perf_counter()
         s_plain, _ = cell_clustering.run(n_agents=300, steps=8)
@@ -161,9 +160,8 @@ from repro.sims import cell_clustering
 
 for mesh_shape in ((1, 1), (2, 1), (2, 2)):
     n_dev = mesh_shape[0] * mesh_shape[1]
-    mesh = (jax.make_mesh(mesh_shape, ("sx", "sy"),
-                          axis_types=(jax.sharding.AxisType.Auto,) * 2)
-            if n_dev > 1 else None)
+    from repro.launch.mesh import make_abm_mesh
+    mesh = make_abm_mesh(mesh_shape) if n_dev > 1 else None
     interior = (16 // mesh_shape[0], 16 // mesh_shape[1])
     _ = cell_clustering.run(n_agents=800, steps=2, interior=interior,
                             mesh_shape=mesh_shape, mesh=mesh)
@@ -173,18 +171,88 @@ for mesh_shape in ((1, 1), (2, 1), (2, 2)):
     dt = (time.perf_counter() - t0) / 6
     print(f"scaling_devices_{n_dev},{dt*1e6:.1f},iter_s={dt:.4f}")
 """
+    run_sub_bench(code, "scaling_")
+
+
+def run_sub_bench(code: str, prefix: str) -> None:
+    """Run a benchmark snippet in a subprocess (placeholder devices need a
+    fresh XLA) and collect its ``prefix``-named CSV rows."""
     env = dict(os.environ)
     env["PYTHONPATH"] = str(ROOT / "src")
     p = subprocess.run([sys.executable, "-c", textwrap.dedent(code)],
                        capture_output=True, text=True, timeout=1800, env=env)
     if p.returncode != 0:
-        emit("scaling_error", 0.0, p.stderr.strip()[-120:])
+        emit(prefix + "error", 0.0, p.stderr.strip()[-120:])
         return
     for line in p.stdout.strip().splitlines():
-        if line.startswith("scaling_"):
+        if line.startswith(prefix):
             print(line)
             name, us, derived = line.split(",", 2)
             ROWS.append((name, float(us), derived))
+
+
+# ---------------------------------------------------------------------------
+# §2.4.5 analogue: dynamic load balancing (re-shard runtime)
+# ---------------------------------------------------------------------------
+
+def bench_rebalance():
+    """Gaussian-clustered density on a 2x2 mesh: report imbalance() and
+    iteration rate before/after the Rebalancer's one-time mass migration
+    (subprocess: needs 4 XLA host devices)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import time, numpy as np, jax, jax.numpy as jnp
+from repro.core import AgentSchema, Behavior, Engine, GridGeom, Rebalancer, total_agents
+from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
+from repro.core.reshard import current_imbalance
+from repro.launch.mesh import make_abm_mesh
+
+schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                             "ctype": ((), jnp.int32)})
+beh = Behavior(schema=schema, pair_fn=soft_repulsion_adhesion,
+               pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+               radius=2.0, params={"repulsion": 2.0, "adhesion": 0.6,
+                                   "same_type_only": 1.0, "max_step": 0.5})
+rng = np.random.default_rng(0)
+n = 600
+c = np.asarray([(8.0, 8.0), (24.0, 24.0)])[rng.integers(0, 2, n)]
+pos = np.clip(c + rng.normal(0, 3.0, (n, 2)), 0.5, 31.5).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, n).astype(np.int32)}
+
+geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=48)
+eng = Engine(geom=geom, behavior=beh, dt=0.1)
+state = eng.init_state(pos, attrs, seed=0)
+imb0 = current_imbalance(eng.geom, state)
+
+def rate(engine, st, steps=6):
+    step = engine.make_sharded_step(make_abm_mesh(engine.geom.mesh_shape))
+    st = step(st, full_halo=True)  # warm compile
+    t0 = time.perf_counter()
+    for _ in range(steps):
+        st = step(st, full_halo=True)
+    jax.block_until_ready(st.soa.valid)
+    dt = (time.perf_counter() - t0) / steps
+    return dt, st
+
+dt0, _ = rate(eng, state)
+rb = Rebalancer(every=1, threshold=0.2)
+t0 = time.perf_counter()
+eng2, state2, did = rb.maybe_reshard(eng, state)
+t_mig = time.perf_counter() - t0
+assert did, rb.history
+imb1 = current_imbalance(eng2.geom, state2)
+assert total_agents(state2) == n
+dt1, _ = rate(eng2, state2)
+rec = rb.history[-1]
+print(f"rebalance_imbalance,{t_mig*1e6:.1f},"
+      f"imb={imb0:.2f}->{imb1:.2f}_mesh={rec['mesh_from']}->{rec['mesh_to']}"
+      f"_rcb_bound={rec['rcb_bound']:.2f}".replace(" ", ""))
+print(f"rebalance_iter_rate,{dt1*1e6:.1f},"
+      f"agent_updates_per_s={n/dt1:.0f}_vs_{n/dt0:.0f}_static")
+"""
+    run_sub_bench(code, "rebalance_")
 
 
 # ---------------------------------------------------------------------------
@@ -216,8 +284,13 @@ def main() -> None:
     bench_delta()
     bench_sims()
     bench_scaling()
+    bench_rebalance()
     bench_roofline()
-    print(f"\n# {len(ROWS)} benchmark rows")
+    out = ROOT / "BENCH_results.json"
+    out.write_text(json.dumps(
+        [{"name": n, "us_per_call": us, "derived": d}
+         for n, us, d in ROWS], indent=1))
+    print(f"\n# {len(ROWS)} benchmark rows -> {out}")
 
 
 if __name__ == "__main__":

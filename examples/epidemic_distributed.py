@@ -14,12 +14,12 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DeltaConfig
+from repro.launch.mesh import make_abm_mesh
 from repro.sims import epidemiology
 
 
 def main():
-    mesh = jax.make_mesh((2, 2), ("sx", "sy"),
-                         axis_types=(jax.sharding.AxisType.Auto,) * 2)
+    mesh = make_abm_mesh((2, 2))
     delta = DeltaConfig(enabled=True, qdtype=jnp.int16, refresh_interval=8)
     state, metrics = epidemiology.run(
         n_agents=800, steps=60, initial_infected=20,

@@ -1,0 +1,39 @@
+"""JAX version-compat shims shared by the ABM core and the LM stack.
+
+The pinned environment may run an older JAX (0.4.x) than the code was
+written against; these wrappers paper over the renamed/moved APIs so both
+layers import one neutral module instead of each other.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``jax.make_mesh(..., axis_types=...)`` kwargs, version-compat.
+
+    ``jax.sharding.AxisType`` only exists on newer JAX releases (>= 0.5);
+    older ones reject the kwarg entirely, and their meshes are implicitly
+    Auto — so omitting it is behavior-preserving.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def shard_map_compat(f, mesh, in_specs, out_specs):
+    """Version-compat ``shard_map`` without replication checking.
+
+    Newer JAX (>= 0.5) exposes ``jax.shard_map`` with a ``check_vma`` flag;
+    older releases only have ``jax.experimental.shard_map.shard_map`` with
+    the equivalent ``check_rep`` flag.  Every shard_map in this repo goes
+    through here so the engine runs on both.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=False)
+    from jax.experimental.shard_map import shard_map as _shard_map
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=False)

@@ -6,6 +6,7 @@ Public API:
   Behavior                 — model definition (pair kernel + update)
   Engine / SimState        — distributed simulation engine
   DeltaConfig              — delta-encoded aura exchange (paper §2.3)
+  Rebalancer               — dynamic load balancing runtime (paper §2.4.5)
 """
 
 from repro.core.agent_soa import AgentSchema, AgentSoA, GID_COUNT, GID_RANK, POS
@@ -13,9 +14,10 @@ from repro.core.behaviors import Behavior
 from repro.core.delta import DeltaConfig
 from repro.core.engine import Engine, SimState, total_agents
 from repro.core.grid import GridGeom
+from repro.core.reshard import Rebalancer
 
 __all__ = [
     "AgentSchema", "AgentSoA", "GID_COUNT", "GID_RANK", "POS",
     "Behavior", "DeltaConfig", "Engine", "SimState", "GridGeom",
-    "total_agents",
+    "Rebalancer", "total_agents",
 ]

@@ -37,6 +37,7 @@ from repro.core.halo import (
     ShardComm,
     halo_exchange,
     init_refs,
+    shard_map_compat,
     take_slab,
 )
 from repro.core.neighbors import pair_accumulate
@@ -84,6 +85,11 @@ class Engine:
     behavior: Behavior
     delta_cfg: DeltaConfig = DeltaConfig(enabled=False)
     dt: float = 1.0
+    # Dynamic load balancing (paper §2.4.5, core.reshard): when
+    # rebalance_every > 0, Engine.run/drive checks the occupancy imbalance
+    # at that cadence and re-shards past imbalance_threshold.
+    rebalance_every: int = 0
+    imbalance_threshold: float = 0.5
 
     # ------------------------------------------------------------------
     # Initialization (host side, numpy-friendly)
@@ -93,9 +99,23 @@ class Engine:
         positions: np.ndarray,          # (N, 2) global positions
         attrs: Dict[str, np.ndarray],   # user attrs, (N, ...)
         seed: int = 0,
+        *,
+        gid_counters: Optional[np.ndarray] = None,  # per-rank spawn floors
+        it0: int = 0,                   # starting iteration counter
+        base_key: Optional[np.ndarray] = None,      # (2,) uint32 RNG root
     ) -> SimState:
         """Distributed initialization (paper §2.4.4): agents are created
-        directly on their authoritative device — no mass migration."""
+        directly on their authoritative device — no mass migration.
+
+        The re-shard / elastic-restore path (core.reshard) re-enters here
+        with extra carry: when ``attrs`` contains the ``gid_rank`` /
+        ``gid_count`` columns they are preserved verbatim instead of being
+        re-issued, and per-rank spawn counters resume past both the largest
+        carried id per rank and the optional ``gid_counters`` floors (so no
+        id is ever issued twice, even across mesh-shape changes).  ``it0``
+        seeds the iteration counter and ``base_key`` the RNG lineage: the
+        per-device keys are split from ``fold_in(base_key, it0)`` rather
+        than a fresh ``PRNGKey(seed)``."""
         geom = self.geom
         mx, my = geom.mesh_shape
         ix, iy = geom.interior
@@ -116,9 +136,32 @@ class Engine:
 
         bin_fn = jax.jit(partial(bin_agents, geom))
 
+        carried_gids = GID_RANK in attrs and GID_COUNT in attrs
+        if gid_counters is not None and not carried_gids:
+            raise ValueError(
+                "gid_counters floors require carried gid_rank/gid_count "
+                "columns in attrs — fresh ids would start at 0 and collide "
+                "with the historical ids the floors protect")
+        counters_next = np.zeros((mx * my,), dtype=np.int64)
+        if carried_gids:
+            g_rank = np.asarray(attrs[GID_RANK], np.int64)
+            g_count = np.asarray(attrs[GID_COUNT], np.int64)
+            in_range = (g_rank >= 0) & (g_rank < mx * my)
+            np.maximum.at(counters_next, g_rank[in_range],
+                          g_count[in_range] + 1)
+        if gid_counters is not None:
+            floors = np.asarray(gid_counters, np.int64).ravel()
+            if floors.size:
+                # Counters are exact issuance trackers (> every id ever
+                # issued by that rank, dead or alive), so the global max
+                # floor bounds ALL historical ids — applying it to every
+                # new rank keeps ids unique even when a smaller mesh
+                # dropped some ranks' floors and their witnesses died
+                # before a later re-expansion.
+                counters_next = np.maximum(counters_next, floors.max())
+
         blocks = []
         counters = np.zeros((mx, my), dtype=np.int32)
-        next_gid = 0
         for cx in range(mx):
             row = []
             for cy in range(my):
@@ -128,9 +171,9 @@ class Engine:
                 for name, (shape, dtype) in schema.all_specs().items():
                     if name == POS:
                         a = positions[sel].astype(np.float32)
-                    elif name == GID_RANK:
+                    elif name == GID_RANK and not carried_gids:
                         a = np.full((n,), cx * my + cy, dtype=np.int32)
-                    elif name == GID_COUNT:
+                    elif name == GID_COUNT and not carried_gids:
                         a = np.arange(n, dtype=np.int32)
                     else:
                         a = np.asarray(attrs[name][sel], dtype=dtype)
@@ -145,7 +188,9 @@ class Engine:
                         f"cell capacity overflow at init on device ({cx},{cy}): "
                         f"{int(dropped)} agents dropped; raise geom.cap"
                     )
-                counters[cx, cy] = n
+                counters[cx, cy] = max(
+                    counters_next[cx * my + cy],
+                    0 if carried_gids else n)
                 row.append(soa)
             blocks.append(row)
 
@@ -169,13 +214,18 @@ class Engine:
             for d, slab in refs0.items()
         }
 
-        keys = jax.random.split(jax.random.PRNGKey(seed), mx * my)
+        if base_key is not None:
+            root = jax.random.fold_in(
+                jnp.asarray(base_key, jnp.uint32), it0)
+        else:
+            root = jax.random.PRNGKey(seed)
+        keys = jax.random.split(root, mx * my)
         keys = keys.reshape(mx, my, -1)
 
         return SimState(
             soa=soa_g,
             refs=refs_g,
-            it=jnp.zeros((mx, my), jnp.int32),
+            it=jnp.full((mx, my), it0, jnp.int32),
             key=keys,
             gid_counter=jnp.asarray(counters),
             dropped=jnp.zeros((mx, my), jnp.int32),
@@ -355,10 +405,7 @@ class Engine:
         def make(full_halo: bool):
             f = partial(body, full_halo=full_halo)
             return jax.jit(
-                jax.shard_map(
-                    f, mesh=mesh, in_specs=spec, out_specs=spec,
-                    check_vma=False,
-                )
+                shard_map_compat(f, mesh=mesh, in_specs=spec, out_specs=spec)
             )
 
         step_full = make(True)
@@ -369,15 +416,66 @@ class Engine:
 
         return step
 
-    def run(self, state: SimState, n_steps: int, step_fn=None) -> SimState:
-        """Convenience driver honoring the delta refresh schedule."""
+    def drive(self, state: SimState, n_steps: int, step_fn=None,
+              rebalancer=None, collect=None):
+        """Full driver: delta refresh schedule + dynamic load balancing.
+
+        At the rebalancer's cadence the occupancy imbalance is checked and,
+        past the threshold, the state is mass-migrated onto a better mesh
+        (core.reshard); the step function is rebuilt for the new geometry
+        and the next aura exchange is forced to a full refresh (the re-shard
+        zeroed the delta references).  Returns ``(engine, state, series)`` —
+        the engine differs from ``self`` after a re-shard.
+        """
+        eng = self
+        if rebalancer is None and self.rebalance_every > 0:
+            from repro.core.reshard import Rebalancer
+            rebalancer = Rebalancer(every=self.rebalance_every,
+                                    threshold=self.imbalance_threshold)
         if step_fn is None:
-            step_fn = self.make_local_step()
+            step_fn = eng.make_local_step()
         r = max(int(self.delta_cfg.refresh_interval), 1)
+        force_full = False
+        series = []
         for i in range(n_steps):
-            full = (not self.delta_cfg.enabled) or (i % r == 0)
+            if rebalancer is not None and rebalancer.due(i):
+                eng, state, resharded = rebalancer.maybe_reshard(eng, state)
+                if resharded:
+                    step_fn = rebalancer.make_step(eng)
+                    force_full = True
+            full = force_full or (not self.delta_cfg.enabled) or (i % r == 0)
             state = step_fn(state, full_halo=full)
+            force_full = False
+            if collect is not None:
+                series.append(collect(state))
+        return eng, state, series
+
+    def run(self, state: SimState, n_steps: int, step_fn=None,
+            rebalancer=None) -> SimState:
+        """Convenience driver honoring the delta refresh schedule (and the
+        engine's rebalance knobs).  After a re-shard the final state lives
+        on a different mesh — pass an explicit rebalancer and read
+        ``rebalancer.engine`` afterwards, or use :meth:`drive`, which
+        returns the matching engine."""
+        had_handle = rebalancer is not None
+        eng, state, _ = self.drive(state, n_steps, step_fn=step_fn,
+                                   rebalancer=rebalancer)
+        warn_if_stale_engine(self, eng, had_handle)
         return state
+
+
+def warn_if_stale_engine(old: "Engine", new: "Engine",
+                         had_handle: bool) -> None:
+    """Warn when a driver discards a re-sharded engine the caller has no
+    handle to (they passed no Rebalancer): the returned state no longer
+    matches the engine they hold."""
+    if new is not old and not had_handle:
+        import warnings
+        warnings.warn(
+            f"a re-shard moved the state to mesh {new.geom.mesh_shape}; "
+            f"the engine you hold (mesh {old.geom.mesh_shape}) no longer "
+            "matches it — use Engine.drive() or pass an explicit "
+            "Rebalancer and read rebalancer.engine", stacklevel=3)
 
 
 def total_agents(state: SimState) -> int:

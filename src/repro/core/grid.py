@@ -67,6 +67,31 @@ class GridGeom:
         gx, gy = self.global_cells
         return gx * self.cell_size, gy * self.cell_size
 
+    @property
+    def box_grid(self) -> Tuple[int, int]:
+        """Global partitioning-box grid (paper §2.4.1): the granularity at
+        which the load-balance planners reason, ``box_factor`` NSG cells per
+        box edge."""
+        gx, gy = self.global_cells
+        if gx % self.box_factor or gy % self.box_factor:
+            raise ValueError(
+                f"box_factor {self.box_factor} must divide the global cell "
+                f"grid {(gx, gy)}")
+        return gx // self.box_factor, gy // self.box_factor
+
+    def with_mesh_shape(self, mesh_shape: Tuple[int, int]) -> "GridGeom":
+        """Same global domain re-partitioned over a different device mesh —
+        the geometry half of a re-shard (core.reshard).  The global cell grid
+        is invariant; only the per-device interior block changes."""
+        gx, gy = self.global_cells
+        mx, my = mesh_shape
+        if gx % mx or gy % my:
+            raise ValueError(
+                f"mesh {mesh_shape} does not divide the global cell grid "
+                f"{(gx, gy)}")
+        return dataclasses.replace(
+            self, mesh_shape=(mx, my), interior=(gx // mx, gy // my))
+
     def device_origin(self, coords: Tuple[Array, Array]) -> Array:
         """World-space origin of the device's interior region."""
         ox = coords[0] * self.interior[0] * self.cell_size

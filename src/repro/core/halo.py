@@ -39,6 +39,10 @@ from repro.core.grid import GridGeom
 
 Array = jax.Array
 
+# Re-exported for the engine and tests; the shim itself lives in the
+# layer-neutral repro.compat so the LM stack need not import ABM modules.
+from repro.compat import shard_map_compat  # noqa: E402,F401
+
 
 class Comm:
     """Spatial communication abstraction over a (sx, sy) device mesh."""

@@ -135,23 +135,34 @@ def widths_to_ownership(widths: np.ndarray) -> np.ndarray:
     return out
 
 
+def equal_split_loads(weights: np.ndarray,
+                      mesh_shape: Tuple[int, int]) -> np.ndarray:
+    """Per-device loads of the engine's equal-split partition: device (i, j)
+    owns the (BX/mx, BY/my) block of boxes at block-index (i, j)."""
+    bx, by = weights.shape
+    mx, my = mesh_shape
+    if bx % mx or by % my:
+        raise ValueError(
+            f"mesh {mesh_shape} does not divide the box grid {(bx, by)}")
+    return weights.reshape(mx, bx // mx, my, by // my).sum(axis=(1, 3)).ravel()
+
+
 def choose_mesh_shape(weights: np.ndarray, n_devices: int) -> Tuple[int, int]:
-    """Pick the (mx, my) factorization of ``n_devices`` minimizing RCB-free
-    equal-split imbalance over the density histogram — used by the elastic
-    re-shard path when the device count changes."""
+    """Pick the (mx, my) factorization of ``n_devices`` minimizing the
+    equal-split imbalance over the density histogram — the realizable half of
+    a re-shard plan (core.reshard) and the elastic path's mesh picker when
+    the device count changes.  All divisor factorizations are scanned (not
+    just powers of two) so degraded counts like 3 or 6 factorize too; ties
+    break toward the smaller mx."""
     best = None
-    m = 1
-    while m <= n_devices:
+    for m in range(1, n_devices + 1):
         if n_devices % m == 0:
             mx, my = m, n_devices // m
             bx, by = weights.shape
             if bx % mx == 0 and by % my == 0:
-                blocks = weights.reshape(mx, bx // mx, my, by // my)
-                loads = blocks.sum(axis=(1, 3)).ravel()
-                score = imbalance(loads)
+                score = imbalance(equal_split_loads(weights, (mx, my)))
                 if best is None or score < best[0]:
                     best = (score, (mx, my))
-        m *= 2
     if best is None:
         raise ValueError("no valid mesh factorization divides the histogram")
     return best[1]

@@ -1,0 +1,332 @@
+"""Re-shard runtime: dynamic load balancing wired into the live engine.
+
+The paper (§2.4.5) re-partitions at runtime with global RCB or diffusive
+planners and notes that a new global partitioning "differs substantially"
+from the old one, "causing mass migrations".  On TPU, XLA's static shapes
+make per-iteration ownership changes an anti-pattern, so this module applies
+load balancing at *re-shard boundaries* (DESIGN note in core.load_balance):
+
+1. ``occupancy_histogram`` reduces the sharded :class:`SimState` to the tiny
+   host-side per-box weight map the planners consume — agent counts per
+   partitioning box, optionally scaled by measured per-device runtimes (the
+   paper weights boxes by the owning rank's last-iteration runtime).
+2. :class:`Rebalancer` checks ``imbalance()`` at a configurable cadence
+   inside ``Engine.run``/``Engine.drive``; past a threshold it consults the
+   planners (``choose_mesh_shape`` for the realizable plan, ``plan_rcb`` /
+   ``plan_diffusive`` as box-granular bounds) and triggers a re-shard.
+3. The mass migration is paid exactly once per re-shard:
+   ``flatten_state`` gathers every live agent to host, ``reshard_state``
+   re-derives the :class:`GridGeom` (new mesh shape, new device origins) and
+   re-initializes through ``Engine.init_state`` — preserving global agent
+   identifiers, the RNG lineage, the iteration counter, and the cumulative
+   drop diagnostics.  Delta-encoding references are reset, so the first
+   aura exchange after a re-shard must be a full refresh (the drivers force
+   ``full_halo=True`` on the next step).
+
+Realizability note: the engine shards one uniform SoA over an (mx, my)
+device mesh, so the *realizable* plans are the equal-split factorizations
+scanned by ``choose_mesh_shape``; ``plan_rcb``'s box-granular ownership maps
+are reported alongside as the achievable lower bound (closing that gap needs
+padded unequal blocks + masked halo — tracked in ROADMAP.md).  The same
+flatten→plan→re-init path makes the engine *elastic*: restoring a
+checkpoint onto a different device count is a re-shard whose histogram comes
+from the checkpoint (distributed.elastic.elastic_restore_abm).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable, Dict, List, Optional, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.agent_soa import GID_COUNT, GID_RANK, POS
+from repro.core.engine import Engine, SimState
+from repro.core.grid import GridGeom
+from repro.core.load_balance import (
+    choose_mesh_shape,
+    device_loads,
+    equal_split_loads,
+    imbalance,
+    plan_diffusive,
+    plan_rcb,
+    widths_to_ownership,
+)
+
+
+# ---------------------------------------------------------------------------
+# 1. Occupancy histogram extraction
+# ---------------------------------------------------------------------------
+
+def _interior_blocks(geom: GridGeom, arr: np.ndarray) -> np.ndarray:
+    """(mx*hx, my*hy, ...) global array -> (mx, ix, my, iy, ...) interior
+    (ring cells hold aura copies of neighbor agents and must be excluded
+    from any global reduction)."""
+    mx, my = geom.mesh_shape
+    hx, hy = geom.local_shape
+    a = np.asarray(arr)
+    a = a.reshape((mx, hx, my, hy) + a.shape[2:])
+    return a[:, 1:-1, :, 1:-1]
+
+
+def occupancy_histogram(
+    geom: GridGeom,
+    state: SimState,
+    runtimes: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """Per-partitioning-box weight map (BX, BY) for the planners.
+
+    The base weight is the live-agent count per box.  With ``runtimes``
+    (an (mx, my) array of last-iteration wall-clock per device) each
+    device's boxes are scaled by its measured time per agent, matching the
+    paper's runtime-weighted box loads — a box full of expensive agents
+    then weighs more than one full of cheap agents.
+    """
+    counts = _interior_blocks(geom, state.soa.valid).sum(axis=-1)  # (mx,ix,my,iy)
+    if runtimes is not None:
+        rt = np.asarray(runtimes, np.float64).reshape(geom.mesh_shape)
+        dev_counts = counts.sum(axis=(1, 3))
+        total = float(counts.sum())
+        per_agent = rt / np.maximum(dev_counts, 1.0)
+        counts = counts * per_agent[:, None, :, None]
+        # renormalize so the histogram total still reads as an agent count
+        # (empty devices contribute nothing, so they cannot skew the scale)
+        if counts.sum() > 0:
+            counts = counts * (total / counts.sum())
+    mx, my = geom.mesh_shape
+    ix, iy = geom.interior
+    cells = counts.reshape(mx * ix, my * iy)
+    bf = geom.box_factor
+    bx, by = geom.box_grid
+    return cells.reshape(bx, bf, by, bf).sum(axis=(1, 3)).astype(np.float64)
+
+
+def current_imbalance(geom: GridGeom, state: SimState,
+                      runtimes: Optional[np.ndarray] = None) -> float:
+    """``imbalance()`` of the live equal-split partition."""
+    hist = occupancy_histogram(geom, state, runtimes)
+    return imbalance(equal_split_loads(hist, geom.mesh_shape))
+
+
+# ---------------------------------------------------------------------------
+# 2. Planning
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class ReshardPlan:
+    """Outcome of one planning pass over the occupancy histogram."""
+
+    mesh_shape: Tuple[int, int]        # realizable equal-split target
+    imbalance: float                   # planned imbalance of mesh_shape
+    current: float                     # imbalance of the live partition
+    rcb_bound: Optional[float]         # box-granular RCB imbalance (lower bound)
+    diffusive_bound: Optional[float]   # 1-D diffusive-step imbalance, if 1-D
+
+
+def plan_reshard(
+    hist: np.ndarray,
+    geom: GridGeom,
+    n_devices: Optional[int] = None,
+    runtimes: Optional[np.ndarray] = None,
+) -> ReshardPlan:
+    """Run all applicable planners over a box histogram.
+
+    ``choose_mesh_shape`` gives the realizable equal-split plan; ``plan_rcb``
+    (power-of-two counts) gives the box-granular bound the mesh plan is
+    measured against; for 1-D meshes one ``plan_diffusive`` step over the
+    column marginal is evaluated too (using measured runtimes when given,
+    else the column loads as the runtime proxy).
+    """
+    mx, my = geom.mesh_shape
+    n = n_devices if n_devices is not None else mx * my
+    cur = imbalance(equal_split_loads(hist, (mx, my))) \
+        if (hist.shape[0] % mx == 0 and hist.shape[1] % my == 0) else float("inf")
+
+    target = choose_mesh_shape(hist, n)
+    planned = imbalance(equal_split_loads(hist, target))
+
+    rcb_bound = None
+    if n & (n - 1) == 0:
+        own = plan_rcb(hist, n)
+        rcb_bound = imbalance(device_loads(own, hist, n))
+
+    diff_bound = None
+    d = max(mx, my)
+    col_w = hist.sum(axis=1) if my == 1 else hist.sum(axis=0)
+    if (n == mx * my and 1 in (mx, my) and n > 1
+            and col_w.size % d == 0 and cur != float("inf")):
+        widths = np.full((d,), col_w.size // d, np.int64)
+        loads0 = equal_split_loads(hist, (mx, my))
+        rt = (np.asarray(runtimes, np.float64).ravel()
+              if runtimes is not None else loads0)
+        new_w = plan_diffusive(widths, col_w, rt)
+        own_1d = widths_to_ownership(new_w)
+        loads = device_loads(own_1d[:, None], col_w[:, None], d)
+        diff_bound = imbalance(loads)
+
+    return ReshardPlan(mesh_shape=target, imbalance=planned, current=cur,
+                       rcb_bound=rcb_bound, diffusive_bound=diff_bound)
+
+
+# ---------------------------------------------------------------------------
+# 3. Mass migration: flatten -> re-derive geometry -> re-init
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class FlatAgents:
+    """Host-side flattened simulation state — the unit of mass migration
+    (and of the logical ABM checkpoint, distributed.checkpoint.save_abm)."""
+
+    positions: np.ndarray              # (N, 2) float32
+    attrs: Dict[str, np.ndarray]       # (N, ...) incl. gid_rank/gid_count
+    it: int                            # iteration counter
+    gid_counters: np.ndarray           # (old_n_ranks,) next spawn counter
+    base_key: np.ndarray               # (2,) uint32 RNG lineage root
+    dropped_total: int                 # cumulative overflow drops
+
+
+def flatten_state(geom: GridGeom, state: SimState) -> FlatAgents:
+    """Gather every live agent (interior cells only — the aura ring holds
+    copies) plus the engine carry needed to re-initialize elsewhere."""
+    valid = _interior_blocks(geom, state.soa.valid).ravel()
+    attrs = {}
+    for name, a in state.soa.attrs.items():
+        blocks = _interior_blocks(geom, a)
+        trailing = blocks.shape[5:]
+        attrs[name] = blocks.reshape((valid.size,) + trailing)[valid]
+    positions = attrs.pop(POS)
+    return FlatAgents(
+        positions=positions,
+        attrs=attrs,
+        it=int(np.max(np.asarray(state.it))),
+        gid_counters=np.asarray(state.gid_counter, np.int64).ravel(),
+        base_key=np.asarray(state.key)[0, 0].astype(np.uint32),
+        dropped_total=int(np.sum(np.asarray(state.dropped))),
+    )
+
+
+def reshard_state(
+    engine: Engine, state: SimState, mesh_shape: Tuple[int, int]
+) -> Tuple[Engine, SimState]:
+    """Mass-migrate ``state`` onto a new device mesh.
+
+    Preserved across the re-shard: global agent ids, per-rank spawn-counter
+    floors (so future spawns never collide with any id ever issued), the
+    iteration counter, the RNG lineage (new per-device keys are split from
+    the old root key folded with the iteration), and the cumulative drop
+    count.  Delta references are re-zeroed — callers must run the next step
+    with ``full_halo=True``.
+    """
+    flat = flatten_state(engine.geom, state)
+    new_geom = engine.geom.with_mesh_shape(mesh_shape)
+    new_engine = dataclasses.replace(engine, geom=new_geom)
+    new_state = new_engine.init_state(
+        flat.positions,
+        flat.attrs,
+        gid_counters=flat.gid_counters,
+        it0=flat.it,
+        base_key=flat.base_key,
+    )
+    if flat.dropped_total:
+        new_state.dropped = new_state.dropped.at[0, 0].add(
+            jnp.int32(flat.dropped_total))
+    return new_engine, new_state
+
+
+# ---------------------------------------------------------------------------
+# 4. The runtime: cadence + threshold + trigger
+# ---------------------------------------------------------------------------
+
+def default_make_step(engine: Engine):
+    """Step factory used after a re-shard: local step on a 1x1 mesh, else a
+    sharded step over a fresh version-compat spatial mesh."""
+    if engine.geom.mesh_shape == (1, 1):
+        return engine.make_local_step()
+    from repro.launch.mesh import make_abm_mesh  # deferred: device state
+    return engine.make_sharded_step(make_abm_mesh(engine.geom.mesh_shape))
+
+
+@dataclasses.dataclass
+class Rebalancer:
+    """Dynamic load balancing policy, evaluated inside the run loop.
+
+    Every ``every`` iterations the occupancy histogram is extracted; when
+    the live partition's ``imbalance()`` exceeds ``threshold`` and the best
+    realizable plan improves it by at least ``min_gain``x, the state is
+    re-sharded in place.  ``history`` records every decision (both applied
+    and declined) with the planner diagnostics; ``engine`` always points at
+    the engine matching the latest state.
+    """
+
+    every: int = 10
+    threshold: float = 0.5
+    min_gain: float = 1.5
+    make_step: Callable[[Engine], Callable] = default_make_step
+    runtimes: Optional[np.ndarray] = None   # optional measured per-device times
+    engine: Optional[Engine] = None
+    history: List[dict] = dataclasses.field(default_factory=list)
+
+    def due(self, i: int) -> bool:
+        return self.every > 0 and i % self.every == 0
+
+    def maybe_reshard(
+        self, engine: Engine, state: SimState
+    ) -> Tuple[Engine, SimState, bool]:
+        self.engine = engine
+        if (self.runtimes is not None
+                and np.asarray(self.runtimes).shape != engine.geom.mesh_shape):
+            self.runtimes = None  # measured on a different mesh: stale
+        hist = occupancy_histogram(engine.geom, state, self.runtimes)
+        mx, my = engine.geom.mesh_shape
+        # a box grid coarser than the mesh (large box_factor) has no
+        # per-device load reading: treat as maximally imbalanced and let the
+        # planner look for a factorization the box grid does support
+        cur = (imbalance(equal_split_loads(hist, (mx, my)))
+               if hist.shape[0] % mx == 0 and hist.shape[1] % my == 0
+               else float("inf"))
+        record = {
+            "it": int(np.max(np.asarray(state.it))),
+            "mesh_from": engine.geom.mesh_shape,
+            "imbalance_before": cur,
+            "applied": False,
+        }
+        if cur <= self.threshold:
+            self.history.append(record)
+            return engine, state, False
+
+        try:
+            plan = plan_reshard(hist, engine.geom, runtimes=self.runtimes)
+        except ValueError as e:
+            # e.g. no factorization of the device count divides the box grid
+            record["declined"] = str(e)
+            self.history.append(record)
+            return engine, state, False
+        record.update(
+            mesh_to=plan.mesh_shape,
+            imbalance_planned=plan.imbalance,
+            rcb_bound=plan.rcb_bound,
+            diffusive_bound=plan.diffusive_bound,
+        )
+        no_improvement = (
+            plan.mesh_shape == engine.geom.mesh_shape
+            or cur < plan.imbalance * self.min_gain
+        )
+        if no_improvement:
+            self.history.append(record)
+            return engine, state, False
+
+        t0 = time.perf_counter()
+        new_engine, new_state = reshard_state(engine, state, plan.mesh_shape)
+        record.update(
+            applied=True,
+            migration_s=time.perf_counter() - t0,
+            imbalance_after=current_imbalance(new_engine.geom, new_state),
+        )
+        self.history.append(record)
+        self.engine = new_engine
+        # per-device times were measured on the old mesh; devices now own
+        # different regions, so the next check starts from pure counts
+        self.runtimes = None
+        return new_engine, new_state, True

@@ -104,6 +104,44 @@ class AsyncCheckpointer:
             self._thread = None
 
 
+def save_abm(ckpt_dir: str, step: int, engine, state,
+             extras: Optional[Dict] = None, keep: int = 3) -> str:
+    """Checkpoint an ABM :class:`SimState` *logically*: the flattened live
+    agents plus the engine carry (iteration, spawn counters, RNG root) and
+    the occupancy histogram.
+
+    Storing the flattened form instead of the sharded SoA makes the
+    checkpoint mesh-independent — restore is a re-shard whose target mesh is
+    chosen from the stored histogram (elastic.elastic_restore_abm), so a
+    run can resume on any surviving device count.
+    """
+    from repro.core.reshard import flatten_state, occupancy_histogram
+
+    flat = flatten_state(engine.geom, state)
+    hist = occupancy_histogram(engine.geom, state)
+    tree = {
+        "positions": flat.positions,
+        "attrs": {k: np.asarray(v) for k, v in sorted(flat.attrs.items())},
+        "gid_counters": flat.gid_counters,
+        "base_key": flat.base_key,
+        "histogram": hist,
+    }
+    geom = engine.geom
+    abm_meta = {
+        "it": int(flat.it),
+        "dropped_total": int(flat.dropped_total),
+        "cell_size": float(geom.cell_size),
+        "global_cells": list(geom.global_cells),
+        "cap": int(geom.cap),
+        "boundary": geom.boundary,
+        "box_factor": int(geom.box_factor),
+        "dt": float(engine.dt),
+        "attr_names": sorted(flat.attrs),
+    }
+    return save(ckpt_dir, step, tree,
+                extras={"abm": abm_meta, **(extras or {})}, keep=keep)
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
     base = pathlib.Path(ckpt_dir)
     if not base.exists():

@@ -39,6 +39,70 @@ def choose_lm_mesh(n_devices: int, model_parallel: int = 16
     return (n_devices // mp, mp), ("data", "model")
 
 
+def elastic_restore_abm(ckpt_dir: str, behavior, *,
+                        n_devices: Optional[int] = None,
+                        step: Optional[int] = None,
+                        delta_cfg=None, dt: Optional[float] = None,
+                        rebalance_every: int = 0,
+                        imbalance_threshold: float = 0.5):
+    """Restore an ABM checkpoint (checkpoint.save_abm) onto the *current*
+    device population — the ABM half of the elastic protocol.
+
+    The checkpoint stores mesh-independent flattened agents plus the
+    occupancy histogram; ``choose_mesh_shape`` picks the least-imbalanced
+    (mx, my) factorization of the surviving device count over that
+    histogram, the :class:`GridGeom` is re-derived for it, and the state is
+    re-initialized through the same mass-migration path the mid-run
+    re-shard uses — global agent ids, spawn-counter floors, the iteration
+    counter, and the RNG lineage all carry over.
+
+    Returns ``(engine, state, step)``; drive the state with
+    ``engine.make_sharded_step(make_abm_mesh(engine.geom.mesh_shape))`` (or
+    ``engine.make_local_step()`` on one device).
+    """
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core.engine import Engine
+    from repro.core.grid import GridGeom
+    from repro.core.load_balance import choose_mesh_shape
+    from repro.core.delta import DeltaConfig
+
+    n = n_devices if n_devices is not None else len(jax.devices())
+    step_, flat, extras = ckpt_lib.restore(ckpt_dir, step=step)
+    meta = extras["abm"]
+    hist = np.asarray(flat["histogram"])
+    mesh_shape = choose_mesh_shape(hist, n)
+    gx, gy = meta["global_cells"]
+    geom = GridGeom(
+        cell_size=meta["cell_size"],
+        interior=(gx // mesh_shape[0], gy // mesh_shape[1]),
+        mesh_shape=mesh_shape,
+        cap=meta["cap"],
+        boundary=meta["boundary"],
+        box_factor=meta["box_factor"],
+    )
+    engine = Engine(
+        geom=geom, behavior=behavior,
+        delta_cfg=delta_cfg or DeltaConfig(enabled=False),
+        dt=meta["dt"] if dt is None else dt,
+        rebalance_every=rebalance_every,
+        imbalance_threshold=imbalance_threshold,
+    )
+    attrs = {k.split("/", 1)[1]: v for k, v in flat.items()
+             if k.startswith("attrs/")}
+    state = engine.init_state(
+        flat["positions"], attrs,
+        gid_counters=flat["gid_counters"],
+        it0=meta["it"],
+        base_key=flat["base_key"],
+    )
+    if meta["dropped_total"]:
+        state.dropped = state.dropped.at[0, 0].add(
+            jnp.int32(meta["dropped_total"]))
+    return engine, state, step_
+
+
 def elastic_restore(ckpt_dir: str, model, *, n_devices: Optional[int] = None,
                     rules: Optional[Rules] = None, step: Optional[int] = None):
     """Restore (params, opt_state-free) training state onto the current

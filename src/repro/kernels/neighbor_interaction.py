@@ -21,6 +21,10 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 ships the TPU compiler params under the TPU-prefixed name.
+_CompilerParams = getattr(pltpu, "CompilerParams",
+                          getattr(pltpu, "TPUCompilerParams", None))
+
 
 def _force_kernel(pos_i_ref, diam_i_ref, type_i_ref, valid_i_ref, gid_i_ref,
                   pos_j_ref, diam_j_ref, type_j_ref, valid_j_ref, gid_j_ref,
@@ -80,7 +84,7 @@ def neighbor_force_kernel(
         ],
         out_specs=spec((2,), k),
         out_shape=jax.ShapeDtypeStruct((c, k, 2), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("parallel",),
         ),
         interpret=interpret,

@@ -13,20 +13,27 @@ from typing import Optional, Tuple
 
 import jax
 
+from repro.compat import axis_types_kwargs as _axis_types_kwargs
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return make_mesh(shape, axes)
 
 
 def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     """Arbitrary mesh helper (tests, elastic re-shard, ABM spatial meshes)."""
-    return jax.make_mesh(
-        shape, axes, axis_types=(jax.sharding.AxisType.Auto,) * len(axes)
-    )
+    return jax.make_mesh(shape, axes, **_axis_types_kwargs(len(axes)))
+
+
+def make_abm_mesh(mesh_shape: Tuple[int, int],
+                  axes: Tuple[str, str] = ("sx", "sy")):
+    """Spatial (sx, sy) device mesh for the ABM engine (paper Fig. 1 rank
+    grid), version-compat across JAX releases.  The canonical way to build
+    the mesh passed to ``Engine.make_sharded_step`` and the re-shard
+    runtime."""
+    return make_mesh(tuple(mesh_shape), tuple(axes))
 
 
 # TPU v5e hardware model used by the roofline analysis (per-chip).

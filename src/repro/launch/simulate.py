@@ -18,6 +18,7 @@ import jax.numpy as jnp
 
 from repro.core import DeltaConfig
 from repro.core.engine import total_agents
+from repro.launch.mesh import make_abm_mesh
 
 
 def main():
@@ -43,8 +44,7 @@ def main():
         assert len(jax.devices()) >= mx * my, (
             f"need {mx*my} devices (set "
             f"XLA_FLAGS=--xla_force_host_platform_device_count={mx*my})")
-        mesh = jax.make_mesh((mx, my), ("sx", "sy"),
-                             axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        mesh = make_abm_mesh((mx, my))
     delta = None
     if args.delta != "off":
         delta = DeltaConfig(enabled=True, qdtype=jnp.dtype(args.delta),

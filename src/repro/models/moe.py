@@ -227,6 +227,7 @@ def moe_apply_ep(params, cfg: ArchConfig, x: Array) -> Tuple[Array, Array]:
     import jax
     from jax.sharding import PartitionSpec as P
 
+    from repro.compat import shard_map_compat
     from repro.distributed import sharding as shlib
 
     active = getattr(shlib._ACTIVE, "v", None)
@@ -250,11 +251,10 @@ def moe_apply_ep(params, cfg: ArchConfig, x: Array) -> Tuple[Array, Array]:
             _moe_dense_decode_body, cfg=cfg, ep=ep, model_axis="model",
             fsdp_axes=fsdp_axes)
         spec = P(fsdp_axes, None, None)
-        return jax.shard_map(
+        return shard_map_compat(
             body, mesh=mesh,
             in_specs=(spec, P(None, None), w_spec, w_spec, w_spec),
             out_specs=(spec, P()),
-            check_vma=False,
         )(x, params["router"], params["w_gate"], params["w_up"],
           params["w_down"])
 
@@ -263,11 +263,10 @@ def moe_apply_ep(params, cfg: ArchConfig, x: Array) -> Tuple[Array, Array]:
         model_axis="model")
     # tokens: batch over data axes, sequence over model — disjoint routing
     seq_spec = P(fsdp_axes, "model", None)
-    out = jax.shard_map(
+    out = shard_map_compat(
         body, mesh=mesh,
         in_specs=(seq_spec, P(None, None), w_spec, w_spec, w_spec),
         out_specs=(seq_spec, P()),
-        check_vma=False,
     )(x, params["router"], params["w_gate"], params["w_up"],
       params["w_down"])
     return out

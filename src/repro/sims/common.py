@@ -10,7 +10,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AgentSchema, Behavior, DeltaConfig, Engine, GridGeom
-from repro.core.engine import SimState, total_agents
+from repro.core.engine import SimState, total_agents, warn_if_stale_engine
 
 
 @dataclasses.dataclass
@@ -31,11 +31,18 @@ def make_engine(
     delta: Optional[DeltaConfig] = None,
     dt: float = 0.1,
     mesh=None,
+    rebalance_every: int = 0,
+    imbalance_threshold: float = 0.5,
 ) -> Engine:
+    """``rebalance_every`` > 0 arms the dynamic load balancer (paper §2.4.5,
+    core.reshard): every that many iterations the run loop checks the
+    occupancy imbalance and re-shards past ``imbalance_threshold``."""
     geom = GridGeom(cell_size=cell_size, interior=interior,
                     mesh_shape=mesh_shape, cap=cap, boundary=boundary)
     return Engine(geom=geom, behavior=behavior,
-                  delta_cfg=delta or DeltaConfig(enabled=False), dt=dt)
+                  delta_cfg=delta or DeltaConfig(enabled=False), dt=dt,
+                  rebalance_every=rebalance_every,
+                  imbalance_threshold=imbalance_threshold)
 
 
 def uniform_positions(rng: np.random.Generator, n: int, geom: GridGeom,
@@ -54,17 +61,20 @@ def disk_positions(rng: np.random.Generator, n: int, center, radius
 
 
 def run_sim(engine: Engine, state: SimState, steps: int, mesh=None,
-            collect: Optional[Callable] = None):
-    """Drive a simulation; optionally collect per-step metrics."""
+            collect: Optional[Callable] = None, rebalancer=None):
+    """Drive a simulation; optionally collect per-step metrics.
+
+    Dynamic load balancing engages when the engine's ``rebalance_every``
+    knob is set or a ``core.reshard.Rebalancer`` is passed explicitly; after
+    a re-shard the state lives on a different mesh, so pass an explicit
+    rebalancer and read ``rebalancer.engine`` when you need the matching
+    engine afterwards (or call ``engine.drive`` directly)."""
     if mesh is not None:
         step = engine.make_sharded_step(mesh)
     else:
         step = engine.make_local_step()
-    r = max(int(engine.delta_cfg.refresh_interval), 1)
-    series = []
-    for i in range(steps):
-        full = (not engine.delta_cfg.enabled) or (i % r == 0)
-        state = step(state, full_halo=full)
-        if collect is not None:
-            series.append(collect(state))
+    had_handle = rebalancer is not None
+    eng, state, series = engine.drive(state, steps, step_fn=step,
+                                      rebalancer=rebalancer, collect=collect)
+    warn_if_stale_engine(engine, eng, had_handle)
     return state, series

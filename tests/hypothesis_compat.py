@@ -1,0 +1,31 @@
+"""Optional-hypothesis shim for the property-based tests.
+
+The seed suite hard-imported ``hypothesis`` at module scope, turning a
+missing dev dependency into a *collection error* that aborted the whole
+run.  Importing ``given``/``settings``/``st`` from here instead keeps every
+non-property test running and collects the property tests as skips when
+hypothesis is absent; CI installs hypothesis so they execute there.
+"""
+
+import pytest
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - exercised only without hypothesis
+    HAVE_HYPOTHESIS = False
+
+    class _Strategies:
+        """Stand-in for ``hypothesis.strategies``: any strategy call returns
+        an inert placeholder (the test body never runs)."""
+
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _Strategies()
+
+    def given(*args, **kwargs):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*args, **kwargs):
+        return lambda fn: fn

@@ -63,8 +63,8 @@ for _ in range(10):
 geom4 = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=16)
 eng4 = Engine(geom=geom4, behavior=beh, dt=0.1)
 s4 = eng4.init_state(pos, attrs, seed=0)
-mesh = jax.make_mesh((2, 2), ("sx", "sy"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_abm_mesh
+mesh = make_abm_mesh((2, 2))
 step4 = eng4.make_sharded_step(mesh)
 for _ in range(10):
     s4 = step4(s4, full_halo=True)
@@ -80,8 +80,8 @@ print("OK", err)
 def test_distributed_delta_encoding_bounded_drift_and_byte_reduction():
     out = run_sub(COMMON + """
 geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=16)
-mesh = jax.make_mesh((2, 2), ("sx", "sy"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_abm_mesh
+mesh = make_abm_mesh((2, 2))
 
 def run(enabled):
     cfg = DeltaConfig(enabled=enabled, qdtype=jnp.int16, refresh_interval=8)
@@ -114,8 +114,8 @@ def test_toroidal_migration_wraps_domain_seam():
 pos = rng.uniform([0.5, 0.5], [31.5, 15.5], size=(n, 2)).astype(np.float32)
 geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 1), cap=16,
                 boundary="toroidal")
-mesh = jax.make_mesh((2, 1), ("sx", "sy"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_abm_mesh
+mesh = make_abm_mesh((2, 1))
 
 def drift_update(attrs, valid, acc, key, params, dt):
     new = dict(attrs)
@@ -147,8 +147,8 @@ import numpy as np, jax
 from repro.sims import cell_proliferation as cp
 from repro.core.engine import total_agents
 
-mesh = jax.make_mesh((2, 2), ("sx", "sy"),
-                     axis_types=(jax.sharding.AxisType.Auto,) * 2)
+from repro.launch.mesh import make_abm_mesh
+mesh = make_abm_mesh((2, 2))
 s1, m1 = cp.run(n_agents=40, steps=10, interior=(8, 8), mesh_shape=(1, 1))
 s4, m4 = cp.run(n_agents=40, steps=10, interior=(4, 4), mesh_shape=(2, 2),
                 mesh=mesh)

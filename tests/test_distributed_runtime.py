@@ -115,10 +115,12 @@ import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import PartitionSpec as P
 from repro.distributed.grad_compress import compressed_psum
 
-mesh = jax.make_mesh((4,), ("d",), axis_types=(jax.sharding.AxisType.Auto,))
+from repro.launch.mesh import make_mesh
+mesh = make_mesh((4,), ("d",))
 def body(x):
     return compressed_psum(x[0], "d", axis_size=4)[None]
-f = jax.jit(jax.shard_map(body, mesh=mesh, in_specs=P("d"), out_specs=P("d")))
+from repro.compat import shard_map_compat
+f = jax.jit(shard_map_compat(body, mesh=mesh, in_specs=P("d"), out_specs=P("d")))
 x = jax.random.normal(jax.random.PRNGKey(0), (4, 256))
 got = np.asarray(f(x))
 want = np.asarray(jnp.sum(x, axis=0))
