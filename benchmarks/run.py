@@ -256,6 +256,61 @@ print(f"rebalance_iter_rate,{dt1*1e6:.1f},"
 
 
 # ---------------------------------------------------------------------------
+# Facade overhead: Simulation.run vs the raw Engine.drive loop
+# ---------------------------------------------------------------------------
+
+def bench_api_overhead():
+    """The Simulation facade must iterate within noise (<=5%) of the raw
+    ``engine.drive`` loop — its per-step work is pure Python scheduling."""
+    import numpy as np
+
+    from repro.core import Engine, GridGeom, Simulation
+    from repro.sims import cell_clustering
+
+    beh = cell_clustering.behavior()
+    geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+                    cap=24)
+    rng = np.random.default_rng(0)
+    n = 400
+    lx, ly = geom.domain_size
+    pos = rng.uniform(0.5, lx - 0.5, (n, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": rng.integers(0, 2, n).astype(np.int32)}
+    steps = 30
+
+    eng = Engine(geom=geom, behavior=beh, dt=0.1)
+    state0 = eng.init_state(pos, attrs, seed=0)
+    step = eng.make_local_step()
+
+    def time_raw():
+        t0 = time.perf_counter()
+        _, s, _ = eng.drive(state0, steps, step_fn=step)
+        jax.block_until_ready(s.soa.valid)
+        return (time.perf_counter() - t0) / steps
+
+    sim = Simulation(geom, beh, dt=0.1)
+
+    def time_facade():
+        sim.init(pos, attrs, seed=0)
+        sim._step_fn = step        # same compiled step: isolate facade cost
+        t0 = time.perf_counter()
+        sim.run(steps)
+        jax.block_until_ready(sim.state.soa.valid)
+        return (time.perf_counter() - t0) / steps
+
+    time_raw(), time_facade()                              # warm compile
+    # interleave two passes each and keep the best: on shared CPU the
+    # scheduler noise exceeds the facade's pure-Python per-step cost
+    t_raw = min(time_raw(), time_raw())
+    t_fac = min(time_facade(), time_facade())
+
+    emit("api_overhead_raw_drive", t_raw * 1e6,
+         f"agent_updates_per_s={n/t_raw:.0f}")
+    emit("api_overhead_facade", t_fac * 1e6,
+         f"overhead={(t_fac/t_raw - 1)*100:+.1f}%_vs_raw_drive")
+
+
+# ---------------------------------------------------------------------------
 # LM roofline summary (from dry-run records)
 # ---------------------------------------------------------------------------
 
@@ -283,6 +338,7 @@ def main() -> None:
     bench_serialization()
     bench_delta()
     bench_sims()
+    bench_api_overhead()
     bench_scaling()
     bench_rebalance()
     bench_roofline()

@@ -1,6 +1,7 @@
 """Distributed epidemiology with delta-encoded aura exchange — the paper's
 seamless laptop-to-cluster story (§3.4): the model definition is identical to
-the single-device case; only the mesh changes.
+the single-device case; only the mesh shape changes, and the Simulation
+facade builds and owns the spatial device mesh.
 
     PYTHONPATH=src python examples/epidemic_distributed.py
 """
@@ -9,29 +10,30 @@ import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import DeltaConfig
-from repro.launch.mesh import make_abm_mesh
 from repro.sims import epidemiology
 
 
 def main():
-    mesh = make_abm_mesh((2, 2))
     delta = DeltaConfig(enabled=True, qdtype=jnp.int16, refresh_interval=8)
-    state, metrics = epidemiology.run(
-        n_agents=800, steps=60, initial_infected=20,
-        mesh=mesh, mesh_shape=(2, 2), interior=(5, 5), delta=delta)
-    ser = metrics["series"]
+    # identical model code as 1 device: only mesh_shape differs — the
+    # facade derives the (sx, sy) device mesh from the geometry itself
+    sim = epidemiology.simulation(
+        n_agents=800, initial_infected=20,
+        mesh_shape=(2, 2), interior=(5, 5), delta=delta)
+    sim.run(60)
+    ser = np.array(sim.series["sir"])
     print("   t     S     I     R")
     for t in range(0, len(ser), 10):
         s, i, r = ser[t]
         print(f"{t:4d} {s:5d} {i:5d} {r:5d}")
     print(f"\nfinal attack rate: {ser[-1, 2] / ser[0].sum():.1%} "
-          f"(aura wire bytes/iter: {int(state.halo_bytes[0, 0])})")
-    print("4 devices, delta-encoded aura exchange, identical model code.")
+          f"(aura wire bytes/iter: {int(sim.state.halo_bytes[0, 0])})")
+    print(f"{np.prod(sim.engine.geom.mesh_shape)} devices, delta-encoded "
+          "aura exchange, identical model code.")
 
 
 if __name__ == "__main__":

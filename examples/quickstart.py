@@ -1,5 +1,5 @@
 """Quickstart: define agents, behaviors, and run a simulation — the paper's
-three-step modeling workflow (§1) in ~40 lines.
+three-step modeling workflow (§1) on the ``Simulation`` facade.
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -7,7 +7,7 @@ three-step modeling workflow (§1) in ~40 lines.
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AgentSchema, Behavior, Engine, GridGeom, total_agents
+from repro.core import AgentSchema, Behavior, Simulation, operations
 from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
 
 # 1. What is an agent?  A position plus these attributes:
@@ -28,25 +28,26 @@ behavior = Behavior(
             "max_step": 0.5},
 )
 
-# 3. Initial condition: 400 agents of two types, uniformly placed.
-engine = Engine(
-    geom=GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1), cap=64),
-    behavior=behavior, dt=0.1,
-)
+# 3. Initial condition + run: the Simulation facade owns the engine, the
+#    device mesh, the state, and any scheduled operations.
+sim = Simulation(dict(cell_size=2.0, interior=(8, 8), cap=64),
+                 behavior, dt=0.1)
 rng = np.random.default_rng(0)
 n = 400
 pos = rng.uniform(0.5, 15.5, size=(n, 2)).astype(np.float32)
-state = engine.init_state(pos, {
+sim.init(pos, {
     "diameter": np.full((n,), 1.0, np.float32),
     "ctype": rng.integers(0, 2, n).astype(np.int32),
 }, seed=0)
 
-step = engine.make_local_step()
-for i in range(30):
-    state = step(state, full_halo=True)
+sim.every(10, operations.agent_count)   # scheduled SumOverAllRanks reducer
+sim.run(30)
 
-print(f"agents: {total_agents(state)} (conserved), "
-      f"iterations: {int(state.it[0, 0])}, "
-      f"dropped: {int(state.dropped.sum())}")
-print("The same Behavior runs unchanged on a multi-pod mesh via "
-      "engine.make_sharded_step(mesh) — see examples/epidemic_distributed.py")
+print(f"agents: {sim.n_agents()} (conserved), "
+      f"iterations: {sim.iteration}, "
+      f"dropped: {int(sim.state.dropped.sum())}, "
+      f"count series: {sim.series['agent_count']}")
+print("The same Simulation runs unchanged on a multi-device mesh — set "
+      "mesh_shape=(2, 2) in the geometry (see "
+      "examples/epidemic_distributed.py) — and behaviors stack with "
+      "compose() (see examples/sir_mechanics_demo.py).")

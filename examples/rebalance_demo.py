@@ -1,8 +1,9 @@
 """Dynamic load balancing demo (paper §2.4.5): a Gaussian-clustered cell
-population starts on a pathological static 2x2 partition; the Rebalancer
-detects the imbalance mid-run, plans over the occupancy histogram, and pays
-one mass migration to a better mesh — then keeps simulating, identical
-model code.
+population starts on a pathological static 2x2 partition; the facade's
+scheduled rebalance operation detects the imbalance mid-run (weighted by
+measured per-device step timing), pays one mass migration to a better mesh,
+and keeps simulating — ``sim.engine``/``sim.state`` stay consistent the
+whole way, with no stale engine handle to juggle.
 
     PYTHONPATH=src python examples/rebalance_demo.py
 """
@@ -13,19 +14,18 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
 import numpy as np
 
-from repro.core import Rebalancer, total_agents
+from repro.core import Rebalance, Simulation
 from repro.core.reshard import current_imbalance
-from repro.launch.mesh import make_abm_mesh
 from repro.sims import cell_clustering
-from repro.sims.common import make_engine
 
 
 def main():
     # adhesion kept gentle and cap generous so the condensing clusters never
     # overflow a cell's slot capacity over the demo horizon
-    eng = make_engine(cell_clustering.behavior(adhesion=0.3), interior=(8, 8),
-                      mesh_shape=(2, 2), cap=64,
-                      rebalance_every=5, imbalance_threshold=0.3)
+    sim = Simulation(
+        dict(interior=(8, 8), mesh_shape=(2, 2), cap=64),
+        cell_clustering.behavior(adhesion=0.3), dt=0.1,
+        rebalance=Rebalance(every=5, threshold=0.3, weighted=True))
 
     # Two diagonal Gaussian clusters: half the devices own almost nothing.
     rng = np.random.default_rng(0)
@@ -35,17 +35,14 @@ def main():
     pos = np.clip(pos, 0.5, 31.5).astype(np.float32)
     attrs = {"diameter": np.full((n,), 1.0, np.float32),
              "ctype": rng.integers(0, 2, n).astype(np.int32)}
-    state = eng.init_state(pos, attrs, seed=0)
+    sim.init(pos, attrs, seed=0)
 
     print(f"static 2x2 split: imbalance = "
-          f"{current_imbalance(eng.geom, state):.2f}  (0 = perfect)")
+          f"{current_imbalance(sim.geom, sim.state):.2f}  (0 = perfect)")
 
-    rb = Rebalancer(every=eng.rebalance_every,
-                    threshold=eng.imbalance_threshold)
-    step = eng.make_sharded_step(make_abm_mesh((2, 2)))
-    eng, state, _ = eng.drive(state, 20, step_fn=step, rebalancer=rb)
+    sim.run(20)
 
-    for rec in rb.history:
+    for rec in sim.rebalancer.history:
         if rec["applied"]:
             print(f"it {rec['it']}: re-shard {rec['mesh_from']} -> "
                   f"{rec['mesh_to']}  imbalance "
@@ -54,10 +51,10 @@ def main():
                   f"(RCB bound {rec['rcb_bound']:.2f}, "
                   f"migration {rec['migration_s']*1e3:.0f} ms)")
 
-    print(f"final mesh {eng.geom.mesh_shape}, imbalance = "
-          f"{current_imbalance(eng.geom, state):.2f}, "
-          f"agents {total_agents(state)}/{n} "
-          f"(capacity drops: {int(np.asarray(state.dropped).sum())})")
+    print(f"final mesh {sim.engine.geom.mesh_shape}, imbalance = "
+          f"{current_imbalance(sim.geom, sim.state):.2f}, "
+          f"agents {sim.n_agents()}/{n} "
+          f"(capacity drops: {int(np.asarray(sim.state.dropped).sum())})")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,37 @@
+"""Composable behavior stacks: SIR epidemic on top of cell mechanics.
+
+Two library behaviors — the clustering mechanics from
+``sims.cell_clustering`` and the SIR compartment dynamics from
+``sims.epidemiology`` — are merged with ``compose()`` into one model: the
+pair kernels share a single neighborhood sweep (infection gated to its
+smaller radius), the updates chain, and the infection spreads along the
+contact structure the adhesion dynamics create.  No hand-fused kernel.
+
+    PYTHONPATH=src python examples/sir_mechanics_demo.py
+"""
+
+import numpy as np
+
+from repro.sims import sir_mechanics
+from repro.sims.cell_clustering import same_type_fraction
+
+
+def main():
+    sim = sir_mechanics.simulation(n_agents=400, initial_infected=20, seed=0)
+    f0 = same_type_fraction(sim.state, sim.engine)
+    sim.run(40)
+    f1 = same_type_fraction(sim.state, sim.engine)
+
+    ser = np.array(sim.series["sir"])
+    print("   t     S     I     R")
+    for t in range(0, len(ser), 8):
+        s, i, r = ser[t]
+        print(f"{t:4d} {s:5d} {i:5d} {r:5d}")
+    print(f"\nattack rate: {ser[-1, 2] / ser[0].sum():.1%}, "
+          f"same-type contact fraction {f0:.2f} -> {f1:.2f}")
+    print("compose(mechanics, sir): one neighborhood sweep, two behaviors, "
+          "zero fused-kernel code.")
+
+
+if __name__ == "__main__":
+    main()

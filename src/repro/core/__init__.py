@@ -1,23 +1,32 @@
 """TeraAgent core: the paper's contribution as composable JAX modules.
 
 Public API:
+  Simulation               — user-facing facade: owns engine, mesh, state,
+                             re-shard runtime, scheduled operations,
+                             checkpoints (paper §3.4 usability claim)
+  Rebalance / Checkpoint   — facade policy knobs
   AgentSchema / AgentSoA   — SoA agent container (TeraAgent IO analogue)
   GridGeom                 — partitioning grid + neighbor-search grid
-  Behavior                 — model definition (pair kernel + update)
-  Engine / SimState        — distributed simulation engine
+  Behavior / compose       — model definition (pair kernel + update) and
+                             the behavior-stacking composition algebra
+  operations               — scheduled-op helpers (SumOverAllRanks family)
+  Engine / SimState        — distributed simulation engine (low-level)
   DeltaConfig              — delta-encoded aura exchange (paper §2.3)
   Rebalancer               — dynamic load balancing runtime (paper §2.4.5)
 """
 
+from repro.core import operations
 from repro.core.agent_soa import AgentSchema, AgentSoA, GID_COUNT, GID_RANK, POS
-from repro.core.behaviors import Behavior
+from repro.core.behaviors import Behavior, compose
 from repro.core.delta import DeltaConfig
 from repro.core.engine import Engine, SimState, total_agents
 from repro.core.grid import GridGeom
 from repro.core.reshard import Rebalancer
+from repro.core.simulation import Checkpoint, Rebalance, Simulation
 
 __all__ = [
     "AgentSchema", "AgentSoA", "GID_COUNT", "GID_RANK", "POS",
-    "Behavior", "DeltaConfig", "Engine", "SimState", "GridGeom",
-    "Rebalancer", "total_agents",
+    "Behavior", "compose", "Checkpoint", "DeltaConfig", "Engine",
+    "SimState", "GridGeom", "Rebalance", "Rebalancer", "Simulation",
+    "operations", "total_agents",
 ]

@@ -5,6 +5,14 @@ Mirrors the paper's three-step model structure (§1): define what an agent is
 plus a pointwise update), and define the initial condition (an initializer).
 The same Behavior runs unchanged on one device or on a multi-pod mesh —
 the paper's "seamless transition from a laptop to a supercomputer" (§3.4).
+
+Behaviors form a composition algebra (BioDynaMo attaches a *list* of
+behaviors to each agent): :func:`compose` merges several behaviors into one
+— schemas are unioned, every pair kernel runs over the same neighborhood
+gather (each gated to its own radius), accumulator names are namespaced per
+sub-behavior, and the pointwise updates chain in order, each seeing the
+previous one's attribute writes.  ``compose(b)`` of a single behavior is
+bit-exact with ``b`` itself, which is the property the parity tests pin.
 """
 
 from __future__ import annotations
@@ -40,6 +48,116 @@ class Behavior:
     acc_spec: Dict[str, Tuple[Tuple[int, ...], object]] = dataclasses.field(
         default_factory=dict
     )
+
+    # Behavior.stack(a, b, ...) — alias of compose(); bound as a class
+    # attribute after compose() is defined below (not a dataclass field).
+
+
+def _merge_schemas(behaviors: Tuple[Behavior, ...]) -> AgentSchema:
+    spec: Dict[str, Tuple[Tuple[int, ...], object]] = {}
+    for b in behaviors:
+        for name, shape, dtype in b.schema.fields:
+            if name in spec and spec[name] != (shape, dtype):
+                raise ValueError(
+                    f"compose: attribute {name!r} declared with conflicting "
+                    f"specs {spec[name]} vs {(shape, dtype)}")
+            spec[name] = (shape, dtype)
+    return AgentSchema.create(spec)
+
+
+def _broadcast_mask(mask: Array, like: Array) -> Array:
+    while mask.ndim < like.ndim:
+        mask = mask[..., None]
+    return mask
+
+
+def compose(*behaviors: Behavior) -> Behavior:
+    """Merge several behaviors into one (BioDynaMo's per-agent behavior list).
+
+    Semantics:
+      * **schema** — union of the sub-schemas (conflicting attribute specs
+        are an error).
+      * **pair kernels** — all run over one neighborhood gather with the
+        max radius; a sub-behavior with a smaller radius has its
+        contributions gated to its own ``dist2 <= radius**2`` so composition
+        never widens an interaction.  Accumulators are namespaced
+        ``"b{i}.{name}"`` and un-namespaced before reaching each update.
+      * **updates** — chained in order; update ``i`` sees the attribute
+        writes of updates ``< i`` (accumulators were all computed from the
+        *pre-update* state, exactly as in a monolithic behavior).  Alive
+        masks AND together; spawn masks OR together with the later
+        behavior's child winning contested slots.  Behavior 0 receives the
+        step key unchanged (bit-exact single-behavior parity); behavior
+        ``i>0`` receives ``fold_in(key, i)``.
+      * **params** — each sub-kernel closes over its own params; the merged
+        ``params`` dict (namespaced the same way) is carried for
+        introspection only.
+    """
+    behs = tuple(behaviors)
+    if not behs:
+        raise ValueError("compose() needs at least one Behavior")
+    for b in behs:
+        if not isinstance(b, Behavior):
+            raise TypeError(f"compose() takes Behaviors, got {type(b)!r}")
+
+    schema = _merge_schemas(behs)
+    radius = max(float(b.radius) for b in behs)
+    pair_attrs = tuple(sorted({a for b in behs for a in b.pair_attrs}))
+    can_spawn = any(b.can_spawn for b in behs)
+    params = {f"b{i}.{k}": v
+              for i, b in enumerate(behs) for k, v in b.params.items()}
+    acc_spec = {f"b{i}.{k}": v
+                for i, b in enumerate(behs) for k, v in b.acc_spec.items()}
+
+    def pair(attrs_i, attrs_j, disp, dist2, _params):
+        out: Dict[str, Array] = {}
+        for i, b in enumerate(behs):
+            sub = b.pair_fn(attrs_i, attrs_j, disp, dist2, b.params)
+            gate = None
+            if float(b.radius) < radius:
+                gate = dist2 <= jnp.float32(float(b.radius) ** 2)
+            for k, v in sub.items():
+                if gate is not None:
+                    v = jnp.where(_broadcast_mask(gate, v), v,
+                                  jnp.zeros_like(v))
+                out[f"b{i}.{k}"] = v
+        return out
+
+    def update(attrs, valid, acc, key, _params, dt):
+        cur = dict(attrs)
+        alive = valid
+        spawn = jnp.zeros_like(valid)
+        child: Optional[Dict[str, Array]] = None
+        for i, b in enumerate(behs):
+            pfx = f"b{i}."
+            acc_i = {k[len(pfx):]: v for k, v in acc.items()
+                     if k.startswith(pfx)}
+            ki = key if i == 0 else jax.random.fold_in(key, i)
+            cur, alive_i, spawn_i, child_i = b.update_fn(
+                cur, valid, acc_i, ki, b.params, dt)
+            cur = dict(cur)
+            alive = alive & alive_i
+            if b.can_spawn and child_i is not None:
+                # complete the child to the union schema: attributes the
+                # spawning behavior doesn't know about are inherited from
+                # the parent's current state (the `child = dict(new)` idiom)
+                child_i = {**cur, **child_i}
+                if child is None:
+                    child, spawn = child_i, spawn_i
+                else:
+                    child = {k: jnp.where(
+                        _broadcast_mask(spawn_i, child_i[k]),
+                        child_i[k], child[k]) for k in child}
+                    spawn = spawn | spawn_i
+        return cur, alive, spawn, child
+
+    return Behavior(
+        schema=schema, pair_fn=pair, pair_attrs=pair_attrs,
+        update_fn=update, radius=radius, params=params,
+        can_spawn=can_spawn, acc_spec=acc_spec)
+
+
+Behavior.stack = staticmethod(compose)
 
 
 # ---------------------------------------------------------------------------

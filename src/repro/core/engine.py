@@ -418,7 +418,11 @@ class Engine:
 
     def drive(self, state: SimState, n_steps: int, step_fn=None,
               rebalancer=None, collect=None):
-        """Full driver: delta refresh schedule + dynamic load balancing.
+        """Low-level driver: delta refresh schedule + dynamic load balancing.
+
+        Prefer :class:`repro.core.simulation.Simulation` — the facade owns
+        this loop and keeps ``sim.engine``/``sim.state`` consistent across
+        re-shards, so callers never juggle the returned engine themselves.
 
         At the rebalancer's cadence the occupancy imbalance is checked and,
         past the threshold, the state is mass-migrated onto a better mesh
@@ -452,11 +456,11 @@ class Engine:
 
     def run(self, state: SimState, n_steps: int, step_fn=None,
             rebalancer=None) -> SimState:
-        """Convenience driver honoring the delta refresh schedule (and the
-        engine's rebalance knobs).  After a re-shard the final state lives
-        on a different mesh — pass an explicit rebalancer and read
-        ``rebalancer.engine`` afterwards, or use :meth:`drive`, which
-        returns the matching engine."""
+        """Legacy convenience driver (shim path).  Prefer
+        :class:`repro.core.simulation.Simulation`, whose ``sim.engine`` /
+        ``sim.state`` always match after a re-shard; here the final state
+        may live on a different mesh than ``self``, so a rebalance without
+        an explicit rebalancer handle triggers the stale-engine warning."""
         had_handle = rebalancer is not None
         eng, state, _ = self.drive(state, n_steps, step_fn=step_fn,
                                    rebalancer=rebalancer)
@@ -466,16 +470,18 @@ class Engine:
 
 def warn_if_stale_engine(old: "Engine", new: "Engine",
                          had_handle: bool) -> None:
-    """Warn when a driver discards a re-sharded engine the caller has no
-    handle to (they passed no Rebalancer): the returned state no longer
-    matches the engine they hold."""
+    """Shim-only guard (legacy ``Engine.run`` / ``sims.common.run_sim``):
+    warn when a driver discards a re-sharded engine the caller has no handle
+    to.  Facade users never hit this — ``Simulation`` swaps its own engine
+    in place, so no in-repo caller can observe a stale handle."""
     if new is not old and not had_handle:
         import warnings
         warnings.warn(
             f"a re-shard moved the state to mesh {new.geom.mesh_shape}; "
             f"the engine you hold (mesh {old.geom.mesh_shape}) no longer "
-            "matches it — use Engine.drive() or pass an explicit "
-            "Rebalancer and read rebalancer.engine", stacklevel=3)
+            "matches it — migrate to repro.core.Simulation, whose "
+            "sim.engine/sim.state stay consistent across re-shards",
+            stacklevel=3)
 
 
 def total_agents(state: SimState) -> int:

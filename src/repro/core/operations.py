@@ -1,0 +1,129 @@
+"""Scheduled standalone operations — the facade's analogue of BioDynaMo's
+``Scheduler``/``Operation`` list and of the paper's two-line
+``SumOverAllRanks`` reduction (§3.4).
+
+An operation is a callable ``op(sim) -> value | None`` registered on a
+:class:`repro.core.simulation.Simulation` with ``sim.every(n, op)``; non-None
+return values are appended to ``sim.series[name]``.  The reducers here are
+built on global reductions over the sharded state (``jnp.sum`` over a
+mesh-sharded array lowers to the per-device partial sum plus the cross-rank
+all-reduce — exactly the engine's ``Comm.sum_over_all_ranks``), so the same
+operation reads correctly on one device and on a multi-pod mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class Operation:
+    """One scheduled operation: ``fn(sim)`` every ``every`` iterations.
+
+    ``pre`` operations run before the step on iterations where
+    ``tick % every == 0`` (like the re-shard check); post operations run
+    after the step on iterations where ``(tick + 1) % every == 0`` (so
+    ``every=1`` sees every post-step state, and ``every=n`` fires after n
+    completed steps).  ``record`` appends non-None results to
+    ``sim.series[name]``.
+    """
+
+    fn: Callable[[Any], Any]
+    every: int = 1
+    name: str = ""
+    pre: bool = False
+    record: bool = True
+
+    def due(self, tick: int) -> bool:
+        if self.every <= 0:
+            return False
+        return (tick % self.every == 0) if self.pre \
+            else ((tick + 1) % self.every == 0)
+
+
+# ---------------------------------------------------------------------------
+# Reducers (SumOverAllRanks family)
+# ---------------------------------------------------------------------------
+
+def sum_over_all_ranks(extract: Callable[[Any], Any],
+                       name: str = "") -> Callable:
+    """Generic global-sum reducer: ``extract(state)`` returns a (sharded)
+    array whose global sum is the metric — the paper's §3.4 two-liner."""
+
+    def op(sim):
+        return float(jnp.sum(extract(sim.state)))
+
+    op.__name__ = name or getattr(extract, "__name__", "sum")
+    return op
+
+
+def agent_count(sim) -> int:
+    """Total live agents across all ranks."""
+    return int(jnp.sum(sim.state.soa.valid))
+
+
+def attr_sum(attr: str, name: str = "") -> Callable:
+    """Sum of a scalar attribute over all live agents, all ranks."""
+
+    def op(sim):
+        soa = sim.state.soa
+        return float(jnp.sum(jnp.where(soa.valid, soa.attrs[attr], 0)))
+
+    op.__name__ = name or f"sum_{attr}"
+    return op
+
+
+def attr_mean(attr: str, name: str = "") -> Callable:
+    """Mean of a scalar attribute over all live agents, all ranks."""
+
+    def op(sim):
+        soa = sim.state.soa
+        n = jnp.sum(soa.valid)
+        s = jnp.sum(jnp.where(soa.valid, soa.attrs[attr], 0))
+        return float(s) / max(float(n), 1.0)
+
+    op.__name__ = name or f"mean_{attr}"
+    return op
+
+
+def attr_counts(attr: str, values: Sequence[int],
+                name: str = "") -> Callable:
+    """Per-value occupation counts of an integer attribute (e.g. SIR state
+    compartments) over all live agents, all ranks."""
+    vals = tuple(values)
+
+    def op(sim) -> Tuple[int, ...]:
+        soa = sim.state.soa
+        a = soa.attrs[attr]
+        return tuple(int(jnp.sum((a == v) & soa.valid)) for v in vals)
+
+    op.__name__ = name or f"counts_{attr}"
+    return op
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint operation
+# ---------------------------------------------------------------------------
+
+def checkpoint_op(ckpt_dir: str, keep: int = 3) -> Callable:
+    """Operation wrapping ``distributed.checkpoint.save_abm``: a logical,
+    mesh-independent ABM checkpoint of the facade's current engine+state,
+    labeled with the live iteration counter."""
+
+    def op(sim) -> Optional[str]:
+        from repro.distributed.checkpoint import save_abm
+        return save_abm(ckpt_dir, sim.iteration, sim.engine, sim.state,
+                        keep=keep)
+
+    op.__name__ = "checkpoint"
+    return op
+
+
+def positions_of(state) -> np.ndarray:
+    """Host-side (N, 2) positions of all live agents (diagnostics helper)."""
+    v = np.asarray(state.soa.valid).ravel()
+    return np.asarray(state.soa.attrs["pos"]).reshape(-1, 2)[v]

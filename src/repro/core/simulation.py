@@ -1,0 +1,320 @@
+"""The ``Simulation`` facade — one object that owns mesh, re-shard,
+operations, and checkpoints.
+
+The paper's headline usability claim is the seamless laptop-to-supercomputer
+model API (§3.4); BioDynaMo realizes it with a ``Simulation`` object owning
+the resource manager plus lists of per-agent behaviors and scheduled
+operations.  This module is that object for the TPU engine:
+
+    sim = Simulation(
+        dict(interior=(8, 8), mesh_shape=(2, 2), cap=48),
+        [mechanics_behavior, sir_behavior],          # composed automatically
+        dt=0.1,
+        rebalance=Rebalance(every=5, threshold=0.3, weighted=True),
+        checkpoint=Checkpoint("ckpts", every=50),
+    )
+    sim.init(positions, attrs, seed=0)
+    sim.every(1, operations.agent_count)
+    sim.run(100)
+    sim.series["agent_count"], sim.engine, sim.state   # always consistent
+
+``sim.engine`` / ``sim.state`` / ``sim.mesh`` always reflect the
+post-re-shard world: when the scheduled rebalance operation mass-migrates
+the state onto a better mesh, the facade rebuilds its step function and
+device mesh in place — there is no stale engine handle for a caller to
+hold, which retires the ``warn_if_stale_engine`` contract for facade users
+(the shims ``sims.common.make_engine``/``run_sim`` keep it for legacy code).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Union
+
+import jax
+import numpy as np
+
+from repro.core.behaviors import Behavior, compose
+from repro.core.delta import DeltaConfig
+from repro.core.engine import Engine, SimState, total_agents
+from repro.core.grid import GridGeom
+from repro.core.operations import Operation, checkpoint_op
+from repro.core.reshard import Rebalancer, estimate_device_runtimes
+
+# Geometry defaults applied when the first argument is a kwargs dict
+# (mirrors the historical sims.common.make_engine defaults).
+_GEOM_DEFAULTS = dict(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+                      cap=24, boundary="closed")
+
+
+@dataclasses.dataclass(frozen=True)
+class Rebalance:
+    """Dynamic load balancing policy for the facade (paper §2.4.5).
+
+    ``weighted=True`` feeds ``Rebalancer.runtimes`` from a measured signal:
+    at the rebalance cadence the facade times the step immediately before
+    the check (host wall clock, synchronized with ``block_until_ready``) and
+    attributes it per device by measured pair-interaction work
+    (``reshard.estimate_device_runtimes``) — so a device full of densely
+    clustered agents weighs more than one with the same count spread out.
+    Weighted checks are deferred until a measurement exists, so the first
+    one runs at iteration ``every`` rather than 0 (unweighted checks keep
+    the iteration-0 check, matching ``Engine.drive``).
+    """
+
+    every: int = 10
+    threshold: float = 0.5
+    min_gain: float = 1.5
+    weighted: bool = False
+
+
+@dataclasses.dataclass(frozen=True)
+class Checkpoint:
+    """Scheduled logical ABM checkpoints (``checkpoint.save_abm``): mesh-
+    independent, restorable onto any device count via
+    ``elastic.elastic_restore_abm``."""
+
+    dir: str
+    every: int = 100
+    keep: int = 3
+
+
+class Simulation:
+    """Single owner of engine, mesh, state, step function, and rebalancer.
+
+    Args:
+      geom: a :class:`GridGeom`, or a dict of GridGeom kwargs (defaults:
+        ``cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1), cap=24,
+        boundary="closed"``).
+      behaviors: one :class:`Behavior` or a sequence — sequences are merged
+        with :func:`repro.core.behaviors.compose`.
+      mesh: an explicit ``(sx, sy)`` device mesh; by default one is built
+        lazily via ``launch.mesh.make_abm_mesh`` whenever
+        ``geom.mesh_shape != (1, 1)`` (and rebuilt after every re-shard).
+      delta: optional :class:`DeltaConfig` for delta-encoded aura exchange.
+      dt: integration step.
+      rebalance: a :class:`Rebalance` policy, an int shorthand for
+        ``Rebalance(every=n)``, or None.
+      checkpoint: a :class:`Checkpoint` spec, a directory-path shorthand
+        for ``Checkpoint(dir)``, or None.
+    """
+
+    def __init__(self, geom: Union[GridGeom, Dict[str, Any]],
+                 behaviors: Union[Behavior, Sequence[Behavior]], *,
+                 mesh=None, delta: Optional[DeltaConfig] = None,
+                 dt: float = 1.0,
+                 rebalance: Union[Rebalance, int, None] = None,
+                 checkpoint: Union[Checkpoint, str, None] = None):
+        if isinstance(geom, dict):
+            geom = GridGeom(**{**_GEOM_DEFAULTS, **geom})
+        if isinstance(behaviors, Behavior):
+            behavior = behaviors
+        else:
+            behs = tuple(behaviors)
+            behavior = behs[0] if len(behs) == 1 else compose(*behs)
+        self.engine: Engine = Engine(
+            geom=geom, behavior=behavior,
+            delta_cfg=delta or DeltaConfig(enabled=False), dt=dt)
+        self.state: Optional[SimState] = None
+        self.series: Dict[str, List[Any]] = {}
+        self._mesh = mesh
+        self._step_fn: Optional[Callable] = None
+        self._ticks = 0          # step counter across run() calls
+        self._force_full = False  # next aura exchange must be a full refresh
+        self._last_step_s: Optional[float] = None  # weighted-rebalance sample
+        self._ops: List[Operation] = []
+
+        if isinstance(rebalance, int):
+            rebalance = Rebalance(every=rebalance)
+        self._weighted = bool(rebalance and rebalance.weighted)
+        self.rebalancer: Optional[Rebalancer] = None
+        if rebalance is not None and rebalance.every > 0:
+            self.rebalancer = Rebalancer(
+                every=rebalance.every, threshold=rebalance.threshold,
+                min_gain=rebalance.min_gain)
+            self._ops.append(Operation(
+                fn=Simulation._maybe_rebalance, every=rebalance.every,
+                name="rebalance", pre=True, record=False))
+
+        if isinstance(checkpoint, str):
+            checkpoint = Checkpoint(dir=checkpoint)
+        if checkpoint is not None:
+            self._ops.append(Operation(
+                fn=checkpoint_op(checkpoint.dir, keep=checkpoint.keep),
+                every=checkpoint.every, name="checkpoint", record=False))
+
+    # ------------------------------------------------------------------
+    # Introspection
+    # ------------------------------------------------------------------
+    @property
+    def geom(self) -> GridGeom:
+        return self.engine.geom
+
+    @property
+    def behavior(self) -> Behavior:
+        return self.engine.behavior
+
+    @property
+    def mesh(self):
+        """The live spatial device mesh (None on a 1x1 geometry).  Always
+        matches ``self.engine.geom.mesh_shape``, also right after a
+        re-shard."""
+        if self.engine.geom.mesh_shape == (1, 1):
+            return None
+        if (self._mesh is None
+                or self._mesh.devices.shape != self.engine.geom.mesh_shape):
+            from repro.launch.mesh import make_abm_mesh  # deferred: devices
+            self._mesh = make_abm_mesh(self.engine.geom.mesh_shape)
+        return self._mesh
+
+    @property
+    def iteration(self) -> int:
+        """The engine iteration counter (survives re-shards and restores)."""
+        if self.state is None:
+            return 0
+        return int(np.max(np.asarray(self.state.it)))
+
+    def n_agents(self) -> int:
+        return total_agents(self.state)
+
+    # ------------------------------------------------------------------
+    # Setup
+    # ------------------------------------------------------------------
+    def init(self, positions: np.ndarray, attrs: Dict[str, np.ndarray],
+             seed: int = 0, **kwargs) -> "Simulation":
+        """Distributed initialization (Engine.init_state) through the
+        facade; returns self for chaining."""
+        self.state = self.engine.init_state(positions, attrs, seed=seed,
+                                            **kwargs)
+        self._step_fn = None
+        return self
+
+    def with_state(self, engine: Engine, state: SimState) -> "Simulation":
+        """Adopt an existing (engine, state) pair — e.g. from
+        ``elastic.elastic_restore_abm`` — keeping facade ownership of the
+        mesh, step function, and scheduled operations."""
+        self.engine = engine
+        self.state = state
+        self._step_fn = None
+        self._force_full = True
+        return self
+
+    def every(self, n: int, op: Callable, *, name: Optional[str] = None,
+              pre: bool = False, record: bool = True) -> "Simulation":
+        """Schedule ``op(sim)`` every ``n`` iterations (BioDynaMo's
+        scheduled-operation list).  Non-None results are appended to
+        ``self.series[name]``.  Returns self for chaining."""
+        self._ops.append(Operation(
+            fn=op, every=n, pre=pre, record=record,
+            name=name or getattr(op, "__name__", f"op{len(self._ops)}")))
+        return self
+
+    # ------------------------------------------------------------------
+    # Running
+    # ------------------------------------------------------------------
+    def _make_step(self) -> Callable:
+        if self.engine.geom.mesh_shape == (1, 1):
+            return self.engine.make_local_step()
+        return self.engine.make_sharded_step(self.mesh)
+
+    def _maybe_rebalance(self) -> None:
+        rb = self.rebalancer
+        if self._weighted:
+            if self._last_step_s is None:
+                # weighted checks only run on a fresh measurement; the
+                # first sampled step lands right before the next due tick
+                return
+            rb.runtimes = estimate_device_runtimes(
+                self.engine.geom, self.state, self._last_step_s)
+        eng, state, resharded = rb.maybe_reshard(self.engine, self.state)
+        if resharded:
+            # the one place a re-shard surfaces: the facade swaps its own
+            # engine/state/step/mesh, so callers never see a stale handle
+            self.engine, self.state = eng, state
+            self._step_fn = self._make_step()
+            self._force_full = True
+
+    def run(self, steps: int,
+            collect: Optional[Callable[[SimState], Any]] = None
+            ) -> "Simulation":
+        """Drive ``steps`` iterations: scheduled pre-ops (re-shard checks),
+        the compiled step honoring the delta refresh schedule, scheduled
+        post-ops (reducers, checkpoints).  ``collect(state)`` is a
+        convenience alias for ``sim.every(1, ...)`` recording under
+        ``"collect"``.  Returns self."""
+        if self.state is None:
+            raise RuntimeError("Simulation.run() before init(): call "
+                               "sim.init(positions, attrs) first")
+        ops = list(self._ops)
+        if collect is not None:
+            ops.append(Operation(fn=lambda sim: collect(sim.state),
+                                 every=1, name="collect"))
+        if self._step_fn is None:
+            self._step_fn = self._make_step()
+        delta = self.engine.delta_cfg
+        refresh = max(int(delta.refresh_interval), 1)
+        rb = self.rebalancer
+
+        for _ in range(int(steps)):
+            tick = self._ticks
+            for op in ops:
+                if op.pre and op.due(tick):
+                    self._run_op(op)
+            full = (self._force_full or not delta.enabled
+                    or tick % refresh == 0)
+            self._force_full = False
+            # sample wall time for the step right before a weighted
+            # rebalance check so the runtimes signal is one step fresh
+            sample = (self._weighted and rb is not None
+                      and rb.due(tick + 1))
+            t0 = time.perf_counter() if sample else 0.0
+            self.state = self._step_fn(self.state, full_halo=full)
+            if sample:
+                jax.block_until_ready(self.state.soa.valid)
+                self._last_step_s = time.perf_counter() - t0
+            for op in ops:
+                if not op.pre and op.due(tick):
+                    self._run_op(op)
+            self._ticks += 1
+        return self
+
+    def _run_op(self, op: Operation) -> None:
+        value = op.fn(self)
+        if op.record and value is not None:
+            self.series.setdefault(op.name, []).append(value)
+
+    def step(self) -> "Simulation":
+        """Single iteration through the full scheduled pipeline."""
+        return self.run(1)
+
+    # ------------------------------------------------------------------
+    # Checkpointing (on demand; scheduled saves go through Checkpoint)
+    # ------------------------------------------------------------------
+    def save(self, ckpt_dir: str, keep: int = 3) -> str:
+        """One logical ABM checkpoint of the current engine+state."""
+        from repro.distributed.checkpoint import save_abm
+        return save_abm(ckpt_dir, self.iteration, self.engine, self.state,
+                        keep=keep)
+
+    @classmethod
+    def restore(cls, ckpt_dir: str,
+                behaviors: Union[Behavior, Sequence[Behavior]], *,
+                n_devices: Optional[int] = None,
+                delta: Optional[DeltaConfig] = None,
+                dt: Optional[float] = None,
+                rebalance: Union[Rebalance, int, None] = None,
+                checkpoint: Union[Checkpoint, str, None] = None,
+                ) -> "Simulation":
+        """Elastic restore: rebuild a facade from a logical checkpoint onto
+        the current (possibly different) device count."""
+        from repro.distributed.elastic import elastic_restore_abm
+        if not isinstance(behaviors, Behavior):
+            behs = tuple(behaviors)
+            behaviors = behs[0] if len(behs) == 1 else compose(*behs)
+        engine, state, _ = elastic_restore_abm(
+            ckpt_dir, behaviors, n_devices=n_devices, delta_cfg=delta,
+            dt=dt)
+        sim = cls(engine.geom, behaviors, delta=delta or engine.delta_cfg,
+                  dt=engine.dt, rebalance=rebalance, checkpoint=checkpoint)
+        return sim.with_state(engine, state)

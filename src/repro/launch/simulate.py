@@ -1,11 +1,13 @@
 """ABM simulation launcher — the TeraAgent-analogue entry point.
 
     PYTHONPATH=src python -m repro.launch.simulate --sim epidemiology \
-        --agents 800 --steps 50 --mesh 2x2 --delta int16
+        --agents 800 --steps 50 --mesh 2x2 --delta int16 --rebalance 10
 
-Spatial meshes map devices to the partitioning grid exactly as the paper
-maps MPI ranks (Figure 1); ``--delta`` enables the §2.3 delta-encoded aura
-exchange.
+Every sim runs through the :class:`repro.core.Simulation` facade: spatial
+meshes map devices to the partitioning grid exactly as the paper maps MPI
+ranks (Figure 1); ``--delta`` enables the §2.3 delta-encoded aura exchange;
+``--rebalance`` arms the §2.4.5 dynamic load balancer (the facade keeps its
+engine/state consistent across any mid-run re-shard).
 """
 
 from __future__ import annotations
@@ -16,16 +18,16 @@ import time
 import jax
 import jax.numpy as jnp
 
-from repro.core import DeltaConfig
-from repro.core.engine import total_agents
+from repro.core import DeltaConfig, Rebalance, total_agents
 from repro.launch.mesh import make_abm_mesh
+
+SIMS = ["cell_clustering", "cell_proliferation", "epidemiology",
+        "oncology", "sir_mechanics"]
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--sim", required=True,
-                    choices=["cell_clustering", "cell_proliferation",
-                             "epidemiology", "oncology"])
+    ap.add_argument("--sim", required=True, choices=SIMS)
     ap.add_argument("--agents", type=int, default=400)
     ap.add_argument("--steps", type=int, default=30)
     ap.add_argument("--mesh", default="1x1", help="e.g. 2x2 (spatial)")
@@ -33,6 +35,14 @@ def main():
                     choices=["off", "int8", "int16"])
     ap.add_argument("--interior", type=int, default=16,
                     help="global NSG cells per axis")
+    ap.add_argument("--rebalance", type=int, default=0, metavar="N",
+                    help="check occupancy imbalance every N iterations "
+                         "and re-shard past --imbalance")
+    ap.add_argument("--imbalance", type=float, default=0.5,
+                    help="re-shard threshold for --rebalance")
+    ap.add_argument("--weighted", action="store_true",
+                    help="weight the rebalance histogram by measured "
+                         "per-device step times")
     args = ap.parse_args()
 
     import importlib
@@ -49,12 +59,18 @@ def main():
     if args.delta != "off":
         delta = DeltaConfig(enabled=True, qdtype=jnp.dtype(args.delta),
                             refresh_interval=16)
+    rebalance = None
+    if args.rebalance > 0:
+        rebalance = Rebalance(every=args.rebalance,
+                              threshold=args.imbalance,
+                              weighted=args.weighted)
 
     interior = (args.interior // mx, args.interior // my)
     t0 = time.time()
     state, metrics = mod.run(
         n_agents=args.agents, steps=args.steps, mesh=mesh,
-        mesh_shape=(mx, my), interior=interior, delta=delta)
+        mesh_shape=(mx, my), interior=interior, delta=delta,
+        rebalance=rebalance)
     dt = time.time() - t0
     n = total_agents(state)
     print(f"sim={args.sim} devices={mx*my} agents={n} steps={args.steps} "

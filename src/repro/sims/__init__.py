@@ -1,2 +1,5 @@
-"""The paper's four benchmark simulations (§3.1): cell clustering, cell
-proliferation, epidemiology (SIR), oncology (tumor spheroid)."""
+"""The paper's four benchmark simulations (§3.1) — cell clustering, cell
+proliferation, epidemiology (SIR), oncology (tumor spheroid) — plus
+``sir_mechanics``, a composed-behavior sim (``compose(mechanics, sir)``)
+exercising the facade's behavior-stacking algebra.  Each module exposes
+``simulation(...) -> repro.core.Simulation`` and a ``run(...)`` wrapper."""

@@ -7,9 +7,9 @@ from __future__ import annotations
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AgentSchema, Behavior
+from repro.core import AgentSchema, Behavior, Simulation
 from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
-from repro.sims.common import make_engine, run_sim, uniform_positions
+from repro.sims.common import init_agents, make_sim, uniform_positions
 
 SCHEMA = AgentSchema.create({
     "diameter": ((), jnp.float32),
@@ -30,20 +30,19 @@ def behavior(repulsion=2.0, adhesion=0.6, radius=2.0, max_step=0.5
     )
 
 
-def init(engine, n_agents: int, seed: int = 0):
+def init(sim, n_agents: int, seed: int = 0):
+    """Initialize through the facade (also accepts a raw Engine)."""
     rng = np.random.default_rng(seed)
-    pos = uniform_positions(rng, n_agents, engine.geom)
+    pos = uniform_positions(rng, n_agents, sim.geom)
     attrs = {
         "diameter": np.full((n_agents,), 1.0, np.float32),
         "ctype": rng.integers(0, 2, n_agents).astype(np.int32),
     }
-    return engine.init_state(pos, attrs, seed=seed)
+    return init_agents(sim, pos, attrs, seed=seed)
 
 
 def same_type_fraction(state, engine) -> float:
     """Clustering metric: fraction of neighbor pairs with equal type."""
-    import jax
-
     from repro.core.neighbors import pair_accumulate
 
     def pair_fn(ai, aj, disp, dist2, params):
@@ -57,12 +56,22 @@ def same_type_fraction(state, engine) -> float:
     return same / max(cnt, 1.0)
 
 
+def simulation(n_agents=400, seed=0, mesh=None, mesh_shape=(1, 1),
+               interior=(8, 8), delta=None, rebalance=None, **bparams
+               ) -> Simulation:
+    """Build and initialize the clustering sim on the facade."""
+    sim = make_sim(behavior(**bparams), interior=interior,
+                   mesh_shape=mesh_shape, delta=delta, mesh=mesh,
+                   rebalance=rebalance)
+    return init(sim, n_agents, seed)
+
+
 def run(n_agents=400, steps=30, seed=0, mesh=None, mesh_shape=(1, 1),
-        interior=(8, 8), delta=None):
-    eng = make_engine(behavior(), interior=interior, mesh_shape=mesh_shape,
-                      delta=delta)
-    state = init(eng, n_agents, seed)
-    f0 = same_type_fraction(state, eng)
-    state, _ = run_sim(eng, state, steps, mesh=mesh)
-    f1 = same_type_fraction(state, eng)
-    return state, {"same_frac_initial": f0, "same_frac_final": f1}
+        interior=(8, 8), delta=None, rebalance=None):
+    sim = simulation(n_agents=n_agents, seed=seed, mesh=mesh,
+                     mesh_shape=mesh_shape, interior=interior, delta=delta,
+                     rebalance=rebalance)
+    f0 = same_type_fraction(sim.state, sim.engine)
+    sim.run(steps)
+    f1 = same_type_fraction(sim.state, sim.engine)
+    return sim.state, {"same_frac_initial": f0, "same_frac_final": f1}

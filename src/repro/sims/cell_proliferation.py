@@ -7,9 +7,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AgentSchema, Behavior, POS
+from repro.core import AgentSchema, Behavior, POS, Simulation, operations
 from repro.core.behaviors import soft_repulsion_adhesion
-from repro.sims.common import disk_positions, make_engine, run_sim
+from repro.sims.common import disk_positions, init_agents, make_sim
 
 SCHEMA = AgentSchema.create({
     "diameter": ((), jnp.float32),
@@ -54,27 +54,32 @@ def behavior(radius=2.0) -> Behavior:
     )
 
 
-def init(engine, n_agents: int, seed: int = 0):
+def init(sim, n_agents: int, seed: int = 0):
     rng = np.random.default_rng(seed)
-    lx, ly = engine.geom.domain_size
+    lx, ly = sim.geom.domain_size
     pos = disk_positions(rng, n_agents, (lx / 2, ly / 2), min(lx, ly) / 8)
     attrs = {
         "diameter": np.full((n_agents,), 0.6, np.float32),
         "ctype": np.zeros((n_agents,), np.int32),
     }
-    return engine.init_state(pos, attrs, seed=seed)
+    return init_agents(sim, pos, attrs, seed=seed)
+
+
+def simulation(n_agents=50, seed=0, mesh=None, mesh_shape=(1, 1),
+               interior=(8, 8), delta=None, rebalance=None) -> Simulation:
+    sim = make_sim(behavior(), interior=interior, mesh_shape=mesh_shape,
+                   cap=32, delta=delta, mesh=mesh, rebalance=rebalance)
+    return init(sim, n_agents, seed)
 
 
 def run(n_agents=50, steps=20, seed=0, mesh=None, mesh_shape=(1, 1),
-        interior=(8, 8), delta=None):
-    from repro.core.engine import total_agents
-
-    eng = make_engine(behavior(), interior=interior, mesh_shape=mesh_shape,
-                      cap=32, delta=delta)
-    state = init(eng, n_agents, seed)
-    n0 = total_agents(state)
-    counts = []
-    state, counts = run_sim(eng, state, steps, mesh=mesh,
-                            collect=lambda s: total_agents(s))
-    return state, {"n_initial": n0, "n_final": counts[-1],
-                   "counts": counts}
+        interior=(8, 8), delta=None, rebalance=None):
+    sim = simulation(n_agents=n_agents, seed=seed, mesh=mesh,
+                     mesh_shape=mesh_shape, interior=interior, delta=delta,
+                     rebalance=rebalance)
+    n0 = sim.n_agents()
+    sim.every(1, operations.agent_count, name="counts")
+    sim.run(steps)
+    counts = sim.series["counts"]
+    return sim.state, {"n_initial": n0, "n_final": counts[-1],
+                       "counts": counts}

@@ -1,27 +1,26 @@
-"""Shared scaffolding for the paper's benchmark simulations (§3.1)."""
+"""Shared scaffolding for the paper's benchmark simulations (§3.1).
+
+The sims build on :class:`repro.core.Simulation` — ``make_sim`` wires the
+historical geometry defaults into the facade.  The former
+``make_engine``/``run_sim`` pairing survives only as deprecation shims with
+the one-line facade equivalent in the warning text.
+"""
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+import warnings
+from typing import Callable, Optional, Tuple, Union
 
-import jax
-import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AgentSchema, Behavior, DeltaConfig, Engine, GridGeom
-from repro.core.engine import SimState, total_agents, warn_if_stale_engine
+from repro.core import (
+    Behavior, DeltaConfig, Engine, GridGeom, Rebalance, Simulation,
+)
+from repro.core.engine import SimState, warn_if_stale_engine
 
 
-@dataclasses.dataclass
-class SimSetup:
-    engine: Engine
-    state: SimState
-    step: Callable
-
-
-def make_engine(
-    behavior: Behavior,
+def make_sim(
+    behaviors,
     *,
     interior: Tuple[int, int] = (8, 8),
     mesh_shape: Tuple[int, int] = (1, 1),
@@ -31,18 +30,23 @@ def make_engine(
     delta: Optional[DeltaConfig] = None,
     dt: float = 0.1,
     mesh=None,
-    rebalance_every: int = 0,
-    imbalance_threshold: float = 0.5,
-) -> Engine:
-    """``rebalance_every`` > 0 arms the dynamic load balancer (paper §2.4.5,
-    core.reshard): every that many iterations the run loop checks the
-    occupancy imbalance and re-shards past ``imbalance_threshold``."""
-    geom = GridGeom(cell_size=cell_size, interior=interior,
-                    mesh_shape=mesh_shape, cap=cap, boundary=boundary)
-    return Engine(geom=geom, behavior=behavior,
-                  delta_cfg=delta or DeltaConfig(enabled=False), dt=dt,
-                  rebalance_every=rebalance_every,
-                  imbalance_threshold=imbalance_threshold)
+    rebalance: Union[Rebalance, int, None] = None,
+    checkpoint=None,
+) -> Simulation:
+    """Facade builder with the sims' historical geometry defaults."""
+    return Simulation(
+        dict(cell_size=cell_size, interior=interior, mesh_shape=mesh_shape,
+             cap=cap, boundary=boundary),
+        behaviors, mesh=mesh, delta=delta, dt=dt,
+        rebalance=rebalance, checkpoint=checkpoint)
+
+
+def init_agents(sim, positions: np.ndarray, attrs, seed: int = 0):
+    """Initialize a :class:`Simulation` facade — or, for legacy callers, a
+    raw :class:`Engine` — with the same (positions, attrs) arguments."""
+    if isinstance(sim, Simulation):
+        return sim.init(positions, attrs, seed=seed)
+    return sim.init_state(positions, attrs, seed=seed)
 
 
 def uniform_positions(rng: np.random.Generator, n: int, geom: GridGeom,
@@ -60,15 +64,49 @@ def disk_positions(rng: np.random.Generator, n: int, center, radius
                      center[1] + r * np.sin(th)], axis=1).astype(np.float32)
 
 
+# ---------------------------------------------------------------------------
+# Deprecation shims (the only callers of warn_if_stale_engine)
+# ---------------------------------------------------------------------------
+
+def make_engine(
+    behavior: Behavior,
+    *,
+    interior: Tuple[int, int] = (8, 8),
+    mesh_shape: Tuple[int, int] = (1, 1),
+    cell_size: float = 2.0,
+    cap: int = 24,
+    boundary: str = "closed",
+    delta: Optional[DeltaConfig] = None,
+    dt: float = 0.1,
+    mesh=None,
+    rebalance_every: int = 0,
+    imbalance_threshold: float = 0.5,
+) -> Engine:
+    """DEPRECATED: build a raw Engine.  Use the facade instead:
+    ``Simulation(dict(interior=..., mesh_shape=..., ...), behavior,
+    delta=..., dt=..., rebalance=Rebalance(every=n, threshold=t))``."""
+    warnings.warn(
+        "make_engine is deprecated — use repro.core.Simulation("
+        "dict(interior=..., mesh_shape=..., cap=...), behavior, delta=..., "
+        "dt=..., rebalance=Rebalance(every=n, threshold=t)) instead",
+        DeprecationWarning, stacklevel=2)
+    geom = GridGeom(cell_size=cell_size, interior=interior,
+                    mesh_shape=mesh_shape, cap=cap, boundary=boundary)
+    return Engine(geom=geom, behavior=behavior,
+                  delta_cfg=delta or DeltaConfig(enabled=False), dt=dt,
+                  rebalance_every=rebalance_every,
+                  imbalance_threshold=imbalance_threshold)
+
+
 def run_sim(engine: Engine, state: SimState, steps: int, mesh=None,
             collect: Optional[Callable] = None, rebalancer=None):
-    """Drive a simulation; optionally collect per-step metrics.
-
-    Dynamic load balancing engages when the engine's ``rebalance_every``
-    knob is set or a ``core.reshard.Rebalancer`` is passed explicitly; after
-    a re-shard the state lives on a different mesh, so pass an explicit
-    rebalancer and read ``rebalancer.engine`` when you need the matching
-    engine afterwards (or call ``engine.drive`` directly)."""
+    """DEPRECATED: drive a raw (engine, state) pair.  Use the facade instead:
+    ``sim.run(steps, collect=...)`` — ``sim.engine``/``sim.state`` stay
+    consistent across re-shards with no stale-handle contract to honor."""
+    warnings.warn(
+        "run_sim is deprecated — use repro.core.Simulation: "
+        "sim.run(steps, collect=...); read sim.state / sim.series",
+        DeprecationWarning, stacklevel=2)
     if mesh is not None:
         step = engine.make_sharded_step(mesh)
     else:

@@ -16,8 +16,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AgentSchema, Behavior, POS
-from repro.sims.common import make_engine, run_sim, uniform_positions
+from repro.core import AgentSchema, Behavior, POS, Simulation, operations
+from repro.sims.common import init_agents, make_sim, uniform_positions
 
 S, I, R = 0, 1, 2
 
@@ -62,12 +62,12 @@ def behavior(beta=0.03, gamma=0.25, sigma=1.2, radius=2.0) -> Behavior:
     )
 
 
-def init(engine, n_agents: int, initial_infected: int, seed: int = 0):
+def init(sim, n_agents: int, initial_infected: int, seed: int = 0):
     rng = np.random.default_rng(seed)
-    pos = uniform_positions(rng, n_agents, engine.geom)
+    pos = uniform_positions(rng, n_agents, sim.geom)
     st = np.zeros((n_agents,), np.int32)
     st[rng.choice(n_agents, initial_infected, replace=False)] = I
-    return engine.init_state(pos, {"state": st}, seed=seed)
+    return init_agents(sim, pos, {"state": st}, seed=seed)
 
 
 def sir_counts(state) -> tuple:
@@ -100,11 +100,25 @@ def sir_ode(n, i0, beta_eff, gamma, dt, steps):
     return np.array(out)
 
 
+def simulation(n_agents=600, initial_infected=30, seed=0, mesh=None,
+               mesh_shape=(1, 1), interior=(10, 10), delta=None,
+               rebalance=None, **bparams) -> Simulation:
+    """SIR sim on the facade, with the S/I/R compartment reducer (the
+    paper's §3.4 ``SumOverAllRanks`` two-liner) pre-scheduled every step."""
+    sim = make_sim(behavior(**bparams), interior=interior,
+                   mesh_shape=mesh_shape, boundary="toroidal", dt=1.0,
+                   delta=delta, mesh=mesh, rebalance=rebalance)
+    init(sim, n_agents, initial_infected, seed)
+    sim.every(1, operations.attr_counts("state", (S, I, R)), name="sir")
+    return sim
+
+
 def run(n_agents=600, steps=60, initial_infected=30, seed=0, mesh=None,
-        mesh_shape=(1, 1), interior=(10, 10), delta=None, **bparams):
-    eng = make_engine(behavior(**bparams), interior=interior,
-                      mesh_shape=mesh_shape, boundary="toroidal", dt=1.0)
-    state = init(eng, n_agents, initial_infected, seed)
-    state, series = run_sim(eng, state, steps, mesh=mesh,
-                            collect=sir_counts)
-    return state, {"series": np.array(series)}
+        mesh_shape=(1, 1), interior=(10, 10), delta=None, rebalance=None,
+        **bparams):
+    sim = simulation(n_agents=n_agents, initial_infected=initial_infected,
+                     seed=seed, mesh=mesh, mesh_shape=mesh_shape,
+                     interior=interior, delta=delta, rebalance=rebalance,
+                     **bparams)
+    sim.run(steps)
+    return sim.state, {"series": np.array(sim.series["sir"])}

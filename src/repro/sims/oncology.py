@@ -13,9 +13,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import AgentSchema, Behavior, POS
+from repro.core import AgentSchema, Behavior, POS, Simulation, total_agents
 from repro.core.behaviors import soft_repulsion_adhesion
-from repro.sims.common import disk_positions, make_engine, run_sim
+from repro.sims.common import disk_positions, init_agents, make_sim
 
 SCHEMA = AgentSchema.create({
     "diameter": ((), jnp.float32),
@@ -61,15 +61,15 @@ def behavior(radius=2.0) -> Behavior:
     )
 
 
-def init(engine, n_agents: int, seed: int = 0):
+def init(sim, n_agents: int, seed: int = 0):
     rng = np.random.default_rng(seed)
-    lx, ly = engine.geom.domain_size
+    lx, ly = sim.geom.domain_size
     pos = disk_positions(rng, n_agents, (lx / 2, ly / 2), 1.2)
     attrs = {
         "diameter": np.full((n_agents,), 0.9, np.float32),
         "ctype": np.ones((n_agents,), np.int32),
     }
-    return engine.init_state(pos, attrs, seed=seed)
+    return init_agents(sim, pos, attrs, seed=seed)
 
 
 def tumor_diameter(state) -> float:
@@ -83,15 +83,18 @@ def tumor_diameter(state) -> float:
     return float(np.max(ext))
 
 
-def run(n_agents=30, steps=25, seed=0, mesh=None, mesh_shape=(1, 1),
-        interior=(10, 10), delta=None):
-    from repro.core.engine import total_agents
+def simulation(n_agents=30, seed=0, mesh=None, mesh_shape=(1, 1),
+               interior=(10, 10), delta=None, rebalance=None) -> Simulation:
+    sim = make_sim(behavior(), interior=interior, mesh_shape=mesh_shape,
+                   cap=32, delta=delta, mesh=mesh, rebalance=rebalance)
+    return init(sim, n_agents, seed)
 
-    eng = make_engine(behavior(), interior=interior, mesh_shape=mesh_shape,
-                      cap=32, delta=delta)
-    state = init(eng, n_agents, seed)
-    d0 = tumor_diameter(state)
-    state, series = run_sim(
-        eng, state, steps, mesh=mesh,
-        collect=lambda s: (total_agents(s), tumor_diameter(s)))
-    return state, {"diam_initial": d0, "series": series}
+
+def run(n_agents=30, steps=25, seed=0, mesh=None, mesh_shape=(1, 1),
+        interior=(10, 10), delta=None, rebalance=None):
+    sim = simulation(n_agents=n_agents, seed=seed, mesh=mesh,
+                     mesh_shape=mesh_shape, interior=interior, delta=delta,
+                     rebalance=rebalance)
+    d0 = tumor_diameter(sim.state)
+    sim.run(steps, collect=lambda s: (total_agents(s), tumor_diameter(s)))
+    return sim.state, {"diam_initial": d0, "series": sim.series["collect"]}
