@@ -6,15 +6,25 @@ Prints ``name,us_per_call,derived`` CSV rows:
                       generic pack/unpack serializer baseline
   delta_*           — paper Fig. 11: delta encoding message-size reduction +
                       distribution-op overhead per benchmark simulation
+  sweep_*           — interaction-sweep micro-bench: the three backends
+                      (reference | tiled | pallas) on one workload, pair
+                      evaluations/s and speedup vs the reference gather
+                      (docs/performance.md explains how to read these)
   sim_*             — paper Fig. 6 analogue: per-simulation iteration rate
                       (agent_updates/s, the Biocellion comparison metric §3.8)
   scaling_*         — paper Fig. 8/9 analogue: strong scaling over placeholder
-                      spatial meshes (subprocess: needs >1 XLA host device)
+                      spatial meshes at FIXED global problem size
+                      (subprocess: needs >1 XLA host device); derived reports
+                      agent_updates/s, parallel efficiency vs 1 device, and
+                      halo bytes/iter
   roofline_*        — LM stack: dry-run-derived roofline summary per chosen
                       cell (reads results/dryrun; skips if absent)
 
 CPU wall-clock here characterizes the harness, not TPU performance; the TPU
 performance analysis lives in EXPERIMENTS.md §Roofline/§Perf.
+
+``--only PREFIX[,PREFIX...]`` runs a subset (e.g. ``--only sweep`` for the
+CI sweep smoke step).
 """
 
 from __future__ import annotations
@@ -122,6 +132,55 @@ def bench_delta():
 
 
 # ---------------------------------------------------------------------------
+# Interaction-sweep micro-bench: the hot kernel, isolated per backend
+# ---------------------------------------------------------------------------
+
+def bench_sweep():
+    """Time one jitted neighborhood sweep per backend on a shared workload.
+
+    ``pairs/s`` counts candidate pair evaluations (interior agents x 9K
+    neighborhood slots) — the sweep's actual arithmetic work.  The Pallas
+    row runs in interpret mode on CPU (that row measures the interpreter,
+    not Mosaic; it exists to keep the TPU path's parity + plumbing hot).
+    """
+    from repro.core import Engine, GridGeom
+    from repro.core.neighbors import sweep_accumulate
+    from repro.sims import cell_clustering
+
+    beh = cell_clustering.behavior()
+    geom = GridGeom(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1),
+                    cap=24)
+    eng = Engine(geom=geom, behavior=beh, dt=0.1)
+    rng = np.random.default_rng(0)
+    n = 2000
+    lx, ly = geom.domain_size
+    pos = rng.uniform(0.5, lx - 0.5, (n, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": rng.integers(0, 2, n).astype(np.int32)}
+    state = eng.init_state(pos, attrs, seed=0)
+    ix, iy = geom.interior
+    # the sweep's masked arithmetic runs over every interior agent SLOT
+    # (valid or not) x its 9K neighborhood candidates
+    pairs = ix * iy * geom.cap * 9 * geom.cap
+
+    times = {}
+    for backend in ("reference", "tiled", "pallas"):
+        fn = jax.jit(lambda soa, b=backend: sweep_accumulate(
+            geom, soa, beh.pair_fn, beh.pair_attrs, beh.radius, beh.params,
+            backend=b))
+        out = fn(state.soa)                      # compile
+        jax.block_until_ready(out)
+        reps = 2 if backend == "pallas" else 10
+        t = timeit(lambda: jax.block_until_ready(fn(state.soa)),
+                   n=reps, warmup=1)
+        times[backend] = t
+        extra = "_interpret" if backend == "pallas" else ""
+        emit(f"sweep_{backend}", t,
+             f"pairs_per_s={pairs / (t / 1e6):.3g}"
+             f"_speedup_vs_reference={times['reference'] / t:.2f}x{extra}")
+
+
+# ---------------------------------------------------------------------------
 # Fig 6 / §3.8 analogue: per-sim iteration rate
 # ---------------------------------------------------------------------------
 
@@ -152,24 +211,39 @@ def bench_sims():
 # ---------------------------------------------------------------------------
 
 def bench_scaling():
+    """Strong scaling at FIXED global problem size (800 agents on a fixed
+    16x16 global cell grid): the step loop itself is timed (init and metric
+    setup excluded), normalized to agent_updates/s, with parallel
+    efficiency vs the 1-device run and the aura-exchange wire bytes per
+    iteration — the quantities a mesh-shape comparison is actually about."""
     code = """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import time, numpy as np, jax
 from repro.sims import cell_clustering
 
+n, steps = 800, 12
+base_rate = None
 for mesh_shape in ((1, 1), (2, 1), (2, 2)):
     n_dev = mesh_shape[0] * mesh_shape[1]
     from repro.launch.mesh import make_abm_mesh
     mesh = make_abm_mesh(mesh_shape) if n_dev > 1 else None
     interior = (16 // mesh_shape[0], 16 // mesh_shape[1])
-    _ = cell_clustering.run(n_agents=800, steps=2, interior=interior,
-                            mesh_shape=mesh_shape, mesh=mesh)
+    sim = cell_clustering.simulation(n_agents=n, interior=interior,
+                                     mesh_shape=mesh_shape, mesh=mesh)
+    sim.run(2)                                    # warm compile
+    jax.block_until_ready(sim.state.soa.valid)
     t0 = time.perf_counter()
-    cell_clustering.run(n_agents=800, steps=6, interior=interior,
-                        mesh_shape=mesh_shape, mesh=mesh)
-    dt = (time.perf_counter() - t0) / 6
-    print(f"scaling_devices_{n_dev},{dt*1e6:.1f},iter_s={dt:.4f}")
+    sim.run(steps)
+    jax.block_until_ready(sim.state.soa.valid)
+    dt = (time.perf_counter() - t0) / steps
+    rate = n / dt
+    base_rate = base_rate or rate
+    eff = rate / (base_rate * n_dev)
+    hb = int(np.asarray(sim.state.halo_bytes).sum())
+    print(f"scaling_devices_{n_dev},{dt*1e6:.1f},"
+          f"agent_updates_per_s={rate:.0f}_efficiency={eff:.2f}"
+          f"_halo_bytes_iter={hb}")
 """
     run_sub_bench(code, "scaling_")
 
@@ -260,8 +334,10 @@ print(f"rebalance_iter_rate,{dt1*1e6:.1f},"
 # ---------------------------------------------------------------------------
 
 def bench_api_overhead():
-    """The Simulation facade must iterate within noise (<=5%) of the raw
-    ``engine.drive`` loop — its per-step work is pure Python scheduling."""
+    """Driver dispatch cost: per-step dispatch vs the scan-fused segment
+    runner, and the Simulation facade vs the raw fused ``engine.drive``
+    (the facade must stay within noise — its work is pure Python
+    scheduling at segment boundaries)."""
     import numpy as np
 
     from repro.core import Engine, GridGeom, Simulation
@@ -282,9 +358,15 @@ def bench_api_overhead():
     state0 = eng.init_state(pos, attrs, seed=0)
     step = eng.make_local_step()
 
-    def time_raw():
+    def time_per_step():
         t0 = time.perf_counter()
         _, s, _ = eng.drive(state0, steps, step_fn=step)
+        jax.block_until_ready(s.soa.valid)
+        return (time.perf_counter() - t0) / steps
+
+    def time_fused():
+        t0 = time.perf_counter()
+        _, s, _ = eng.drive(state0, steps)
         jax.block_until_ready(s.soa.valid)
         return (time.perf_counter() - t0) / steps
 
@@ -292,22 +374,25 @@ def bench_api_overhead():
 
     def time_facade():
         sim.init(pos, attrs, seed=0)
-        sim._step_fn = step        # same compiled step: isolate facade cost
         t0 = time.perf_counter()
         sim.run(steps)
         jax.block_until_ready(sim.state.soa.valid)
         return (time.perf_counter() - t0) / steps
 
-    time_raw(), time_facade()                              # warm compile
+    time_per_step(), time_fused(), time_facade()           # warm compile
     # interleave two passes each and keep the best: on shared CPU the
     # scheduler noise exceeds the facade's pure-Python per-step cost
-    t_raw = min(time_raw(), time_raw())
+    t_step = min(time_per_step(), time_per_step())
+    t_fuse = min(time_fused(), time_fused())
     t_fac = min(time_facade(), time_facade())
 
-    emit("api_overhead_raw_drive", t_raw * 1e6,
-         f"agent_updates_per_s={n/t_raw:.0f}")
+    emit("api_overhead_per_step_drive", t_step * 1e6,
+         f"agent_updates_per_s={n/t_step:.0f}_dispatch_per_step")
+    emit("api_overhead_raw_drive", t_fuse * 1e6,
+         f"agent_updates_per_s={n/t_fuse:.0f}"
+         f"_scan_fused_speedup={t_step/t_fuse:.1f}x")
     emit("api_overhead_facade", t_fac * 1e6,
-         f"overhead={(t_fac/t_raw - 1)*100:+.1f}%_vs_raw_drive")
+         f"overhead={(t_fac/t_fuse - 1)*100:+.1f}%_vs_raw_drive")
 
 
 # ---------------------------------------------------------------------------
@@ -334,14 +419,31 @@ def bench_roofline():
              f"dominant={r['dominant']};frac={r['roofline_fraction']:.4f}")
 
 
-def main() -> None:
-    bench_serialization()
-    bench_delta()
-    bench_sims()
-    bench_api_overhead()
-    bench_scaling()
-    bench_rebalance()
-    bench_roofline()
+BENCHES = {
+    "serialization": bench_serialization,
+    "delta": bench_delta,
+    "sweep": bench_sweep,
+    "sim": bench_sims,
+    "api_overhead": bench_api_overhead,
+    "scaling": bench_scaling,
+    "rebalance": bench_rebalance,
+    "roofline": bench_roofline,
+}
+
+
+def main(argv=None) -> None:
+    argv = sys.argv[1:] if argv is None else argv
+    only = None
+    if argv and argv[0] == "--only":
+        if len(argv) < 2:
+            sys.exit("--only needs a prefix list, e.g. --only sweep,sim")
+        only = [p.strip() for p in argv[1].split(",")]
+        if not any(n.startswith(p) for n in BENCHES for p in only):
+            sys.exit(f"--only {argv[1]}: no benchmark matches "
+                     f"(known: {', '.join(BENCHES)})")
+    for name, fn in BENCHES.items():
+        if only is None or any(name.startswith(p) for p in only):
+            fn()
     out = ROOT / "BENCH_results.json"
     out.write_text(json.dumps(
         [{"name": n, "us_per_call": us, "derived": d}

@@ -34,7 +34,11 @@ UpdateFn = Callable[..., Tuple[Dict[str, Array], Array, Array,
                                Optional[Dict[str, Array]]]]
 
 
-@dataclasses.dataclass(frozen=True)
+# eq=False: a Behavior hashes/compares by identity (its pair_fn/update_fn
+# closures and params dict have no structural equality), which makes the
+# enclosing frozen Engine hashable — the key for the compiled step-function
+# caches in core.engine.
+@dataclasses.dataclass(frozen=True, eq=False)
 class Behavior:
     """A full agent behavior: local interaction + pointwise update."""
 

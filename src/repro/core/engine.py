@@ -13,6 +13,7 @@ laptop-to-supercomputer property (§3.4).
 from __future__ import annotations
 
 import dataclasses
+import functools
 from functools import partial
 from typing import Dict, Optional, Tuple
 
@@ -30,7 +31,7 @@ from repro.core.agent_soa import (
 )
 from repro.core.behaviors import Behavior
 from repro.core.delta import DeltaConfig, Slab
-from repro.core.grid import GridGeom, bin_agents, clear_ring
+from repro.core.grid import GridGeom, bin_agents, bin_agents_jit, clear_ring
 from repro.core.halo import (
     Comm,
     LocalComm,
@@ -40,7 +41,7 @@ from repro.core.halo import (
     shard_map_compat,
     take_slab,
 )
-from repro.core.neighbors import pair_accumulate
+from repro.core.neighbors import sweep_accumulate
 
 Array = jax.Array
 
@@ -90,6 +91,10 @@ class Engine:
     # at that cadence and re-shards past imbalance_threshold.
     rebalance_every: int = 0
     imbalance_threshold: float = 0.5
+    # Interaction-sweep backend (core.neighbors.sweep_accumulate):
+    # "auto" resolves to the tiled XLA sweep on CPU/GPU and the fused
+    # Pallas kernel on TPU; "reference" | "tiled" | "pallas" force one.
+    sweep_backend: str = "auto"
 
     # ------------------------------------------------------------------
     # Initialization (host side, numpy-friendly)
@@ -134,7 +139,7 @@ class Engine:
         dev_x = np.clip((positions[:, 0] // lx).astype(np.int64), 0, mx - 1)
         dev_y = np.clip((positions[:, 1] // ly).astype(np.int64), 0, my - 1)
 
-        bin_fn = jax.jit(partial(bin_agents, geom))
+        bin_fn = partial(bin_agents_jit, geom)
 
         carried_gids = GID_RANK in attrs and GID_COUNT in attrs
         if gid_counters is not None and not carried_gids:
@@ -262,9 +267,10 @@ class Engine:
             geom, soa, comm, refs, self.delta_cfg, full_halo
         )
 
-        # 2. Local interaction.
-        acc = pair_accumulate(
-            geom, soa, beh.pair_fn, beh.pair_attrs, beh.radius, beh.params
+        # 2. Local interaction (backend-dispatched fused sweep).
+        acc = sweep_accumulate(
+            geom, soa, beh.pair_fn, beh.pair_attrs, beh.radius, beh.params,
+            backend=self.sweep_backend,
         )
 
         # 3. Pointwise update on interior agents.
@@ -304,13 +310,6 @@ class Engine:
         dropped = dropped + d1
 
         # 5. Agent migration: dimension-ordered ring exchange (x then y).
-        def wrap_pos(slab: Slab) -> Slab:
-            if not toroidal:
-                return slab
-            out = dict(slab)
-            out[POS] = jnp.mod(slab[POS], lxy)
-            return out
-
         soa3, d2 = self._migrate(soa2, comm, origin, toroidal, lxy)
         dropped = dropped + d2
 
@@ -333,10 +332,22 @@ class Engine:
 
     def _migrate(self, soa: AgentSoA, comm: Comm, origin: Array,
                  toroidal: bool, lxy: Array) -> Tuple[AgentSoA, Array]:
-        """Dimension-ordered emigrant routing: x faces, re-bin, y faces."""
+        """Dimension-ordered emigrant routing with one-pass re-binning.
+
+        x faces (rows 0 / hx-1, incl. corner cells) are exchanged first.
+        Diagonal migrants arrive in the *y-ring cells* of the received x
+        slabs (their y-binning used the sender's — identical — y origin),
+        so instead of re-binning to rediscover them, the y payload widens
+        by 2K slots carrying those corners forward directly: extra slot
+        block rows 1 / hx-2 hold the agents that entered at x-cells 1 /
+        hx-2.  Everything — the face-cleared grid, both x receives (corners
+        invalidated) and both widened y receives — then re-bins in a single
+        argsort pass, cutting the sort-based binning passes per step from
+        3 (step re-bin + one per axis) to 2 (step re-bin + this one).
+        """
         geom = self.geom
         hx, hy = geom.local_shape
-        dropped = jnp.int32(0)
+        k = geom.cap
 
         def wrap_pos(slab: Slab) -> Slab:
             if not toroidal:
@@ -352,94 +363,167 @@ class Engine:
                      for n, a in slab.items()},
                     v.reshape((-1,)))
 
-        cur = soa
-        for axis in (0, 1):
-            last = (hx - 1) if axis == 0 else (hy - 1)
-            out_m = wrap_pos(take_slab(cur, axis, 0))
-            out_p = wrap_pos(take_slab(cur, axis, last))
-            recv_p = comm.shift(out_p, axis, +1)  # from -axis neighbor
-            recv_m = comm.shift(out_m, axis, -1)  # from +axis neighbor
-            # Drop my face-ring agents (they now live on the neighbor); keep
-            # the orthogonal ring for the next phase.
-            v = cur.valid
-            if axis == 0:
-                v = v.at[0].set(False).at[hx - 1].set(False)
-            else:
-                v = v.at[:, 0].set(False).at[:, hy - 1].set(False)
-            cur = cur.replace(valid=v)
-            base_attrs, base_valid = flat_view(cur)
-            a1, v1 = fl(recv_p)
-            a2, v2 = fl(recv_m)
-            cat = {n: jnp.concatenate([base_attrs[n], a1[n], a2[n]])
-                   for n in base_attrs}
-            catv = jnp.concatenate([base_valid, v1, v2])
-            cur, d = bin_agents(geom, cat, catv, origin)
-            dropped = dropped + d
-        return cur, dropped
+        # x phase: emigrant rows, corner cells included.
+        out_m = wrap_pos(take_slab(soa, 0, 0))
+        out_p = wrap_pos(take_slab(soa, 0, hx - 1))
+        recv_p = comm.shift(out_p, 0, +1)  # from -x neighbor -> my x-cell 1
+        recv_m = comm.shift(out_m, 0, -1)  # from +x neighbor -> x-cell hx-2
+        v = soa.valid.at[0].set(False).at[hx - 1].set(False)
+        soa = soa.replace(valid=v)
+
+        # y phase: own y-face columns + forwarded corners from the x
+        # receives.  recv slab cell j sits at my y-cell j, so cells 0 and
+        # hy-1 are exactly the diagonal migrants still needing a y hop.
+        def widen(col: Slab, fwd_p: Slab, fwd_m: Slab) -> Slab:
+            out = {}
+            for n, a in col.items():
+                extra = jnp.zeros((hx, 2 * k) + a.shape[2:], a.dtype)
+                extra = extra.at[1, :k].set(fwd_p[n])
+                extra = extra.at[hx - 2, k:].set(fwd_m[n])
+                out[n] = jnp.concatenate([a, extra], axis=1)
+            return out
+
+        def at_cell(slab: Slab, j: int) -> Slab:
+            return {n: a[j] for n, a in slab.items()}
+
+        yout_m = wrap_pos(widen(take_slab(soa, 1, 0),
+                                at_cell(recv_p, 0), at_cell(recv_m, 0)))
+        yout_p = wrap_pos(widen(take_slab(soa, 1, hy - 1),
+                                at_cell(recv_p, hy - 1),
+                                at_cell(recv_m, hy - 1)))
+        yrecv_p = comm.shift(yout_p, 1, +1)
+        yrecv_m = comm.shift(yout_m, 1, -1)
+
+        # The y faces were sent; the x-receive corners were forwarded.
+        v = soa.valid.at[:, 0].set(False).at[:, hy - 1].set(False)
+        soa = soa.replace(valid=v)
+        recv_p = dict(recv_p)
+        recv_m = dict(recv_m)
+        for slab in (recv_p, recv_m):
+            slab["valid"] = slab["valid"].at[0].set(False) \
+                                         .at[hy - 1].set(False)
+
+        base_attrs, base_valid = flat_view(soa)
+        parts = [fl(recv_p), fl(recv_m), fl(yrecv_p), fl(yrecv_m)]
+        cat = {n: jnp.concatenate([base_attrs[n]] + [p[0][n] for p in parts])
+               for n in base_attrs}
+        catv = jnp.concatenate([base_valid] + [p[1] for p in parts])
+        return bin_agents(geom, cat, catv, origin)
 
     # ------------------------------------------------------------------
     # Compiled step factories
     # ------------------------------------------------------------------
+    # All factories are memoized at module level on the engine value
+    # (Engine is a hashable frozen dataclass; behaviors compare by
+    # identity), so rebuilding an equivalent engine — a fresh Simulation
+    # facade, a benchmark rerun — reuses the already-compiled executables
+    # instead of re-tracing.
+
     def make_local_step(self):
-        comm = LocalComm(toroidal=self.geom.boundary == "toroidal")
-
-        @partial(jax.jit, static_argnames=("full_halo",))
-        def step(state: SimState, full_halo: bool = True) -> SimState:
-            return self.local_step(state, comm, full_halo)
-
-        return step
+        return _cached_local_step(self)
 
     def make_sharded_step(self, mesh, axis_names: Tuple[str, str] = ("sx", "sy")):
-        from jax.sharding import PartitionSpec as P
+        return _cached_sharded_step(self, mesh, axis_names)
 
-        comm = ShardComm(
-            axis_names=axis_names,
-            mesh_shape=self.geom.mesh_shape,
-            toroidal=self.geom.boundary == "toroidal",
-        )
-        spec = P(*axis_names)
+    def make_segment_runner(self, mesh=None,
+                            axis_names: Tuple[str, str] = ("sx", "sy")):
+        """Scan-fused driver: ``seg(state, n_steps, full_first=True)`` runs
+        ``n_steps`` iterations in ONE compiled dispatch (a ``fori_loop``
+        over the step body), eliminating the per-step Python/dispatch floor.
 
-        def body(state: SimState, full_halo: bool) -> SimState:
-            return self.local_step(state, comm, full_halo)
+        ``full_first`` selects a full aura refresh for the segment's first
+        step; the remaining steps use the delta path (callers align
+        segments with the refresh schedule so no interior step needs a
+        full refresh).  With delta encoding disabled every step is full
+        and ``full_first`` is ignored.  ``n_steps`` is a *dynamic* loop
+        bound — one executable covers every segment length.
+        """
+        return _cached_segment_runner(self, mesh, axis_names)
 
-        def make(full_halo: bool):
-            f = partial(body, full_halo=full_halo)
-            return jax.jit(
-                shard_map_compat(f, mesh=mesh, in_specs=spec, out_specs=spec)
-            )
+    def _segment_body(self, comm, full_first: bool):
+        """Per-device segment: first step optionally full, rest delta."""
+        delta_on = self.delta_cfg.enabled
 
-        step_full = make(True)
-        step_delta = make(False)
+        def seg(state: SimState, n_steps: Array) -> SimState:
+            if not delta_on:
+                return jax.lax.fori_loop(
+                    0, n_steps,
+                    lambda i, s: self.local_step(s, comm, True), state)
+            rest = n_steps
+            if full_first:
+                state = self.local_step(state, comm, True)
+                rest = n_steps - 1
+            return jax.lax.fori_loop(
+                0, rest, lambda i, s: self.local_step(s, comm, False), state)
 
-        def step(state: SimState, full_halo: bool = True) -> SimState:
-            return step_full(state) if full_halo else step_delta(state)
-
-        return step
+        return seg
 
     def drive(self, state: SimState, n_steps: int, step_fn=None,
-              rebalancer=None, collect=None):
+              rebalancer=None, collect=None, mesh=None):
         """Low-level driver: delta refresh schedule + dynamic load balancing.
 
         Prefer :class:`repro.core.simulation.Simulation` — the facade owns
         this loop and keeps ``sim.engine``/``sim.state`` consistent across
         re-shards, so callers never juggle the returned engine themselves.
 
+        Default path (no ``step_fn``, no ``collect``): steps run through
+        the scan-fused segment runner, one compiled dispatch per
+        refresh-interval/rebalance-cadence segment.  Passing an explicit
+        ``step_fn`` or a per-step ``collect`` falls back to one dispatch
+        per step (both need host control between steps).  ``mesh`` selects
+        the sharded segment runner for multi-device geometries.
+
         At the rebalancer's cadence the occupancy imbalance is checked and,
         past the threshold, the state is mass-migrated onto a better mesh
-        (core.reshard); the step function is rebuilt for the new geometry
-        and the next aura exchange is forced to a full refresh (the re-shard
-        zeroed the delta references).  Returns ``(engine, state, series)`` —
-        the engine differs from ``self`` after a re-shard.
+        (core.reshard); the step/segment function is rebuilt for the new
+        geometry and the next aura exchange is forced to a full refresh
+        (the re-shard zeroed the delta references).  Returns
+        ``(engine, state, series)`` — the engine differs from ``self``
+        after a re-shard.
         """
         eng = self
         if rebalancer is None and self.rebalance_every > 0:
             from repro.core.reshard import Rebalancer
             rebalancer = Rebalancer(every=self.rebalance_every,
                                     threshold=self.imbalance_threshold)
-        if step_fn is None:
-            step_fn = eng.make_local_step()
         r = max(int(self.delta_cfg.refresh_interval), 1)
         force_full = False
+
+        if step_fn is None and mesh is None:
+            # No step function and no explicit mesh: derive the mesh from
+            # the geometry so a multi-device engine never silently runs
+            # through LocalComm (zero-filled halo shifts).
+            mesh = _mesh_for(eng)
+
+        if step_fn is None and collect is None:
+            # Scan-fused path: segment boundaries at refresh-interval and
+            # rebalance-cadence ticks (the only host-side control points).
+            seg_fn = eng.make_segment_runner(mesh)
+            i = 0
+            while i < n_steps:
+                if rebalancer is not None and rebalancer.due(i):
+                    eng, state, resharded = rebalancer.maybe_reshard(
+                        eng, state)
+                    if resharded:
+                        mesh = _mesh_for(eng)
+                        seg_fn = eng.make_segment_runner(mesh)
+                        force_full = True
+                nxt = n_steps
+                if rebalancer is not None and rebalancer.every > 0:
+                    e = rebalancer.every
+                    nxt = min(nxt, (i // e + 1) * e)
+                if eng.delta_cfg.enabled:
+                    nxt = min(nxt, (i // r + 1) * r)
+                full = force_full or (not eng.delta_cfg.enabled) \
+                    or (i % r == 0)
+                state = seg_fn(state, nxt - i, full_first=full)
+                force_full = False
+                i = nxt
+            return eng, state, []
+
+        if step_fn is None:
+            step_fn = eng.make_local_step() if mesh is None \
+                else eng.make_sharded_step(mesh)
         series = []
         for i in range(n_steps):
             if rebalancer is not None and rebalancer.due(i):
@@ -466,6 +550,95 @@ class Engine:
                                    rebalancer=rebalancer)
         warn_if_stale_engine(self, eng, had_handle)
         return state
+
+
+# ---------------------------------------------------------------------------
+# Compiled step/segment caches (module level so structurally-equal engines
+# share executables across Engine/Simulation instances)
+# ---------------------------------------------------------------------------
+
+def _mesh_for(engine: "Engine"):
+    """Spatial mesh for an engine's geometry (None on 1x1)."""
+    if engine.geom.mesh_shape == (1, 1):
+        return None
+    from repro.launch.mesh import make_abm_mesh  # deferred: device state
+    return make_abm_mesh(engine.geom.mesh_shape)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_local_step(engine: "Engine"):
+    comm = LocalComm(toroidal=engine.geom.boundary == "toroidal")
+
+    @partial(jax.jit, static_argnames=("full_halo",))
+    def step(state: SimState, full_halo: bool = True) -> SimState:
+        return engine.local_step(state, comm, full_halo)
+
+    return step
+
+
+def _shard_comm(engine: "Engine", axis_names: Tuple[str, str]):
+    """(ShardComm, PartitionSpec) pair shared by every sharded factory, so
+    the per-step and fused paths cannot diverge in their sharding setup."""
+    from jax.sharding import PartitionSpec as P
+
+    comm = ShardComm(
+        axis_names=axis_names,
+        mesh_shape=engine.geom.mesh_shape,
+        toroidal=engine.geom.boundary == "toroidal",
+    )
+    return comm, P(*axis_names)
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_sharded_step(engine: "Engine", mesh,
+                         axis_names: Tuple[str, str]):
+    comm, spec = _shard_comm(engine, axis_names)
+
+    def body(state: SimState, full_halo: bool) -> SimState:
+        return engine.local_step(state, comm, full_halo)
+
+    def make(full_halo: bool):
+        f = partial(body, full_halo=full_halo)
+        return jax.jit(
+            shard_map_compat(f, mesh=mesh, in_specs=spec, out_specs=spec)
+        )
+
+    step_full = make(True)
+    step_delta = make(False)
+
+    def step(state: SimState, full_halo: bool = True) -> SimState:
+        return step_full(state) if full_halo else step_delta(state)
+
+    return step
+
+
+@functools.lru_cache(maxsize=64)
+def _cached_segment_runner(engine: "Engine", mesh,
+                           axis_names: Tuple[str, str]):
+    if mesh is None:
+        comm = LocalComm(toroidal=engine.geom.boundary == "toroidal")
+        seg_t = jax.jit(engine._segment_body(comm, True))
+        seg_f = jax.jit(engine._segment_body(comm, False))
+    else:
+        from jax.sharding import PartitionSpec as P
+
+        comm, spec = _shard_comm(engine, axis_names)
+
+        def wrap(full_first: bool):
+            # n_steps rides along fully replicated (in_specs P()).
+            return jax.jit(shard_map_compat(
+                engine._segment_body(comm, full_first), mesh=mesh,
+                in_specs=(spec, P()), out_specs=spec))
+
+        seg_t = wrap(True)
+        seg_f = wrap(False)
+
+    def seg(state: SimState, n_steps: int, full_first: bool = True
+            ) -> SimState:
+        n = jnp.int32(n_steps)
+        return seg_t(state, n) if full_first else seg_f(state, n)
+
+    return seg
 
 
 def warn_if_stale_engine(old: "Engine", new: "Engine",

@@ -164,6 +164,13 @@ def bin_agents(
     return soa, dropped
 
 
+# Compiled binning entry point: GridGeom is a hashable frozen dataclass, so
+# jit caches one executable per (geometry, input shapes) across *all*
+# callers — the per-call ``jax.jit(partial(bin_agents, geom))`` idiom this
+# replaces recompiled on every fresh closure.
+bin_agents_jit = jax.jit(bin_agents, static_argnames=("geom",))
+
+
 def rebin(geom: GridGeom, soa: AgentSoA, origin: Array) -> Tuple[AgentSoA, Array]:
     attrs, valid = flat_view(soa)
     return bin_agents(geom, attrs, valid, origin)

@@ -1,15 +1,35 @@
-"""Neighbor iteration over the uniform NSG (pure-jnp reference path).
+"""Neighbor iteration over the uniform NSG — the engine's interaction sweep.
 
-For each interior cell, gathers the 3x3 cell neighborhood into a (9*K,) slot
-axis and applies a broadcastable pair kernel between the cell's K agents and
-the 9K candidates, masking invalid slots, self-pairs (by global ID), and
-pairs beyond the interaction radius.  This is the oracle for the Pallas
-``neighbor_interaction`` kernel in repro.kernels.
+Three interchangeable backends compute the same per-agent accumulator sums
+(selected per engine via ``Engine.sweep_backend`` / the ``Simulation``
+``sweep_backend`` kwarg, see docs/performance.md):
+
+* ``"reference"`` — :func:`pair_accumulate`: gathers the 3x3 cell
+  neighborhood of every interior cell into a (9K,) slot axis and applies the
+  pair kernel over the full (K, 9K) pair block.  Simple, obviously correct,
+  and the parity oracle for the other two — but it materializes a 9x copy of
+  every attribute per sweep.
+* ``"tiled"`` — :func:`pair_accumulate_tiled`: loops over the nine cell
+  offsets with (K, K) pair tiles built from plain array *slices*, so no 9x
+  neighborhood gather is ever materialized and XLA fuses each tile's
+  slice->compute->mask chain.  This is the fast path on CPU/GPU backends.
+* ``"pallas"`` — the generic Pallas kernel factory in
+  :mod:`repro.kernels.neighbor_interaction`: the gather stays in XLA (cheap
+  data movement), and one VMEM-resident program per block of cells evaluates
+  the full pair block with VPU-vectorized masked arithmetic — the TPU path.
+
+All backends share the masking semantics: invalid slots, self-pairs (by
+global id), and pairs beyond the interaction radius contribute zero.
+``tiled`` agrees with ``reference`` to float ulp (XLA fuses the two graphs
+differently, so FMA contraction can differ in the last bit); integer-valued
+accumulators (counts) agree exactly.  ``pallas`` agrees within the usual
+kernel tolerance.  tests/test_sweep.py pins all three for every bundled sim
+behavior and for composed stacks.
 """
 
 from __future__ import annotations
 
-from typing import Callable, Dict, Tuple
+from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -22,10 +42,24 @@ Array = jax.Array
 OFFSETS = [(-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 0), (0, 1),
            (1, -1), (1, 0), (1, 1)]
 
+SWEEP_BACKENDS = ("reference", "tiled", "pallas")
+
 # pair_fn(attrs_i, attrs_j, disp, dist2, params) -> dict of contributions,
 # each broadcastable over the pair axes (..., K, 9K) with trailing dims.
 PairFn = Callable[[Dict[str, Array], Dict[str, Array], Array, Array, dict],
                   Dict[str, Array]]
+
+
+def resolve_sweep_backend(backend: str = "auto") -> str:
+    """Resolve the ``"auto"`` sweep backend for the current JAX backend:
+    the Pallas kernel on TPU, the tiled XLA sweep everywhere else."""
+    if backend in (None, "auto"):
+        return "pallas" if jax.default_backend() == "tpu" else "tiled"
+    if backend not in SWEEP_BACKENDS:
+        raise ValueError(
+            f"unknown sweep backend {backend!r}; expected 'auto' or one of "
+            f"{SWEEP_BACKENDS}")
+    return backend
 
 
 def gather_neighborhood(geom: GridGeom, soa: AgentSoA, names: Tuple[str, ...]):
@@ -78,10 +112,10 @@ def pair_accumulate(
 
     # Broadcast views: i -> (..., K, 1, t), j -> (..., 1, 9K, t)
     def bi(a):
-        return a[:, :, :, None]
+        return jnp.expand_dims(a, 3)
 
     def bj(a):
-        return a[:, :, None, :]
+        return jnp.expand_dims(a, 2)
 
     attrs_i = {n: bi(a) for n, a in self_a.items()}
     attrs_j = {n: bj(a) for n, a in nbr_a.items()}
@@ -89,7 +123,7 @@ def pair_accumulate(
     disp = min_image(attrs_j[POS] - attrs_i[POS], geom)  # (ix,iy,K,9K,2)
     dist2 = jnp.sum(disp * disp, axis=-1)
 
-    same = (attrs_i[GID_RANK][..., ] == attrs_j[GID_RANK]) & (
+    same = (attrs_i[GID_RANK] == attrs_j[GID_RANK]) & (
         attrs_i[GID_COUNT] == attrs_j[GID_COUNT]
     )
     mask = (
@@ -108,3 +142,122 @@ def pair_accumulate(
             m = m[..., None]
         out[name] = jnp.sum(jnp.where(m, c, jnp.zeros_like(c)), axis=3)
     return out
+
+
+def pair_accumulate_tiled(
+    geom: GridGeom,
+    soa: AgentSoA,
+    pair_fn: PairFn,
+    pair_attrs: Tuple[str, ...],
+    radius: float,
+    params: dict,
+) -> Dict[str, Array]:
+    """Offset-tiled sweep: nine (ix, iy, K, K) pair tiles instead of one
+    (ix, iy, K, 9K) block over a materialized 9x gather.
+
+    Every neighbor view is a plain slice of the resident SoA, so XLA fuses
+    slice -> pair math -> mask per tile with no gather copies; the per-tile
+    contributions are stacked along the j axis in the reference's offset
+    order and reduced with the same single ``sum`` so the accumulation
+    order matches :func:`pair_accumulate` exactly (agreement is to float
+    ulp — fusion differences can flip the last bit of FMA chains).
+    """
+    hx, hy = geom.local_shape
+    need = set(pair_attrs) | {POS, GID_RANK, GID_COUNT}
+
+    # i views: (ix, iy, K, 1, t)
+    attrs_i = {n: jnp.expand_dims(soa.attrs[n][1:hx - 1, 1:hy - 1], 3)
+               for n in need}
+    vi = jnp.expand_dims(soa.valid[1:hx - 1, 1:hy - 1], 3)
+    r2 = jnp.float32(radius * radius)
+
+    tiles: Dict[str, list] = {}
+    for dx, dy in OFFSETS:
+        # j views for this offset: (ix, iy, 1, K, t) slices — no copies
+        nbr = {n: jnp.expand_dims(
+            soa.attrs[n][1 + dx:hx - 1 + dx, 1 + dy:hy - 1 + dy], 2)
+            for n in need}
+        nv = jnp.expand_dims(
+            soa.valid[1 + dx:hx - 1 + dx, 1 + dy:hy - 1 + dy], 2)
+        disp = min_image(nbr[POS] - attrs_i[POS], geom)   # (ix,iy,K,K,2)
+        dist2 = jnp.sum(disp * disp, axis=-1)
+        same = (attrs_i[GID_RANK] == nbr[GID_RANK]) & (
+            attrs_i[GID_COUNT] == nbr[GID_COUNT])
+        mask = vi & nv & ~same & (dist2 <= r2)
+        contribs = pair_fn(attrs_i, nbr, disp, dist2, params)
+        for name, c in contribs.items():
+            m = mask
+            while m.ndim < c.ndim:
+                m = m[..., None]
+            tiles.setdefault(name, []).append(
+                jnp.where(m, c, jnp.zeros_like(c)))
+
+    out: Dict[str, Array] = {}
+    for name, parts in tiles.items():
+        # (ix,iy,K,K,t) tiles -> (ix,iy,K,9,K,t) -> (ix,iy,K,9K,t): the j
+        # axis ends up in the reference's offset-major order before the
+        # one-shot reduction.
+        shape = jnp.broadcast_shapes(*[p.shape for p in parts])
+        parts = [jnp.broadcast_to(p, shape) for p in parts]
+        stacked = jnp.stack(parts, axis=3)
+        flat = stacked.reshape(
+            shape[:3] + (len(parts) * shape[3],) + shape[4:])
+        out[name] = jnp.sum(flat, axis=3)
+    return out
+
+
+def pair_accumulate_pallas(
+    geom: GridGeom,
+    soa: AgentSoA,
+    pair_fn: PairFn,
+    pair_attrs: Tuple[str, ...],
+    radius: float,
+    params: dict,
+    *,
+    block_cells: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Dict[str, Array]:
+    """Pallas-kernel sweep: XLA builds the neighborhood gather (pure data
+    movement), then one fused kernel program per block of cells evaluates
+    every pair kernel for its (BC, K) x (BC, 9K) slabs in VMEM.
+
+    ``interpret=None`` auto-detects from the JAX backend
+    (``kernels.ops.use_interpret``); on TPU the same kernel compiles to
+    Mosaic.
+    """
+    from repro.kernels import ops as kops
+
+    ix, iy = geom.interior
+    k = geom.cap
+    c = ix * iy
+    self_a, nbr_a, self_v, nbr_v = gather_neighborhood(geom, soa, pair_attrs)
+    flat_i = {n: a.reshape((c, k) + a.shape[3:]) for n, a in self_a.items()}
+    flat_j = {n: a.reshape((c, 9 * k) + a.shape[3:])
+              for n, a in nbr_a.items()}
+    box = geom.domain_size if geom.boundary == "toroidal" else None
+    acc = kops.neighborhood_pair_sweep(
+        flat_i, flat_j, self_v.reshape((c, k)), nbr_v.reshape((c, 9 * k)),
+        pair_fn=pair_fn, radius=radius, params=params, box=box,
+        block_cells=block_cells, interpret=interpret)
+    return {n: a.reshape((ix, iy, k) + a.shape[2:]) for n, a in acc.items()}
+
+
+def sweep_accumulate(
+    geom: GridGeom,
+    soa: AgentSoA,
+    pair_fn: PairFn,
+    pair_attrs: Tuple[str, ...],
+    radius: float,
+    params: dict,
+    *,
+    backend: str = "reference",
+) -> Dict[str, Array]:
+    """Backend-dispatched neighborhood sweep (the engine's entry point)."""
+    backend = resolve_sweep_backend(backend)
+    if backend == "reference":
+        return pair_accumulate(geom, soa, pair_fn, pair_attrs, radius, params)
+    if backend == "tiled":
+        return pair_accumulate_tiled(
+            geom, soa, pair_fn, pair_attrs, radius, params)
+    return pair_accumulate_pallas(
+        geom, soa, pair_fn, pair_attrs, radius, params)

@@ -98,6 +98,10 @@ class Simulation:
         ``Rebalance(every=n)``, or None.
       checkpoint: a :class:`Checkpoint` spec, a directory-path shorthand
         for ``Checkpoint(dir)``, or None.
+      sweep_backend: interaction-sweep backend
+        (``"auto" | "reference" | "tiled" | "pallas"``, see
+        docs/performance.md); ``"auto"`` picks the tiled XLA sweep on
+        CPU/GPU and the Pallas kernel on TPU.
     """
 
     def __init__(self, geom: Union[GridGeom, Dict[str, Any]],
@@ -105,7 +109,8 @@ class Simulation:
                  mesh=None, delta: Optional[DeltaConfig] = None,
                  dt: float = 1.0,
                  rebalance: Union[Rebalance, int, None] = None,
-                 checkpoint: Union[Checkpoint, str, None] = None):
+                 checkpoint: Union[Checkpoint, str, None] = None,
+                 sweep_backend: str = "auto"):
         if isinstance(geom, dict):
             geom = GridGeom(**{**_GEOM_DEFAULTS, **geom})
         if isinstance(behaviors, Behavior):
@@ -115,11 +120,13 @@ class Simulation:
             behavior = behs[0] if len(behs) == 1 else compose(*behs)
         self.engine: Engine = Engine(
             geom=geom, behavior=behavior,
-            delta_cfg=delta or DeltaConfig(enabled=False), dt=dt)
+            delta_cfg=delta or DeltaConfig(enabled=False), dt=dt,
+            sweep_backend=sweep_backend)
         self.state: Optional[SimState] = None
         self.series: Dict[str, List[Any]] = {}
         self._mesh = mesh
-        self._step_fn: Optional[Callable] = None
+        self._step_fn: Optional[Callable] = None   # set -> per-step loop
+        self._seg_fn: Optional[Callable] = None    # scan-fused segment runner
         self._ticks = 0          # step counter across run() calls
         self._force_full = False  # next aura exchange must be a full refresh
         self._last_step_s: Optional[float] = None  # weighted-rebalance sample
@@ -188,6 +195,7 @@ class Simulation:
         self.state = self.engine.init_state(positions, attrs, seed=seed,
                                             **kwargs)
         self._step_fn = None
+        self._seg_fn = None
         return self
 
     def with_state(self, engine: Engine, state: SimState) -> "Simulation":
@@ -197,6 +205,7 @@ class Simulation:
         self.engine = engine
         self.state = state
         self._step_fn = None
+        self._seg_fn = None
         self._force_full = True
         return self
 
@@ -218,6 +227,10 @@ class Simulation:
             return self.engine.make_local_step()
         return self.engine.make_sharded_step(self.mesh)
 
+    def _make_seg(self) -> Callable:
+        mesh = None if self.engine.geom.mesh_shape == (1, 1) else self.mesh
+        return self.engine.make_segment_runner(mesh)
+
     def _maybe_rebalance(self) -> None:
         rb = self.rebalancer
         if self._weighted:
@@ -232,17 +245,52 @@ class Simulation:
             # the one place a re-shard surfaces: the facade swaps its own
             # engine/state/step/mesh, so callers never see a stale handle
             self.engine, self.state = eng, state
-            self._step_fn = self._make_step()
+            self._step_fn = self._make_step() if self._step_fn else None
+            self._seg_fn = None
             self._force_full = True
 
+    def _fused_span(self, tick: int, remaining: int, ops) -> int:
+        """Longest segment starting at ``tick`` with no host-side control
+        point in its interior: no pre-op due at an interior tick, no
+        post-op due before the segment's last step, no delta full-refresh
+        boundary past the first step, and no weighted-rebalance timing
+        sample (which needs a single-step dispatch to measure)."""
+        delta = self.engine.delta_cfg
+        r = max(int(delta.refresh_interval), 1)
+        rb = self.rebalancer
+        weighted = self._weighted and rb is not None
+        if weighted and rb.due(tick + 1):
+            return 1  # this step is the timing sample: run it alone
+        n = 1
+        while n < remaining:
+            t = tick + n
+            if any(op.pre and op.due(t) for op in ops):
+                break
+            if any((not op.pre) and op.due(t - 1) for op in ops):
+                break
+            if delta.enabled and t % r == 0:
+                break
+            if weighted and rb.due(t + 1):
+                break
+            n += 1
+        return n
+
     def run(self, steps: int,
-            collect: Optional[Callable[[SimState], Any]] = None
-            ) -> "Simulation":
+            collect: Optional[Callable[[SimState], Any]] = None,
+            fused: bool = True) -> "Simulation":
         """Drive ``steps`` iterations: scheduled pre-ops (re-shard checks),
         the compiled step honoring the delta refresh schedule, scheduled
         post-ops (reducers, checkpoints).  ``collect(state)`` is a
         convenience alias for ``sim.every(1, ...)`` recording under
-        ``"collect"``.  Returns self."""
+        ``"collect"``.  Returns self.
+
+        Steps between host-side control points (scheduled ops, refresh
+        boundaries, rebalance checks) are fused into one compiled dispatch
+        by the engine's segment runner; a per-step op (``every=1``) keeps
+        the historical one-dispatch-per-step cadence.  ``fused=False``
+        forces one dispatch per step (overhead benchmarks pin the
+        dispatch cost with it).
+        """
         if self.state is None:
             raise RuntimeError("Simulation.run() before init(): call "
                                "sim.init(positions, attrs) first")
@@ -250,33 +298,46 @@ class Simulation:
         if collect is not None:
             ops.append(Operation(fn=lambda sim: collect(sim.state),
                                  every=1, name="collect"))
-        if self._step_fn is None:
+        per_step = (self._step_fn is not None) or not fused
+        if per_step and self._step_fn is None:
             self._step_fn = self._make_step()
+        if not per_step and self._seg_fn is None:
+            self._seg_fn = self._make_seg()
         delta = self.engine.delta_cfg
         refresh = max(int(delta.refresh_interval), 1)
         rb = self.rebalancer
 
-        for _ in range(int(steps)):
+        done = 0
+        while done < int(steps):
             tick = self._ticks
             for op in ops:
                 if op.pre and op.due(tick):
                     self._run_op(op)
+            if not per_step and self._seg_fn is None:
+                self._seg_fn = self._make_seg()   # a pre-op re-sharded
+            n = 1 if per_step else self._fused_span(
+                tick, int(steps) - done, ops)
             full = (self._force_full or not delta.enabled
                     or tick % refresh == 0)
             self._force_full = False
             # sample wall time for the step right before a weighted
             # rebalance check so the runtimes signal is one step fresh
-            sample = (self._weighted and rb is not None
+            sample = (self._weighted and rb is not None and n == 1
                       and rb.due(tick + 1))
             t0 = time.perf_counter() if sample else 0.0
-            self.state = self._step_fn(self.state, full_halo=full)
+            if per_step:
+                self.state = self._step_fn(self.state, full_halo=full)
+            else:
+                self.state = self._seg_fn(self.state, n, full_first=full)
             if sample:
                 jax.block_until_ready(self.state.soa.valid)
                 self._last_step_s = time.perf_counter() - t0
-            for op in ops:
-                if not op.pre and op.due(tick):
-                    self._run_op(op)
-            self._ticks += 1
+            for t in range(tick, tick + n):
+                for op in ops:
+                    if not op.pre and op.due(t):
+                        self._run_op(op)
+            self._ticks += n
+            done += n
         return self
 
     def _run_op(self, op: Operation) -> None:

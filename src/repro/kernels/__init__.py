@@ -4,7 +4,8 @@
   neighbor_interaction — cell-list pairwise force pass (ABM hot spot)
   delta_codec          — delta encode/decode (paper §2.3)
 
-Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py;
-interpret=True on CPU, Mosaic on real TPU (ops.INTERPRET = False).
-EXAMPLE.md documents the pattern.
+Each kernel has a pure-jnp oracle in ref.py and a jit'd wrapper in ops.py.
+The Pallas interpreter is auto-selected off-TPU (``ops.use_interpret``);
+set ``ops.INTERPRET`` to a bool to force either mode.  EXAMPLE.md documents
+the pattern.
 """

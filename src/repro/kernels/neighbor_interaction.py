@@ -1,20 +1,28 @@
-"""Pallas TPU kernel for the ABM neighbor-interaction hot spot.
+"""Pallas TPU kernels for the ABM neighbor-interaction hot spot.
 
-Computes the soft-sphere repulsion/adhesion force between each cell's K
-agents and the 9K agents of its 3x3 NSG neighborhood — the compute-dominant
-inner loop of all four paper benchmark simulations.
+The compute-dominant inner loop of every paper benchmark simulation is the
+pairwise sweep between each cell's K agents and the 9K agents of its 3x3
+NSG neighborhood.  :func:`pair_sweep_kernel` is a *kernel factory* over
+that decomposition: it takes an arbitrary behavior pair kernel (the same
+``pair_fn(attrs_i, attrs_j, disp, dist2, params)`` contract the pure-jnp
+reference ``core.neighbors.pair_accumulate`` evaluates, including the
+stacks ``core.behaviors.compose`` builds) and emits one Pallas program per
+block of BC cells that holds its (BC, K) self slabs and (BC, 9K)
+neighborhood slabs in VMEM and evaluates all pair contributions with
+VPU-vectorized masked arithmetic.  The neighborhood gather itself is cheap
+data movement and stays in XLA (the caller builds it), keeping the kernel
+a pure compute tile — the same decomposition BioDynaMo uses between its
+uniform grid and force calculation.
 
-Grid: one program per block of BC cells.  Each program holds its (BC, K)
-self slab and (BC, 9K) neighborhood slab in VMEM and evaluates the
-(K x 9K) pair interactions with VPU-vectorized masked arithmetic.  The
-neighborhood gather itself is cheap data movement and stays in XLA (the ops
-wrapper builds it), keeping the kernel a pure compute tile — the same
-decomposition BioDynaMo uses between its uniform grid and force calculation.
+:func:`neighbor_force_kernel` — the original hardcoded soft-sphere force —
+is retained as a thin wrapper over the factory for its callers and parity
+tests.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -25,34 +33,160 @@ from jax.experimental.pallas import tpu as pltpu
 _CompilerParams = getattr(pltpu, "CompilerParams",
                           getattr(pltpu, "TPUCompilerParams", None))
 
+# Reserved column names (mirrors repro.core.agent_soa; string literals keep
+# the kernels package importable without the core layer).
+_POS = "pos"
+_GID_RANK = "gid_rank"
+_GID_COUNT = "gid_count"
 
-def _force_kernel(pos_i_ref, diam_i_ref, type_i_ref, valid_i_ref, gid_i_ref,
-                  pos_j_ref, diam_j_ref, type_j_ref, valid_j_ref, gid_j_ref,
-                  out_ref, *, radius: float, repulsion: float,
-                  adhesion: float, same_type_only: bool):
-    pos_i = pos_i_ref[...].astype(jnp.float32)        # (BC, K, 2)
-    pos_j = pos_j_ref[...].astype(jnp.float32)        # (BC, 9K, 2)
-    disp = pos_j[:, None, :, :] - pos_i[:, :, None, :]
-    dist2 = jnp.sum(disp * disp, axis=-1)             # (BC, K, 9K)
+
+def _pair_eval(attrs_i, attrs_j, valid_i, valid_j, *, pair_fn, radius,
+               params, box):
+    """Shared pair-block math: broadcast views, mask, masked contributions.
+
+    attrs_i values are (..., K, t) and attrs_j values (..., NK, t); returns
+    a dict of (..., K, t) accumulators summed over the NK axis.  Runs both
+    inside the Pallas kernel body and under ``jax.eval_shape`` (to discover
+    the accumulator specs before the ``pallas_call`` is built).
+    """
+    # Broadcast views: i -> (..., K, 1, t), j -> (..., 1, NK, t).  The pair
+    # axes sit right after the leading block axis.
+    ai = {n: jnp.expand_dims(a, 2) for n, a in attrs_i.items()}
+    aj = {n: jnp.expand_dims(a, 1) for n, a in attrs_j.items()}
+
+    disp = aj[_POS] - ai[_POS]                       # (..., K, NK, 2)
+    if box is not None:
+        # per-component minimum image with scalar literals: a (2,) constant
+        # array would be a captured constant inside the Pallas kernel body
+        comps = []
+        for axis in range(disp.shape[-1]):
+            d = disp[..., axis]
+            b = jnp.float32(box[axis])
+            comps.append(d - b * jnp.round(d / b))
+        disp = jnp.stack(comps, axis=-1)
+    dist2 = jnp.sum(disp * disp, axis=-1)            # (..., K, NK)
+
+    same = (ai[_GID_RANK] == aj[_GID_RANK]) & (
+        ai[_GID_COUNT] == aj[_GID_COUNT])
+    mask = (valid_i[:, :, None] & valid_j[:, None, :] & ~same
+            & (dist2 <= jnp.float32(radius * radius)))
+
+    contribs = pair_fn(ai, aj, disp, dist2, params)
+    out = {}
+    for name, c in contribs.items():
+        m = mask
+        while m.ndim < c.ndim:
+            m = m[..., None]
+        out[name] = jnp.sum(jnp.where(m, c, jnp.zeros_like(c)), axis=2)
+    return out
+
+
+def pair_sweep_kernel(
+    attrs_i: Dict[str, jax.Array],   # each (C, K, *t) — incl. pos + gid cols
+    attrs_j: Dict[str, jax.Array],   # each (C, NK, *t) neighborhood slabs
+    valid_i: jax.Array,              # (C, K) bool
+    valid_j: jax.Array,              # (C, NK) bool
+    *,
+    pair_fn,
+    radius: float,
+    params: dict,
+    box: Optional[Tuple[float, float]] = None,  # toroidal minimum-image box
+    block_cells: int = 8,
+    interpret: bool = True,
+) -> Dict[str, jax.Array]:
+    """Evaluate ``pair_fn`` for every (i, j) pair of each cell block and
+    return the per-agent accumulator sums, as a dict of (C, K, *t) arrays.
+
+    The accumulator names/shapes/dtypes are discovered with ``eval_shape``
+    (no FLOPs) so arbitrary multi-output behaviors — including composed
+    stacks with namespaced accumulators — run in one kernel launch.
+    """
+    c, k = valid_i.shape
+    nk = valid_j.shape[1]
+    names = tuple(sorted(attrs_i))
+    for need in (_POS, _GID_RANK, _GID_COUNT):
+        if need not in attrs_i or need not in attrs_j:
+            raise ValueError(f"pair_sweep_kernel needs the {need!r} column")
+
+    # Discover accumulator specs from the abstract pair evaluation.
+    out_abs = jax.eval_shape(
+        functools.partial(_pair_eval, pair_fn=pair_fn, radius=radius,
+                          params=params, box=box),
+        {n: jax.ShapeDtypeStruct(a.shape, a.dtype)
+         for n, a in attrs_i.items()},
+        {n: jax.ShapeDtypeStruct(a.shape, a.dtype)
+         for n, a in attrs_j.items()},
+        jax.ShapeDtypeStruct(valid_i.shape, valid_i.dtype),
+        jax.ShapeDtypeStruct(valid_j.shape, valid_j.dtype),
+    )
+    out_names = tuple(sorted(out_abs))
+
+    bc = min(block_cells, c)
+    pad = (-c) % bc
+    if pad:
+        def padc(a):
+            return jnp.concatenate(
+                [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0)
+        attrs_i = {n: padc(a) for n, a in attrs_i.items()}
+        attrs_j = {n: padc(a) for n, a in attrs_j.items()}
+        valid_i = padc(valid_i)
+        valid_j = padc(valid_j)
+    cp = c + pad
+
+    n_in = len(names)
+
+    def kernel(*refs):
+        in_refs, out_refs = refs[:2 * n_in + 2], refs[2 * n_in + 2:]
+        ai = {n: in_refs[idx][...] for idx, n in enumerate(names)}
+        aj = {n: in_refs[n_in + idx][...] for idx, n in enumerate(names)}
+        vi = in_refs[2 * n_in][...]
+        vj = in_refs[2 * n_in + 1][...]
+        acc = _pair_eval(ai, aj, vi, vj, pair_fn=pair_fn, radius=radius,
+                         params=params, box=box)
+        for ref, name in zip(out_refs, out_names):
+            ref[...] = acc[name].astype(ref.dtype)
+
+    def spec(width, trailing):
+        return pl.BlockSpec((bc, width) + trailing,
+                            lambda i: (i,) + (0,) * (1 + len(trailing)))
+
+    in_specs = (
+        [spec(k, attrs_i[n].shape[2:]) for n in names]
+        + [spec(nk, attrs_j[n].shape[2:]) for n in names]
+        + [spec(k, ()), spec(nk, ())]
+    )
+    out_specs = [spec(k, out_abs[n].shape[2:]) for n in out_names]
+    out_shape = [jax.ShapeDtypeStruct((cp, k) + out_abs[n].shape[2:],
+                                      out_abs[n].dtype) for n in out_names]
+
+    outs = pl.pallas_call(
+        kernel,
+        grid=(cp // bc,),
+        in_specs=in_specs,
+        out_specs=out_specs,
+        out_shape=out_shape,
+        compiler_params=_CompilerParams(
+            dimension_semantics=("parallel",),
+        ),
+        interpret=interpret,
+    )(*([attrs_i[n] for n in names] + [attrs_j[n] for n in names]
+        + [valid_i, valid_j]))
+
+    return {n: (o[:c] if pad else o) for n, o in zip(out_names, outs)}
+
+
+def _soft_sphere_pair(attrs_i, attrs_j, disp, dist2, params):
+    """The original hardcoded force law, expressed as a behavior pair_fn:
+    soft-sphere repulsion + (optionally same-type-gated) adhesion."""
     dist = jnp.sqrt(dist2 + 1e-6)
     unit = disp / dist[..., None]
-
-    diam_i = diam_i_ref[...].astype(jnp.float32)
-    diam_j = diam_j_ref[...].astype(jnp.float32)
-    r_sum = 0.5 * (diam_i[:, :, None] + diam_j[:, None, :])
+    r_sum = 0.5 * (attrs_i["diameter"] + attrs_j["diameter"])
     overlap = r_sum - dist
-    rep = jnp.where(overlap > 0, repulsion * overlap, 0.0)
-    same = (type_i_ref[...][:, :, None] == type_j_ref[...][:, None, :])
-    gate = same.astype(jnp.float32) if same_type_only else 1.0
-    adh = jnp.where(overlap <= 0, adhesion * gate, 0.0)
-    f = -(rep - adh)[..., None] * unit                # (BC, K, 9K, 2)
-
-    mask = (valid_i_ref[...][:, :, None] & valid_j_ref[...][:, None, :]
-            & (gid_i_ref[...][:, :, None] != gid_j_ref[...][:, None, :])
-            & (dist2 <= radius * radius))
-    out_ref[...] = jnp.sum(
-        jnp.where(mask[..., None], f, 0.0), axis=2
-    ).astype(out_ref.dtype)
+    rep = jnp.where(overlap > 0, params["repulsion"] * overlap, 0.0)
+    same = (attrs_i["ctype"] == attrs_j["ctype"]).astype(jnp.float32)
+    gate = same if params["same_type_only"] else 1.0
+    adh = jnp.where(overlap <= 0, params["adhesion"] * gate, 0.0)
+    return {"force": -(rep - adh)[..., None] * unit}
 
 
 def neighbor_force_kernel(
@@ -62,31 +196,21 @@ def neighbor_force_kernel(
     same_type_only: bool = True, block_cells: int = 8,
     interpret: bool = True,
 ):
-    c, k = valid_i.shape
-    nk = valid_j.shape[1]
-    bc = min(block_cells, c)
-    assert c % bc == 0, (c, bc)
-    kernel = functools.partial(
-        _force_kernel, radius=radius, repulsion=repulsion,
-        adhesion=adhesion, same_type_only=same_type_only)
+    """Soft-sphere force sweep (legacy single-law entry point), now one
+    instantiation of :func:`pair_sweep_kernel`.  The single ``gid`` column
+    maps onto the generic <rank, counter> self-pair exclusion with rank 0."""
+    def cols(pos, diam, ctype, gid):
+        return {
+            _POS: pos, "diameter": diam, "ctype": ctype,
+            _GID_RANK: jnp.zeros_like(gid), _GID_COUNT: gid,
+        }
 
-    def spec(trailing, width):
-        return pl.BlockSpec((bc, width) + trailing,
-                            lambda i: (i,) + (0,) * (1 + len(trailing)))
-
-    return pl.pallas_call(
-        kernel,
-        grid=(c // bc,),
-        in_specs=[
-            spec((2,), k), spec((), k), spec((), k), spec((), k), spec((), k),
-            spec((2,), nk), spec((), nk), spec((), nk), spec((), nk),
-            spec((), nk),
-        ],
-        out_specs=spec((2,), k),
-        out_shape=jax.ShapeDtypeStruct((c, k, 2), jnp.float32),
-        compiler_params=_CompilerParams(
-            dimension_semantics=("parallel",),
-        ),
-        interpret=interpret,
-    )(pos_i, diam_i, type_i, valid_i, gid_i,
-      pos_j, diam_j, type_j, valid_j, gid_j)
+    acc = pair_sweep_kernel(
+        cols(pos_i, diam_i, type_i, gid_i),
+        cols(pos_j, diam_j, type_j, gid_j),
+        valid_i, valid_j,
+        pair_fn=_soft_sphere_pair, radius=radius,
+        params={"repulsion": repulsion, "adhesion": adhesion,
+                "same_type_only": bool(same_type_only)},
+        block_cells=block_cells, interpret=interpret)
+    return acc["force"]

@@ -1,21 +1,35 @@
 """jit'd public wrappers around the Pallas kernels.
 
-``interpret`` defaults to True (CPU container; kernels execute via the
-Pallas interpreter).  On real TPU runtimes set
-``repro.kernels.ops.INTERPRET = False`` (or pass interpret=False) and the
-same kernels compile to Mosaic.
+Interpreter selection is automatic: kernels run through the Pallas
+interpreter on non-TPU backends (the CPU container) and compile to Mosaic
+on real TPU runtimes, keyed off ``jax.default_backend()``.  Both overrides
+survive: set ``repro.kernels.ops.INTERPRET`` to a bool to force the choice
+process-wide, or pass ``interpret=...`` to the wrappers that expose it.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import delta_codec, flash_attention, neighbor_interaction
 
-INTERPRET = True
+# None = auto-detect (interpret everywhere except on TPU); True/False force.
+INTERPRET: Optional[bool] = None
+
+
+def use_interpret(override: Optional[bool] = None) -> bool:
+    """Resolve the effective Pallas ``interpret`` flag: an explicit call-site
+    override wins, then the module-level ``INTERPRET`` force, then backend
+    auto-detection (compiled on TPU, interpreted elsewhere)."""
+    if override is not None:
+        return bool(override)
+    if INTERPRET is not None:
+        return bool(INTERPRET)
+    return jax.default_backend() != "tpu"
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "bq", "bk"))
@@ -32,7 +46,7 @@ def flash_attention_bhsd(q, k, v, *, causal=True, bq=128, bk=128):
     kf = k.reshape(b * h, k.shape[2], hd)
     vf = v.reshape(b * h, v.shape[2], v.shape[3])
     out = flash_attention.flash_attention_kernel(
-        qf, kf, vf, causal=causal, bq=bq, bk=bk, interpret=INTERPRET)
+        qf, kf, vf, causal=causal, bq=bq, bk=bk, interpret=use_interpret())
     return out.reshape(b, h, sq, v.shape[3])
 
 
@@ -45,17 +59,44 @@ def neighbor_force(pos_i, diam_i, type_i, valid_i, gid_i,
         pos_i, diam_i, type_i, valid_i, gid_i,
         pos_j, diam_j, type_j, valid_j, gid_j,
         radius=radius, repulsion=repulsion, adhesion=adhesion,
-        same_type_only=same_type_only, interpret=INTERPRET)
+        same_type_only=same_type_only, interpret=use_interpret())
+
+
+def neighborhood_pair_sweep(
+    attrs_i: Dict[str, jax.Array],
+    attrs_j: Dict[str, jax.Array],
+    valid_i: jax.Array,
+    valid_j: jax.Array,
+    *,
+    pair_fn,
+    radius: float,
+    params: dict,
+    box: Optional[Tuple[float, float]] = None,
+    block_cells: Optional[int] = None,
+    interpret: Optional[bool] = None,
+) -> Dict[str, jax.Array]:
+    """Generic fused neighborhood sweep (kernel factory entry point used by
+    ``core.neighbors.pair_accumulate_pallas``).  Not jit-wrapped: behaviors'
+    ``pair_fn``/``params`` are arbitrary Python, so callers trace this
+    inside their own jit (the engine step does)."""
+    c = valid_i.shape[0]
+    bc = block_cells if block_cells is not None else min(8, max(c, 1))
+    return neighbor_interaction.pair_sweep_kernel(
+        attrs_i, attrs_j, valid_i, valid_j,
+        pair_fn=pair_fn, radius=radius, params=params, box=box,
+        block_cells=bc, interpret=use_interpret(interpret))
 
 
 @jax.jit
 def delta_encode(x, ref):
     """(N, L) f32 slab -> (q int8, scale f32)."""
     scale = jnp.maximum(jnp.max(jnp.abs(x - ref)), 1e-30) / 127.0
-    q = delta_codec.delta_encode_kernel(x, ref, scale, interpret=INTERPRET)
+    q = delta_codec.delta_encode_kernel(x, ref, scale,
+                                        interpret=use_interpret())
     return q, scale
 
 
 @jax.jit
 def delta_decode(q, ref, scale):
-    return delta_codec.delta_decode_kernel(q, ref, scale, interpret=INTERPRET)
+    return delta_codec.delta_decode_kernel(q, ref, scale,
+                                           interpret=use_interpret())

@@ -43,6 +43,11 @@ def main():
     ap.add_argument("--weighted", action="store_true",
                     help="weight the rebalance histogram by measured "
                          "per-device step times")
+    ap.add_argument("--sweep-backend", default="auto",
+                    choices=["auto", "reference", "tiled", "pallas"],
+                    help="neighbor-interaction sweep implementation "
+                         "(docs/performance.md); auto = tiled on CPU/GPU, "
+                         "pallas on TPU")
     args = ap.parse_args()
 
     import importlib
@@ -70,7 +75,7 @@ def main():
     state, metrics = mod.run(
         n_agents=args.agents, steps=args.steps, mesh=mesh,
         mesh_shape=(mx, my), interior=interior, delta=delta,
-        rebalance=rebalance)
+        rebalance=rebalance, sweep_backend=args.sweep_backend)
     dt = time.time() - t0
     n = total_agents(state)
     print(f"sim={args.sim} devices={mx*my} agents={n} steps={args.steps} "

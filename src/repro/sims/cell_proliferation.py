@@ -3,6 +3,8 @@ saturates — exercises the spawn path, capacity handling and migration."""
 
 from __future__ import annotations
 
+from functools import lru_cache
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -40,6 +42,7 @@ def _update(attrs, valid, acc, key, params, dt):
     return new, valid, spawn, child
 
 
+@lru_cache(maxsize=8)
 def behavior(radius=2.0) -> Behavior:
     return Behavior(
         schema=SCHEMA,
@@ -66,17 +69,19 @@ def init(sim, n_agents: int, seed: int = 0):
 
 
 def simulation(n_agents=50, seed=0, mesh=None, mesh_shape=(1, 1),
-               interior=(8, 8), delta=None, rebalance=None) -> Simulation:
+               interior=(8, 8), delta=None, rebalance=None,
+               sweep_backend="auto") -> Simulation:
     sim = make_sim(behavior(), interior=interior, mesh_shape=mesh_shape,
-                   cap=32, delta=delta, mesh=mesh, rebalance=rebalance)
+                   cap=32, delta=delta, mesh=mesh, rebalance=rebalance,
+                   sweep_backend=sweep_backend)
     return init(sim, n_agents, seed)
 
 
 def run(n_agents=50, steps=20, seed=0, mesh=None, mesh_shape=(1, 1),
-        interior=(8, 8), delta=None, rebalance=None):
+        interior=(8, 8), delta=None, rebalance=None, sweep_backend="auto"):
     sim = simulation(n_agents=n_agents, seed=seed, mesh=mesh,
                      mesh_shape=mesh_shape, interior=interior, delta=delta,
-                     rebalance=rebalance)
+                     rebalance=rebalance, sweep_backend=sweep_backend)
     n0 = sim.n_agents()
     sim.every(1, operations.agent_count, name="counts")
     sim.run(steps)

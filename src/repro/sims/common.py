@@ -32,13 +32,15 @@ def make_sim(
     mesh=None,
     rebalance: Union[Rebalance, int, None] = None,
     checkpoint=None,
+    sweep_backend: str = "auto",
 ) -> Simulation:
     """Facade builder with the sims' historical geometry defaults."""
     return Simulation(
         dict(cell_size=cell_size, interior=interior, mesh_shape=mesh_shape,
              cap=cap, boundary=boundary),
         behaviors, mesh=mesh, delta=delta, dt=dt,
-        rebalance=rebalance, checkpoint=checkpoint)
+        rebalance=rebalance, checkpoint=checkpoint,
+        sweep_backend=sweep_backend)
 
 
 def init_agents(sim, positions: np.ndarray, attrs, seed: int = 0):

@@ -12,6 +12,8 @@ analogue of the paper's two-line ``SumOverAllRanks`` change (§3.4).
 
 from __future__ import annotations
 
+from functools import lru_cache
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -51,6 +53,7 @@ def _update(attrs, valid, acc, key, params, dt):
     return new, valid, spawn, None
 
 
+@lru_cache(maxsize=32)
 def behavior(beta=0.03, gamma=0.25, sigma=1.2, radius=2.0) -> Behavior:
     return Behavior(
         schema=SCHEMA,
@@ -102,12 +105,14 @@ def sir_ode(n, i0, beta_eff, gamma, dt, steps):
 
 def simulation(n_agents=600, initial_infected=30, seed=0, mesh=None,
                mesh_shape=(1, 1), interior=(10, 10), delta=None,
-               rebalance=None, **bparams) -> Simulation:
+               rebalance=None, sweep_backend="auto", **bparams
+               ) -> Simulation:
     """SIR sim on the facade, with the S/I/R compartment reducer (the
     paper's §3.4 ``SumOverAllRanks`` two-liner) pre-scheduled every step."""
     sim = make_sim(behavior(**bparams), interior=interior,
                    mesh_shape=mesh_shape, boundary="toroidal", dt=1.0,
-                   delta=delta, mesh=mesh, rebalance=rebalance)
+                   delta=delta, mesh=mesh, rebalance=rebalance,
+                   sweep_backend=sweep_backend)
     init(sim, n_agents, initial_infected, seed)
     sim.every(1, operations.attr_counts("state", (S, I, R)), name="sir")
     return sim
@@ -115,10 +120,10 @@ def simulation(n_agents=600, initial_infected=30, seed=0, mesh=None,
 
 def run(n_agents=600, steps=60, initial_infected=30, seed=0, mesh=None,
         mesh_shape=(1, 1), interior=(10, 10), delta=None, rebalance=None,
-        **bparams):
+        sweep_backend="auto", **bparams):
     sim = simulation(n_agents=n_agents, initial_infected=initial_infected,
                      seed=seed, mesh=mesh, mesh_shape=mesh_shape,
                      interior=interior, delta=delta, rebalance=rebalance,
-                     **bparams)
+                     sweep_backend=sweep_backend, **bparams)
     sim.run(steps)
     return sim.state, {"series": np.array(sim.series["sir"])}

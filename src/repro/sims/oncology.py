@@ -9,6 +9,8 @@ identical in serial and distributed execution."""
 
 from __future__ import annotations
 
+from functools import lru_cache
+
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -48,6 +50,7 @@ def _pair(ai, aj, disp, dist2, params):
     return out
 
 
+@lru_cache(maxsize=8)
 def behavior(radius=2.0) -> Behavior:
     return Behavior(
         schema=SCHEMA,
@@ -84,17 +87,19 @@ def tumor_diameter(state) -> float:
 
 
 def simulation(n_agents=30, seed=0, mesh=None, mesh_shape=(1, 1),
-               interior=(10, 10), delta=None, rebalance=None) -> Simulation:
+               interior=(10, 10), delta=None, rebalance=None,
+               sweep_backend="auto") -> Simulation:
     sim = make_sim(behavior(), interior=interior, mesh_shape=mesh_shape,
-                   cap=32, delta=delta, mesh=mesh, rebalance=rebalance)
+                   cap=32, delta=delta, mesh=mesh, rebalance=rebalance,
+                   sweep_backend=sweep_backend)
     return init(sim, n_agents, seed)
 
 
 def run(n_agents=30, steps=25, seed=0, mesh=None, mesh_shape=(1, 1),
-        interior=(10, 10), delta=None, rebalance=None):
+        interior=(10, 10), delta=None, rebalance=None, sweep_backend="auto"):
     sim = simulation(n_agents=n_agents, seed=seed, mesh=mesh,
                      mesh_shape=mesh_shape, interior=interior, delta=delta,
-                     rebalance=rebalance)
+                     rebalance=rebalance, sweep_backend=sweep_backend)
     d0 = tumor_diameter(sim.state)
     sim.run(steps, collect=lambda s: (total_agents(s), tumor_diameter(s)))
     return sim.state, {"diam_initial": d0, "series": sim.series["collect"]}

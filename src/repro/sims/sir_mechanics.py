@@ -15,6 +15,8 @@ library behaviors combined into a new model with one line.
 
 from __future__ import annotations
 
+from functools import lru_cache
+
 import numpy as np
 
 from repro.core import Simulation, compose, operations
@@ -24,6 +26,7 @@ from repro.sims.common import init_agents, make_sim, uniform_positions
 S, I, R = epidemiology.S, epidemiology.I, epidemiology.R
 
 
+@lru_cache(maxsize=32)
 def behavior(repulsion=2.0, adhesion=0.5, mech_radius=2.0, max_step=0.3,
              beta=0.05, gamma=0.1, sigma=0.3, sir_radius=1.5):
     """``compose(mechanics, sir)`` — union schema {diameter, ctype, state},
@@ -51,10 +54,12 @@ def init(sim, n_agents: int, initial_infected: int, seed: int = 0):
 
 def simulation(n_agents=400, initial_infected=20, seed=0, mesh=None,
                mesh_shape=(1, 1), interior=(8, 8), delta=None,
-               rebalance=None, **bparams) -> Simulation:
+               rebalance=None, sweep_backend="auto", **bparams
+               ) -> Simulation:
     sim = make_sim(behavior(**bparams), interior=interior,
                    mesh_shape=mesh_shape, cap=32, boundary="toroidal",
-                   dt=1.0, delta=delta, mesh=mesh, rebalance=rebalance)
+                   dt=1.0, delta=delta, mesh=mesh, rebalance=rebalance,
+                   sweep_backend=sweep_backend)
     init(sim, n_agents, initial_infected, seed)
     sim.every(1, operations.attr_counts("state", (S, I, R)), name="sir")
     return sim
@@ -62,11 +67,11 @@ def simulation(n_agents=400, initial_infected=20, seed=0, mesh=None,
 
 def run(n_agents=400, steps=40, initial_infected=20, seed=0, mesh=None,
         mesh_shape=(1, 1), interior=(8, 8), delta=None, rebalance=None,
-        **bparams):
+        sweep_backend="auto", **bparams):
     sim = simulation(n_agents=n_agents, initial_infected=initial_infected,
                      seed=seed, mesh=mesh, mesh_shape=mesh_shape,
                      interior=interior, delta=delta, rebalance=rebalance,
-                     **bparams)
+                     sweep_backend=sweep_backend, **bparams)
     f0 = cell_clustering.same_type_fraction(sim.state, sim.engine)
     sim.run(steps)
     f1 = cell_clustering.same_type_fraction(sim.state, sim.engine)

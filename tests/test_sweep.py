@@ -1,0 +1,287 @@
+"""Fused interaction-sweep parity + scan-fused driver equivalence.
+
+Pins the three sweep backends (reference | tiled | pallas) against each
+other for every bundled sim behavior and for composed stacks (including the
+spawn path), the INTERPRET auto-detection contract, the one-pass migration
+invariants, and the segment runner (``Engine.drive`` / ``Simulation.run``
+scan fusion) against the per-step loop — the latter under
+warnings-as-errors so no deprecation or tracing warning hides in the fused
+path.
+
+Tolerances: ``tiled`` re-associates nothing (the j axis is reduced in the
+reference's offset order) but XLA fuses the two graphs differently, so FMA
+contraction can flip the last bit of float force chains — tiled parity is
+pinned to 1e-5 absolute on float accumulators and *exact* on count-valued
+ones.  ``pallas`` (interpret mode on CPU) is pinned to the usual kernel
+tolerance.  The scan-fused driver runs the identical per-step graph inside
+``fori_loop`` and is pinned bit-exact.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AgentSchema, Behavior, DeltaConfig, Engine, GridGeom, compose,
+    total_agents,
+)
+from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
+from repro.core.neighbors import (
+    SWEEP_BACKENDS,
+    pair_accumulate,
+    resolve_sweep_backend,
+    sweep_accumulate,
+)
+from repro.sims import (
+    cell_clustering, cell_proliferation, epidemiology, oncology,
+    sir_mechanics,
+)
+
+SIM_BEHAVIORS = {
+    "cell_clustering": (cell_clustering.behavior(), "closed"),
+    "cell_proliferation": (cell_proliferation.behavior(), "closed"),
+    "epidemiology": (epidemiology.behavior(), "toroidal"),
+    "oncology": (oncology.behavior(), "closed"),
+}
+
+
+def make_state(beh, boundary="closed", n=260, seed=0, interior=(6, 6),
+               cap=16):
+    geom = GridGeom(cell_size=2.0, interior=interior, mesh_shape=(1, 1),
+                    cap=cap, boundary=boundary)
+    eng = Engine(geom=geom, behavior=beh, dt=0.1)
+    rng = np.random.default_rng(seed)
+    lx, ly = geom.domain_size
+    pos = rng.uniform(0.5, lx - 0.5, (n, 2)).astype(np.float32)
+    attrs = {}
+    for name, _, dtype in beh.schema.fields:
+        if dtype == jnp.int32:
+            attrs[name] = rng.integers(0, 2, n).astype(np.int32)
+        else:
+            attrs[name] = rng.uniform(0.6, 1.4, n).astype(np.float32)
+    return eng, eng.init_state(pos, attrs, seed=seed)
+
+
+def run_sweep(eng, state, backend):
+    beh = eng.behavior
+    fn = jax.jit(lambda soa: sweep_accumulate(
+        eng.geom, soa, beh.pair_fn, beh.pair_attrs, beh.radius, beh.params,
+        backend=backend))
+    return fn(state.soa)
+
+
+def assert_acc_close(got, want, atol):
+    assert set(got) == set(want)
+    for k in want:
+        g, w = np.asarray(got[k]), np.asarray(want[k])
+        if atol == 0:
+            np.testing.assert_array_equal(g, w, err_msg=k)
+        else:
+            np.testing.assert_allclose(g, w, atol=atol, rtol=atol,
+                                       err_msg=k)
+
+
+# ---------------------------------------------------------------------------
+# backend parity: all four sims
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(SIM_BEHAVIORS))
+@pytest.mark.parametrize("backend", ["tiled", "pallas"])
+def test_sweep_backend_matches_reference(name, backend):
+    beh, boundary = SIM_BEHAVIORS[name]
+    eng, state = make_state(beh, boundary)
+    want = run_sweep(eng, state, "reference")
+    got = run_sweep(eng, state, backend)
+    assert_acc_close(got, want, atol=1e-5)
+
+
+def test_tiled_count_accumulators_exact():
+    """Integer-valued accumulators (sums of 1.0) have no rounding: the
+    tiled sweep must agree with the reference bit-for-bit on them."""
+    beh, boundary = SIM_BEHAVIORS["epidemiology"]
+    eng, state = make_state(beh, boundary)
+    want = run_sweep(eng, state, "reference")
+    got = run_sweep(eng, state, "tiled")
+    assert_acc_close(got, want, atol=0)   # n_inf: pure neighbor counts
+
+
+@pytest.mark.parametrize("backend", ["tiled", "pallas"])
+def test_sweep_backend_matches_reference_composed(backend):
+    """Composed stack (mechanics + SIR, distinct radii, namespaced
+    accumulators) through one sweep on every backend."""
+    beh = sir_mechanics.behavior()
+    eng, state = make_state(beh, "toroidal")
+    want = run_sweep(eng, state, "reference")
+    assert any(k.startswith("b0.") for k in want)  # namespaced stack
+    got = run_sweep(eng, state, backend)
+    assert_acc_close(got, want, atol=1e-5)
+
+
+@pytest.mark.parametrize("backend", ["tiled", "pallas"])
+def test_composed_spawning_stack_end_to_end(backend):
+    """compose(mechanics, proliferation) driven through the engine on each
+    backend vs the reference backend: the spawn path (children, gid issue,
+    re-bin) must produce the same population and near-identical positions."""
+    comp = compose(cell_clustering.behavior(), cell_proliferation.behavior())
+    assert comp.can_spawn
+
+    def final(backend):
+        geom = GridGeom(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1),
+                        cap=32)
+        eng = Engine(geom=geom, behavior=comp, dt=0.1,
+                     sweep_backend=backend)
+        rng = np.random.default_rng(3)
+        lx, ly = geom.domain_size
+        n = 40
+        pos = rng.uniform(2.0, lx - 2.0, (n, 2)).astype(np.float32)
+        attrs = {"diameter": np.full((n,), 0.8, np.float32),
+                 "ctype": rng.integers(0, 2, n).astype(np.int32)}
+        state = eng.init_state(pos, attrs, seed=0)
+        _, state, _ = eng.drive(state, 8)
+        return state
+
+    want = final("reference")
+    got = final(backend)
+    assert total_agents(got) == total_agents(want) > 40
+    sort = lambda s: np.sort(
+        np.asarray(s.soa.attrs["pos"]).reshape(-1, 2)[
+            np.asarray(s.soa.valid).ravel()], axis=0)
+    np.testing.assert_allclose(sort(got), sort(want), atol=1e-4)
+
+
+def test_resolve_backend_and_interpret_auto():
+    from repro.kernels import ops
+
+    # auto resolves per JAX backend (this container is CPU -> tiled,
+    # interpreted Pallas)
+    assert resolve_sweep_backend("auto") in SWEEP_BACKENDS
+    if jax.default_backend() != "tpu":
+        assert resolve_sweep_backend("auto") == "tiled"
+        assert ops.use_interpret() is True
+    with pytest.raises(ValueError):
+        resolve_sweep_backend("vectorized")
+    # explicit overrides win over auto-detection
+    assert ops.use_interpret(True) is True
+    assert ops.use_interpret(False) is False
+    old = ops.INTERPRET
+    try:
+        ops.INTERPRET = False
+        assert ops.use_interpret() is False
+        assert ops.use_interpret(True) is True
+    finally:
+        ops.INTERPRET = old
+
+
+# ---------------------------------------------------------------------------
+# scan-fused driver vs per-step loop (warnings-as-errors)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("delta", [False, True])
+def test_segment_runner_matches_per_step_drive(delta):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        beh = cell_clustering.behavior()
+        cfg = DeltaConfig(enabled=delta, qdtype=jnp.int16,
+                          refresh_interval=4)
+        geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+                        cap=24)
+        eng = Engine(geom=geom, behavior=beh, delta_cfg=cfg, dt=0.1)
+        rng = np.random.default_rng(0)
+        pos = rng.uniform(0.5, 15.5, (250, 2)).astype(np.float32)
+        attrs = {"diameter": np.full((250,), 1.0, np.float32),
+                 "ctype": rng.integers(0, 2, 250).astype(np.int32)}
+        s0 = eng.init_state(pos, attrs, seed=0)
+
+        # per-step loop (explicit step_fn keeps drive on the legacy path)
+        _, s1, _ = eng.drive(s0, 10, step_fn=eng.make_local_step())
+        # scan-fused: one dispatch per refresh segment
+        _, s2, _ = eng.drive(s0, 10)
+
+        np.testing.assert_array_equal(np.asarray(s1.soa.attrs["pos"]),
+                                      np.asarray(s2.soa.attrs["pos"]))
+        np.testing.assert_array_equal(np.asarray(s1.soa.valid),
+                                      np.asarray(s2.soa.valid))
+        np.testing.assert_array_equal(np.asarray(s1.key), np.asarray(s2.key))
+        assert int(s2.it[0, 0]) == 10
+
+
+def test_facade_fuses_segments_and_matches_per_step():
+    """Simulation.run with a sparse scheduled op fuses the gaps; results
+    and op cadence match the per-step facade exactly."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        from repro.core import Simulation
+
+        beh = cell_clustering.behavior()
+        geom = dict(interior=(8, 8), cap=24)
+        pos, attrs = _inputs()
+
+        sim_fused = Simulation(geom, beh, dt=0.1).init(pos, attrs, seed=0)
+        sim_fused.every(5, lambda s: s.n_agents(), name="n")
+        sim_fused.run(12)
+
+        sim_step = Simulation(geom, beh, dt=0.1).init(pos, attrs, seed=0)
+        sim_step.every(5, lambda s: s.n_agents(), name="n")
+        sim_step.run(12, fused=False)   # one dispatch per step
+
+        assert sim_fused.series["n"] == sim_step.series["n"]
+        assert sim_fused.iteration == sim_step.iteration == 12
+        np.testing.assert_array_equal(
+            np.asarray(sim_fused.state.soa.attrs["pos"]),
+            np.asarray(sim_step.state.soa.attrs["pos"]))
+
+
+def _inputs(n=250, seed=0, domain=16.0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0.5, domain - 0.5, (n, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": rng.integers(0, 2, n).astype(np.int32)}
+    return pos, attrs
+
+
+# ---------------------------------------------------------------------------
+# one-pass migration invariants
+# ---------------------------------------------------------------------------
+
+def test_one_pass_migration_conserves_through_diagonal_wrap():
+    """Toroidal single-device domain with diagonal drift: every step every
+    agent crosses a ring in both axes (the forwarded-corner path) and the
+    population, ids and domain bounds must hold."""
+    schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                                 "ctype": ((), jnp.int32)})
+
+    def drift(attrs, valid, acc, key, params, dt):
+        new = dict(attrs)
+        new["pos"] = attrs["pos"] + jnp.where(
+            valid[..., None], jnp.asarray([1.7, 1.3]), 0.0)
+        return new, valid, jnp.zeros_like(valid), None
+
+    beh = Behavior(schema=schema, pair_fn=soft_repulsion_adhesion,
+                   pair_attrs=("diameter", "ctype"), update_fn=drift,
+                   radius=2.0,
+                   params={"repulsion": 0.0, "adhesion": 0.0,
+                           "same_type_only": 0.0, "max_step": 0.0})
+    geom = GridGeom(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1),
+                    cap=16, boundary="toroidal")
+    eng = Engine(geom=geom, behavior=beh, dt=1.0)
+    rng = np.random.default_rng(1)
+    n = 150
+    lx, ly = geom.domain_size
+    pos = rng.uniform(0.0, lx, (n, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": np.zeros((n,), np.int32)}
+    state = eng.init_state(pos, attrs, seed=0)
+    _, state, _ = eng.drive(state, 25)
+    assert total_agents(state) == n
+    assert int(state.dropped.sum()) == 0
+    p = np.asarray(state.soa.attrs["pos"]).reshape(-1, 2)[
+        np.asarray(state.soa.valid).ravel()]
+    assert (p >= 0).all() and (p[:, 0] <= lx).all() and (p[:, 1] <= ly).all()
+    gr = np.asarray(state.soa.attrs["gid_rank"]).ravel()
+    gc = np.asarray(state.soa.attrs["gid_count"]).ravel()
+    v = np.asarray(state.soa.valid).ravel()
+    keys = gr[v].astype(np.int64) * (1 << 32) + gc[v]
+    assert len(np.unique(keys)) == n
