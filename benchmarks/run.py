@@ -9,9 +9,14 @@ Prints ``name,us_per_call,derived`` CSV rows:
   sweep_*           — interaction-sweep micro-bench: the three backends
                       (reference | tiled | pallas) on one workload, pair
                       evaluations/s and speedup vs the reference gather
-                      (docs/performance.md explains how to read these)
+                      (docs/performance.md explains how to read these);
+                      sweep_3d_* repeats it on a 3-D Domain (27-offset
+                      stencil, no pallas row — the kernel factory is 2-D)
+  halo_bytes_3d     — 3-D aura-exchange wire bytes/iter (6 directed edges),
+                      full f32 vs int16 delta
   sim_*             — paper Fig. 6 analogue: per-simulation iteration rate
-                      (agent_updates/s, the Biocellion comparison metric §3.8)
+                      (agent_updates/s, the Biocellion comparison metric
+                      §3.8); sim_tumor_spheroid_3d tracks the 3-D flagship
   scaling_*         — paper Fig. 8/9 analogue: strong scaling over placeholder
                       spatial meshes at FIXED global problem size
                       (subprocess: needs >1 XLA host device); derived reports
@@ -75,7 +80,7 @@ def bench_serialization():
 
     schema = AgentSchema.create({
         "diameter": ((), jnp.float32), "ctype": ((), jnp.int32)})
-    soa = AgentSoA.empty(schema, 66, 66, 16)
+    soa = AgentSoA.empty(schema, (66, 66), 16)
     soa = soa.replace(valid=soa.valid.at[:, :, :8].set(True))
 
     def ta_io():
@@ -143,12 +148,12 @@ def bench_sweep():
     row runs in interpret mode on CPU (that row measures the interpreter,
     not Mosaic; it exists to keep the TPU path's parity + plumbing hot).
     """
-    from repro.core import Engine, GridGeom
+    from repro.core import Engine, Domain
     from repro.core.neighbors import sweep_accumulate
     from repro.sims import cell_clustering
 
     beh = cell_clustering.behavior()
-    geom = GridGeom(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1),
+    geom = Domain(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1),
                     cap=24)
     eng = Engine(geom=geom, behavior=beh, dt=0.1)
     rng = np.random.default_rng(0)
@@ -181,6 +186,72 @@ def bench_sweep():
 
 
 # ---------------------------------------------------------------------------
+# 3-D sweep micro-bench: the same hot kernel on the new spatial axis
+# ---------------------------------------------------------------------------
+
+def bench_sweep_3d():
+    """reference | tiled on a 3-D Domain (27-offset stencil).  The Pallas
+    kernel factory is 2-D, so there is no pallas row here — ``auto``
+    resolves to ``tiled`` for 3-D (docs/domains.md, Pallas fallback rule).
+    """
+    from repro.core import Domain, Engine
+    from repro.core.neighbors import sweep_accumulate
+    from repro.sims import cell_clustering
+
+    beh = cell_clustering.behavior()
+    geom = Domain(cell_size=2.0, interior=(8, 8, 8), mesh_shape=(1, 1, 1),
+                  cap=16)
+    eng = Engine(geom=geom, behavior=beh, dt=0.1)
+    rng = np.random.default_rng(0)
+    n = 2000
+    size = geom.domain_size
+    pos = rng.uniform([0.5] * 3, [s - 0.5 for s in size],
+                      (n, 3)).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": rng.integers(0, 2, n).astype(np.int32)}
+    state = eng.init_state(pos, attrs, seed=0)
+    cells = geom.interior[0] * geom.interior[1] * geom.interior[2]
+    pairs = cells * geom.cap * 27 * geom.cap
+
+    times = {}
+    for backend in ("reference", "tiled"):
+        fn = jax.jit(lambda soa, b=backend: sweep_accumulate(
+            geom, soa, beh.pair_fn, beh.pair_attrs, beh.radius, beh.params,
+            backend=b))
+        jax.block_until_ready(fn(state.soa))     # compile
+        t = timeit(lambda: jax.block_until_ready(fn(state.soa)),
+                   n=5, warmup=1)
+        times[backend] = t
+        emit(f"sweep_3d_{backend}", t,
+             f"pairs_per_s={pairs / (t / 1e6):.3g}"
+             f"_speedup_vs_reference={times['reference'] / t:.2f}x")
+
+
+# ---------------------------------------------------------------------------
+# 3-D aura-exchange wire bytes: 6 directed edges, full vs delta
+# ---------------------------------------------------------------------------
+
+def bench_halo_bytes_3d():
+    """Wire bytes per iteration of the 3-D aura exchange (2*ndim = 6
+    directed face slabs), full f32 vs int16 quantized-delta — the 3-D
+    continuation of the ``delta_*`` rows."""
+    from repro.core import DeltaConfig
+    from repro.sims import tumor_spheroid
+
+    _ = tumor_spheroid.run(n_agents=40, steps=2)   # warm compile
+    t0 = time.perf_counter()
+    s_plain, _ = tumor_spheroid.run(n_agents=40, steps=4)
+    t_plain = time.perf_counter() - t0
+    b_plain = int(s_plain.halo_bytes.ravel()[0])
+    delta = DeltaConfig(enabled=True, qdtype=jnp.int16, refresh_interval=16)
+    s_delta, _ = tumor_spheroid.run(n_agents=40, steps=4, delta=delta)
+    b_delta = int(s_delta.halo_bytes.ravel()[0])
+    emit("halo_bytes_3d", t_plain / 4 * 1e6,
+         f"reduction={b_plain/max(b_delta,1):.2f}x "
+         f"({b_plain}->{b_delta}B/iter_6_edges)")
+
+
+# ---------------------------------------------------------------------------
 # Fig 6 / §3.8 analogue: per-sim iteration rate
 # ---------------------------------------------------------------------------
 
@@ -204,6 +275,22 @@ def bench_sims():
         n = total_agents(state)
         emit(f"sim_{name}", dt_iter * 1e6,
              f"agent_updates_per_s={n/dt_iter:.0f}")
+
+
+def bench_sim_tumor_spheroid():
+    """3-D flagship workload (sims/tumor_spheroid): iteration rate of the
+    composed mechanics + nutrient-gated-growth stack on a 3-D Domain."""
+    from repro.core.engine import total_agents
+    from repro.sims import tumor_spheroid
+
+    kw = dict(n_agents=40, steps=4)
+    _ = tumor_spheroid.run(**{**kw, "steps": 2})   # warm compile
+    t0 = time.perf_counter()
+    state, _ = tumor_spheroid.run(**kw)
+    dt_iter = (time.perf_counter() - t0) / kw["steps"]
+    n = total_agents(state)
+    emit("sim_tumor_spheroid_3d", dt_iter * 1e6,
+         f"agent_updates_per_s={n/dt_iter:.0f}_ndim=3")
 
 
 # ---------------------------------------------------------------------------
@@ -277,7 +364,7 @@ def bench_rebalance():
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
 import time, numpy as np, jax, jax.numpy as jnp
-from repro.core import AgentSchema, Behavior, Engine, GridGeom, Rebalancer, total_agents
+from repro.core import AgentSchema, Behavior, Engine, Domain, Rebalancer, total_agents
 from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
 from repro.core.reshard import current_imbalance
 from repro.launch.mesh import make_abm_mesh
@@ -295,7 +382,7 @@ pos = np.clip(c + rng.normal(0, 3.0, (n, 2)), 0.5, 31.5).astype(np.float32)
 attrs = {"diameter": np.full((n,), 1.0, np.float32),
          "ctype": rng.integers(0, 2, n).astype(np.int32)}
 
-geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=48)
+geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=48)
 eng = Engine(geom=geom, behavior=beh, dt=0.1)
 state = eng.init_state(pos, attrs, seed=0)
 imb0 = current_imbalance(eng.geom, state)
@@ -340,11 +427,11 @@ def bench_api_overhead():
     scheduling at segment boundaries)."""
     import numpy as np
 
-    from repro.core import Engine, GridGeom, Simulation
+    from repro.core import Engine, Domain, Simulation
     from repro.sims import cell_clustering
 
     beh = cell_clustering.behavior()
-    geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+    geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
                     cap=24)
     rng = np.random.default_rng(0)
     n = 400
@@ -423,7 +510,10 @@ BENCHES = {
     "serialization": bench_serialization,
     "delta": bench_delta,
     "sweep": bench_sweep,
+    "sweep_3d": bench_sweep_3d,
+    "halo_bytes_3d": bench_halo_bytes_3d,
     "sim": bench_sims,
+    "sim_tumor_spheroid": bench_sim_tumor_spheroid,
     "api_overhead": bench_api_overhead,
     "scaling": bench_scaling,
     "rebalance": bench_rebalance,

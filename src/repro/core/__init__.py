@@ -6,7 +6,10 @@ Public API:
                              checkpoints (paper §3.4 usability claim)
   Rebalance / Checkpoint   — facade policy knobs
   AgentSchema / AgentSoA   — SoA agent container (TeraAgent IO analogue)
-  GridGeom                 — partitioning grid + neighbor-search grid
+  Domain                   — N-D spatial spec: partitioning grid +
+                             neighbor-search grid + per-axis boundaries
+                             (2-D sheets and 3-D tissues; docs/domains.md)
+  GridGeom                 — DEPRECATED 2-D constructor shim over Domain
   Behavior / compose       — model definition (pair kernel + update) and
                              the behavior-stacking composition algebra
   operations               — scheduled-op helpers (SumOverAllRanks family)
@@ -19,6 +22,7 @@ from repro.core import operations
 from repro.core.agent_soa import AgentSchema, AgentSoA, GID_COUNT, GID_RANK, POS
 from repro.core.behaviors import Behavior, compose
 from repro.core.delta import DeltaConfig
+from repro.core.domain import Domain
 from repro.core.engine import Engine, SimState, total_agents
 from repro.core.grid import GridGeom
 from repro.core.reshard import Rebalancer
@@ -26,7 +30,7 @@ from repro.core.simulation import Checkpoint, Rebalance, Simulation
 
 __all__ = [
     "AgentSchema", "AgentSoA", "GID_COUNT", "GID_RANK", "POS",
-    "Behavior", "compose", "Checkpoint", "DeltaConfig", "Engine",
+    "Behavior", "compose", "Checkpoint", "DeltaConfig", "Domain", "Engine",
     "SimState", "GridGeom", "Rebalance", "Rebalancer", "Simulation",
     "operations", "total_agents",
 ]

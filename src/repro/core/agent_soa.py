@@ -9,11 +9,12 @@ pack/unpack work by construction.  Pointer fields (the paper's ``AgentPointer``)
 become integer global-identifier columns; behaviour dispatch (the paper's vtable
 fix-up) becomes data-driven mask columns.
 
-Layout: every attribute is an array of shape ``(hx, hy, K, *attr_shape)`` where
-``(hx, hy)`` is the local neighbor-search-grid (NSG) cell grid *including a one-
-cell halo ring* and ``K`` is the per-cell slot capacity.  A boolean ``valid`` mask
-marks occupied slots.  Global agent identifiers follow the paper's
-``<rank, counter>`` scheme as two int32 columns.
+Layout: every attribute is an array of shape ``(*grid, K, *attr_shape)`` where
+``grid`` is the local neighbor-search-grid (NSG) cell grid — 2-D ``(hx, hy)``
+or 3-D ``(hx, hy, hz)`` per the :class:`repro.core.domain.Domain` — *including
+a one-cell halo ring* and ``K`` is the per-cell slot capacity.  A boolean
+``valid`` mask marks occupied slots.  Global agent identifiers follow the
+paper's ``<rank, counter>`` scheme as two int32 columns.
 """
 
 from __future__ import annotations
@@ -29,7 +30,7 @@ import numpy as np
 Array = jax.Array
 
 # Reserved attribute names every AgentSoA carries.
-POS = "pos"          # (..., 2) float32 absolute position
+POS = "pos"          # (..., ndim) float32 absolute position
 GID_RANK = "gid_rank"    # int32 — rank that created the agent
 GID_COUNT = "gid_count"  # int32 — strictly increasing per-rank counter
 
@@ -58,10 +59,11 @@ class AgentSchema:
     def names(self) -> Tuple[str, ...]:
         return tuple(n for n, _, _ in self.fields)
 
-    def all_specs(self) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
-        """Schema including the reserved columns."""
+    def all_specs(self, ndim: int = 2) -> Dict[str, Tuple[Tuple[int, ...], Any]]:
+        """Schema including the reserved columns; ``ndim`` sets the spatial
+        dimensionality of the ``pos`` column (the Domain's ``ndim``)."""
         out: Dict[str, Tuple[Tuple[int, ...], Any]] = {
-            POS: ((2,), jnp.float32),
+            POS: ((ndim,), jnp.float32),
             GID_RANK: ((), jnp.int32),
             GID_COUNT: ((), jnp.int32),
         }
@@ -73,10 +75,10 @@ class AgentSchema:
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class AgentSoA:
-    """Agents stored in NSG cell-slot layout: arrays of shape (hx, hy, K, ...)."""
+    """Agents stored in NSG cell-slot layout: arrays of shape (*grid, K, ...)."""
 
-    attrs: Dict[str, Array]   # each (hx, hy, K, *trailing)
-    valid: Array              # (hx, hy, K) bool
+    attrs: Dict[str, Array]   # each (*grid, K, *trailing)
+    valid: Array              # (*grid, K) bool
 
     # -- pytree protocol -------------------------------------------------
     def tree_flatten(self):
@@ -91,12 +93,12 @@ class AgentSoA:
 
     # -- convenience -----------------------------------------------------
     @property
-    def grid_shape(self) -> Tuple[int, int]:
-        return self.valid.shape[0], self.valid.shape[1]
+    def grid_shape(self) -> Tuple[int, ...]:
+        return tuple(self.valid.shape[:-1])
 
     @property
     def capacity(self) -> int:
-        return int(self.valid.shape[2])
+        return int(self.valid.shape[-1])
 
     @property
     def pos(self) -> Array:
@@ -112,28 +114,23 @@ class AgentSoA:
         return self.replace(attrs={k: fn(k, v) for k, v in self.attrs.items()})
 
     @staticmethod
-    def empty(schema: AgentSchema, hx: int, hy: int, cap: int) -> "AgentSoA":
+    def empty(schema: AgentSchema, grid_shape: Tuple[int, ...], cap: int
+              ) -> "AgentSoA":
+        grid_shape = tuple(grid_shape)
         attrs = {}
-        for name, (shape, dtype) in schema.all_specs().items():
-            attrs[name] = jnp.zeros((hx, hy, cap) + shape, dtype=dtype)
-        valid = jnp.zeros((hx, hy, cap), dtype=jnp.bool_)
+        for name, (shape, dtype) in schema.all_specs(len(grid_shape)).items():
+            attrs[name] = jnp.zeros(grid_shape + (cap,) + shape, dtype=dtype)
+        valid = jnp.zeros(grid_shape + (cap,), dtype=jnp.bool_)
         return AgentSoA(attrs=attrs, valid=valid)
 
 
 def flat_view(soa: AgentSoA) -> Tuple[Dict[str, Array], Array]:
-    """Flatten (hx, hy, K, ...) -> (N, ...) for sorting/packing passes."""
-    hx, hy = soa.grid_shape
-    k = soa.capacity
-    n = hx * hy * k
-    attrs = {name: a.reshape((n,) + a.shape[3:]) for name, a in soa.attrs.items()}
+    """Flatten (*grid, K, ...) -> (N, ...) for sorting/packing passes."""
+    nd = soa.valid.ndim          # grid axes + the slot axis
+    n = int(np.prod(soa.valid.shape))
+    attrs = {name: a.reshape((n,) + a.shape[nd:])
+             for name, a in soa.attrs.items()}
     return attrs, soa.valid.reshape((n,))
-
-
-def from_flat(
-    attrs: Dict[str, Array], valid: Array, hx: int, hy: int, cap: int
-) -> AgentSoA:
-    out = {name: a.reshape((hx, hy, cap) + a.shape[1:]) for name, a in attrs.items()}
-    return AgentSoA(attrs=out, valid=valid.reshape((hx, hy, cap)))
 
 
 def concat_flat(

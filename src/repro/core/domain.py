@@ -1,0 +1,197 @@
+"""The N-dimensional spatial ``Domain`` — one abstraction from 2-D sheets
+to 3-D tissues.
+
+Mirrors the paper's dimension-agnostic partitioning-grid formulation
+(§2.1, §2.4.1) and BioDynaMo's ``Space``/``Environment`` decoupling: the
+whole spatial stack (binning, aura exchange, neighbor sweep, migration,
+load balancing) reasons over *axes*, never over named x/y coordinates, so
+moving a model from a 2-D sheet to a 3-D tissue is a one-argument change —
+the same seamlessness the paper claims for laptop-to-supercomputer (§3.4).
+
+A :class:`Domain` is the single source of spatial truth threaded through
+``Simulation``/``Engine``/``make_sim``:
+
+* ``ndim`` (2 or 3) — derived from ``interior``.
+* per-axis interior cell counts and per-axis device-mesh shape.
+* per-axis boundary conditions (``"closed"`` | ``"toroidal"``), replacing
+  the historical single global ``boundary`` string (a plain string is
+  broadcast to every axis, so existing call sites read unchanged).
+* the NSG cell size, per-cell slot capacity, and the partitioning-box
+  factor (paper §2.4.1 granularity knob).
+
+``Domain`` is frozen and hashable: it keys the engine's compiled step /
+segment caches and ``grid.bin_agents_jit`` exactly as ``GridGeom`` did.
+The historical 2-D :func:`repro.core.grid.GridGeom` survives as a thin
+deprecated constructor shim returning a ``Domain``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Sequence, Tuple, Union
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+# Axis naming shared by the halo edge keys ("xm"/"xp"/.../"zp") and the
+# spatial mesh axis names ("sx", "sy", "sz").
+AXIS_CHARS = "xyz"
+
+BOUNDARIES = ("closed", "toroidal")
+
+
+def spatial_axis_names(ndim: int) -> Tuple[str, ...]:
+    """Device-mesh axis names for an ``ndim``-dimensional spatial mesh."""
+    return tuple("s" + AXIS_CHARS[a] for a in range(ndim))
+
+
+def _as_int_tuple(x) -> Tuple[int, ...]:
+    if isinstance(x, int):
+        return (x,)
+    return tuple(int(v) for v in x)
+
+
+def normalize_boundary(boundary: Union[str, Sequence[str]],
+                       ndim: int) -> Tuple[str, ...]:
+    """Broadcast/validate a boundary spec to a per-axis tuple.
+
+    Raises ``ValueError`` on unknown boundary values (historically any
+    string was silently treated as ``"closed"`` everywhere except the
+    comm permutation — now rejected at construction time).
+    """
+    if isinstance(boundary, str):
+        boundary = (boundary,) * ndim
+    b = tuple(str(v) for v in boundary)
+    if len(b) != ndim:
+        raise ValueError(
+            f"boundary {b} has {len(b)} entries for a {ndim}-D domain")
+    for v in b:
+        if v not in BOUNDARIES:
+            raise ValueError(
+                f"unknown boundary {v!r}; expected one of {BOUNDARIES} "
+                "(per axis, or one string broadcast to all axes)")
+    return b
+
+
+@dataclasses.dataclass(frozen=True)
+class Domain:
+    """Static N-D spatial specification of one run's partitioning + NSG.
+
+    Attributes:
+      cell_size: NSG cell edge length (>= max interaction radius).
+      interior: per-axis interior cell counts per device, length ``ndim``.
+      mesh_shape: per-axis spatial device mesh, length ``ndim`` (``None``
+        or an all-ones tuple of any length defaults to single device).
+      cap: per-cell slot capacity K.
+      boundary: per-axis ``"closed"`` | ``"toroidal"`` tuple; a plain
+        string is broadcast to every axis.
+      box_factor: partitioning-box length as a multiple of the NSG cell
+        (paper §2.4.1); load-balancing granularity only.
+    """
+
+    cell_size: float
+    interior: Tuple[int, ...]
+    mesh_shape: Tuple[int, ...] = None
+    cap: int = 24
+    boundary: Union[str, Tuple[str, ...]] = "closed"
+    box_factor: int = 1
+
+    def __post_init__(self):
+        interior = _as_int_tuple(self.interior)
+        nd = len(interior)
+        if nd not in (2, 3):
+            raise ValueError(
+                f"Domain supports 2-D and 3-D spaces; got interior "
+                f"{interior} ({nd}-D)")
+        mesh = self.mesh_shape
+        if mesh is None:
+            mesh = (1,) * nd
+        mesh = _as_int_tuple(mesh)
+        if len(mesh) != nd and all(m == 1 for m in mesh):
+            # the historical (1, 1) single-device default broadcasts to
+            # any dimensionality
+            mesh = (1,) * nd
+        if len(mesh) != nd:
+            raise ValueError(
+                f"mesh_shape {mesh} has {len(mesh)} axes for a {nd}-D "
+                f"domain (interior {interior})")
+        if any(i < 1 for i in interior) or any(m < 1 for m in mesh):
+            raise ValueError(
+                f"interior {interior} and mesh_shape {mesh} must be >= 1 "
+                "per axis")
+        object.__setattr__(self, "interior", interior)
+        object.__setattr__(self, "mesh_shape", mesh)
+        object.__setattr__(self, "boundary",
+                           normalize_boundary(self.boundary, nd))
+
+    # ------------------------------------------------------------------
+    # Derived geometry
+    # ------------------------------------------------------------------
+    @property
+    def ndim(self) -> int:
+        return len(self.interior)
+
+    @property
+    def local_shape(self) -> Tuple[int, ...]:
+        """Per-device cell grid including the one-cell halo ring."""
+        return tuple(i + 2 for i in self.interior)
+
+    @property
+    def global_cells(self) -> Tuple[int, ...]:
+        return tuple(i * m for i, m in zip(self.interior, self.mesh_shape))
+
+    @property
+    def domain_size(self) -> Tuple[float, ...]:
+        return tuple(g * self.cell_size for g in self.global_cells)
+
+    @property
+    def n_devices(self) -> int:
+        return math.prod(self.mesh_shape)
+
+    @property
+    def toroidal(self) -> Tuple[bool, ...]:
+        """Per-axis toroidal flags."""
+        return tuple(b == "toroidal" for b in self.boundary)
+
+    @property
+    def box_grid(self) -> Tuple[int, ...]:
+        """Global partitioning-box grid (paper §2.4.1): the granularity at
+        which the load-balance planners reason, ``box_factor`` NSG cells
+        per box edge."""
+        g = self.global_cells
+        if any(gc % self.box_factor for gc in g):
+            raise ValueError(
+                f"box_factor {self.box_factor} must divide the global cell "
+                f"grid {g}")
+        return tuple(gc // self.box_factor for gc in g)
+
+    # ------------------------------------------------------------------
+    # Transformations
+    # ------------------------------------------------------------------
+    def with_mesh_shape(self, mesh_shape: Sequence[int]) -> "Domain":
+        """Same global domain re-partitioned over a different device mesh —
+        the geometry half of a re-shard (core.reshard).  The global cell
+        grid is invariant; only the per-device interior block changes."""
+        g = self.global_cells
+        mesh = _as_int_tuple(mesh_shape)
+        if len(mesh) != self.ndim:
+            raise ValueError(
+                f"mesh {mesh} has {len(mesh)} axes for a {self.ndim}-D "
+                "domain")
+        if any(gc % m for gc, m in zip(g, mesh)):
+            raise ValueError(
+                f"mesh {mesh} does not divide the global cell grid {g}")
+        return dataclasses.replace(
+            self, mesh_shape=mesh,
+            interior=tuple(gc // m for gc, m in zip(g, mesh)))
+
+    def device_origin(self, coords: Tuple[Array, ...]) -> Array:
+        """World-space origin of the device's interior region, from the
+        per-axis device-mesh coordinates."""
+        return jnp.stack([
+            c * (i * self.cell_size)
+            for c, i in zip(coords, self.interior)
+        ]).astype(jnp.float32)

@@ -1,19 +1,22 @@
 """The distributed simulation engine: one iteration = aura update ->
 neighbor interaction -> agent update -> agent migration (paper Figure 1).
 
-State layout: every per-device quantity carries two leading device-mesh dims
-``(mx, my)`` (size (1,1) locally inside shard_map), and the agent SoA is
-sharded over its first two (cell-grid) dims.  A single uniform
-``PartitionSpec("sx", "sy")`` therefore shards the whole state, and the same
-``local_step`` body runs unchanged on one device (LocalComm) or on an
-arbitrary spatial mesh (ShardComm inside shard_map) — the paper's seamless
-laptop-to-supercomputer property (§3.4).
+State layout: every per-device quantity carries ``ndim`` leading device-mesh
+dims (the Domain's ``mesh_shape``, all-ones locally inside shard_map), and
+the agent SoA is sharded over its leading cell-grid dims.  A single uniform
+``PartitionSpec("sx", "sy"[, "sz"])`` therefore shards the whole state, and
+the same ``local_step`` body runs unchanged on one device (LocalComm) or on
+an arbitrary spatial mesh (ShardComm inside shard_map) — the paper's
+seamless laptop-to-supercomputer property (§3.4).  The whole spatial stack
+loops over the Domain's axes, so 2-D sheets and 3-D tissues share every
+code path.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import functools
+import math
 from functools import partial
 from typing import Dict, Optional, Tuple
 
@@ -31,7 +34,13 @@ from repro.core.agent_soa import (
 )
 from repro.core.behaviors import Behavior
 from repro.core.delta import DeltaConfig, Slab
-from repro.core.grid import GridGeom, bin_agents, bin_agents_jit, clear_ring
+from repro.core.domain import Domain, spatial_axis_names
+from repro.core.grid import (
+    bin_agents,
+    bin_agents_jit,
+    clear_ring,
+    ring_index,
+)
 from repro.core.halo import (
     Comm,
     LocalComm,
@@ -46,16 +55,24 @@ from repro.core.neighbors import sweep_accumulate
 Array = jax.Array
 
 
+def _bcast(x, mesh_shape: Tuple[int, ...]) -> Array:
+    """Broadcast a per-device value to the leading device-mesh dims."""
+    x = jnp.asarray(x)
+    return jnp.broadcast_to(
+        x.reshape((1,) * len(mesh_shape) + x.shape),
+        tuple(mesh_shape) + x.shape)
+
+
 @jax.tree_util.register_pytree_node_class
 @dataclasses.dataclass
 class SimState:
-    soa: AgentSoA                 # (mx*hx, my*hy, K, ...) globally
-    refs: Dict[str, Slab]         # leading (mx, my)
-    it: Array                     # (mx, my) int32
-    key: Array                    # (mx, my, 2) uint32
-    gid_counter: Array            # (mx, my) int32
-    dropped: Array                # (mx, my) int32 cumulative overflow drops
-    halo_bytes: Array             # (mx, my) int32 wire bytes of last aura update
+    soa: AgentSoA                 # (*mesh*local grid, K, ...) globally
+    refs: Dict[str, Slab]         # leading mesh_shape dims
+    it: Array                     # mesh_shape int32
+    key: Array                    # mesh_shape + (2,) uint32
+    gid_counter: Array            # mesh_shape int32
+    dropped: Array                # mesh_shape int32 cumulative overflow drops
+    halo_bytes: Array             # mesh_shape int32 wire bytes of last aura update
 
     def tree_flatten(self):
         ref_keys = tuple(sorted(self.refs))
@@ -82,7 +99,7 @@ class SimState:
 
 @dataclasses.dataclass(frozen=True)
 class Engine:
-    geom: GridGeom
+    geom: Domain
     behavior: Behavior
     delta_cfg: DeltaConfig = DeltaConfig(enabled=False)
     dt: float = 1.0
@@ -93,7 +110,8 @@ class Engine:
     imbalance_threshold: float = 0.5
     # Interaction-sweep backend (core.neighbors.sweep_accumulate):
     # "auto" resolves to the tiled XLA sweep on CPU/GPU and the fused
-    # Pallas kernel on TPU; "reference" | "tiled" | "pallas" force one.
+    # Pallas kernel on TPU (2-D domains; 3-D always tiles);
+    # "reference" | "tiled" | "pallas" force one.
     sweep_backend: str = "auto"
 
     # ------------------------------------------------------------------
@@ -101,7 +119,7 @@ class Engine:
     # ------------------------------------------------------------------
     def init_state(
         self,
-        positions: np.ndarray,          # (N, 2) global positions
+        positions: np.ndarray,          # (N, ndim) global positions
         attrs: Dict[str, np.ndarray],   # user attrs, (N, ...)
         seed: int = 0,
         *,
@@ -122,22 +140,27 @@ class Engine:
         per-device keys are split from ``fold_in(base_key, it0)`` rather
         than a fresh ``PRNGKey(seed)``."""
         geom = self.geom
-        mx, my = geom.mesh_shape
-        ix, iy = geom.interior
-        hx, hy = geom.local_shape
+        nd = geom.ndim
+        mesh = geom.mesh_shape
+        n_ranks = geom.n_devices
         schema = self.behavior.schema
 
-        gx, gy = geom.domain_size
-        if (positions < 0).any() or (positions[:, 0] >= gx).any() or (
-                positions[:, 1] >= gy).any():
+        positions = np.asarray(positions)
+        if positions.ndim != 2 or positions.shape[1] != nd:
             raise ValueError(
-                f"initial positions outside the domain [0,{gx})x[0,{gy}) — "
-                "out-of-domain agents would land in the halo ring and be "
-                "destroyed by the first aura rebuild")
-        lx = ix * geom.cell_size
-        ly = iy * geom.cell_size
-        dev_x = np.clip((positions[:, 0] // lx).astype(np.int64), 0, mx - 1)
-        dev_y = np.clip((positions[:, 1] // ly).astype(np.int64), 0, my - 1)
+                f"positions have shape {positions.shape}; a {nd}-D domain "
+                f"needs (N, {nd})")
+        gsz = geom.domain_size
+        if (positions < 0).any() or any(
+                (positions[:, a] >= gsz[a]).any() for a in range(nd)):
+            raise ValueError(
+                f"initial positions outside the domain "
+                f"{'x'.join(f'[0,{g})' for g in gsz)} — out-of-domain "
+                "agents would land in the halo ring and be destroyed by "
+                "the first aura rebuild")
+        lens = [i * geom.cell_size for i in geom.interior]
+        dev = [np.clip((positions[:, a] // lens[a]).astype(np.int64),
+                       0, mesh[a] - 1) for a in range(nd)]
 
         bin_fn = partial(bin_agents_jit, geom)
 
@@ -147,11 +170,11 @@ class Engine:
                 "gid_counters floors require carried gid_rank/gid_count "
                 "columns in attrs — fresh ids would start at 0 and collide "
                 "with the historical ids the floors protect")
-        counters_next = np.zeros((mx * my,), dtype=np.int64)
+        counters_next = np.zeros((n_ranks,), dtype=np.int64)
         if carried_gids:
             g_rank = np.asarray(attrs[GID_RANK], np.int64)
             g_count = np.asarray(attrs[GID_COUNT], np.int64)
-            in_range = (g_rank >= 0) & (g_rank < mx * my)
+            in_range = (g_rank >= 0) & (g_rank < n_ranks)
             np.maximum.at(counters_next, g_rank[in_range],
                           g_count[in_range] + 1)
         if gid_counters is not None:
@@ -165,57 +188,59 @@ class Engine:
                 # before a later re-expansion.
                 counters_next = np.maximum(counters_next, floors.max())
 
-        blocks = []
-        counters = np.zeros((mx, my), dtype=np.int32)
-        for cx in range(mx):
-            row = []
-            for cy in range(my):
-                sel = np.flatnonzero((dev_x == cx) & (dev_y == cy))
-                n = sel.size
-                flat: Dict[str, jax.Array] = {}
-                for name, (shape, dtype) in schema.all_specs().items():
-                    if name == POS:
-                        a = positions[sel].astype(np.float32)
-                    elif name == GID_RANK and not carried_gids:
-                        a = np.full((n,), cx * my + cy, dtype=np.int32)
-                    elif name == GID_COUNT and not carried_gids:
-                        a = np.arange(n, dtype=np.int32)
-                    else:
-                        a = np.asarray(attrs[name][sel], dtype=dtype)
-                    flat[name] = jnp.asarray(a)
-                valid = jnp.ones((n,), jnp.bool_)
-                origin = jnp.asarray(
-                    [cx * lx, cy * ly], dtype=jnp.float32
+        blocks: Dict[Tuple[int, ...], AgentSoA] = {}
+        counters = np.zeros(mesh, dtype=np.int32)
+        for coords in np.ndindex(*mesh):
+            sel = np.ones(positions.shape[0], dtype=bool)
+            for a in range(nd):
+                sel &= dev[a] == coords[a]
+            sel = np.flatnonzero(sel)
+            n = sel.size
+            lin = int(np.ravel_multi_index(coords, mesh))
+            flat: Dict[str, jax.Array] = {}
+            for name, (shape, dtype) in schema.all_specs(nd).items():
+                if name == POS:
+                    a = positions[sel].astype(np.float32)
+                elif name == GID_RANK and not carried_gids:
+                    a = np.full((n,), lin, dtype=np.int32)
+                elif name == GID_COUNT and not carried_gids:
+                    a = np.arange(n, dtype=np.int32)
+                else:
+                    a = np.asarray(attrs[name][sel], dtype=dtype)
+                flat[name] = jnp.asarray(a)
+            valid = jnp.ones((n,), jnp.bool_)
+            origin = jnp.asarray(
+                [coords[a] * lens[a] for a in range(nd)], dtype=jnp.float32)
+            soa, dropped = bin_fn(flat, valid, origin)
+            if int(dropped) != 0:
+                raise ValueError(
+                    f"cell capacity overflow at init on device {coords}: "
+                    f"{int(dropped)} agents dropped; raise geom.cap"
                 )
-                soa, dropped = bin_fn(flat, valid, origin)
-                if int(dropped) != 0:
-                    raise ValueError(
-                        f"cell capacity overflow at init on device ({cx},{cy}): "
-                        f"{int(dropped)} agents dropped; raise geom.cap"
-                    )
-                counters[cx, cy] = max(
-                    counters_next[cx * my + cy],
-                    0 if carried_gids else n)
-                row.append(soa)
-            blocks.append(row)
+            counters[coords] = max(
+                counters_next[lin], 0 if carried_gids else n)
+            blocks[coords] = soa
 
         def blockcat(getter):
-            return jnp.concatenate(
-                [jnp.concatenate([getter(b) for b in row], axis=1)
-                 for row in blocks],
-                axis=0,
-            )
+            def rec(prefix: Tuple[int, ...]):
+                axis = len(prefix)
+                if axis == nd:
+                    return getter(blocks[prefix])
+                return jnp.concatenate(
+                    [rec(prefix + (i,)) for i in range(mesh[axis])],
+                    axis=axis)
+            return rec(())
 
+        first = blocks[(0,) * nd]
         attrs_g = {
             name: blockcat(lambda b, n=name: b.attrs[n])
-            for name in blocks[0][0].attrs
+            for name in first.attrs
         }
         soa_g = AgentSoA(attrs=attrs_g, valid=blockcat(lambda b: b.valid))
 
-        refs0 = init_refs(geom, blocks[0][0])
+        refs0 = init_refs(geom, first)
         refs_g = {
-            d: {f: jnp.broadcast_to(v[None, None], (mx, my) + v.shape)
-                for f, v in slab.items()}
+            d: {f: _bcast(v, mesh) for f, v in slab.items()}
             for d, slab in refs0.items()
         }
 
@@ -224,17 +249,17 @@ class Engine:
                 jnp.asarray(base_key, jnp.uint32), it0)
         else:
             root = jax.random.PRNGKey(seed)
-        keys = jax.random.split(root, mx * my)
-        keys = keys.reshape(mx, my, -1)
+        keys = jax.random.split(root, n_ranks)
+        keys = keys.reshape(mesh + (-1,))
 
         return SimState(
             soa=soa_g,
             refs=refs_g,
-            it=jnp.full((mx, my), it0, jnp.int32),
+            it=jnp.full(mesh, it0, jnp.int32),
             key=keys,
             gid_counter=jnp.asarray(counters),
-            dropped=jnp.zeros((mx, my), jnp.int32),
-            halo_bytes=jnp.zeros((mx, my), jnp.int32),
+            dropped=jnp.zeros(mesh, jnp.int32),
+            halo_bytes=jnp.zeros(mesh, jnp.int32),
         )
 
     # ------------------------------------------------------------------
@@ -244,22 +269,23 @@ class Engine:
                    ) -> SimState:
         geom = self.geom
         beh = self.behavior
-        hx, hy = geom.local_shape
-        ix, iy = geom.interior
+        nd = geom.ndim
+        shape = geom.local_shape
         k = geom.cap
-        toroidal = geom.boundary == "toroidal"
+        tor = geom.toroidal
 
-        cx, cy = comm.coords()
-        origin = geom.device_origin((cx, cy))
+        coords = comm.coords()
+        origin = geom.device_origin(coords)
         lrank = comm.linear_rank()
 
+        idx0 = (0,) * nd
         soa = state.soa
-        refs = {d: {f: v[0, 0] for f, v in slab.items()}
+        refs = {d: {f: v[idx0] for f, v in slab.items()}
                 for d, slab in state.refs.items()}
-        it = state.it[0, 0]
-        key = state.key[0, 0]
-        gidc = state.gid_counter[0, 0]
-        dropped = state.dropped[0, 0]
+        it = state.it[idx0]
+        key = state.key[idx0]
+        gidc = state.gid_counter[idx0]
+        dropped = state.dropped[idx0]
 
         # 1. Aura update (rebuilt from scratch each iteration, §2.2.1).
         soa = clear_ring(soa)
@@ -274,30 +300,37 @@ class Engine:
         )
 
         # 3. Pointwise update on interior agents.
-        int_attrs = {n: a[1:hx - 1, 1:hy - 1] for n, a in soa.attrs.items()}
-        int_valid = soa.valid[1:hx - 1, 1:hy - 1]
+        isl = tuple(slice(1, h - 1) for h in shape)
+        int_attrs = {n: a[isl] for n, a in soa.attrs.items()}
+        int_valid = soa.valid[isl]
         step_key = jax.random.fold_in(jax.random.fold_in(key, it), lrank)
         new_attrs, alive, spawn, child_attrs = beh.update_fn(
             int_attrs, int_valid, acc, step_key, beh.params, self.dt
         )
         new_valid = int_valid & alive
 
-        # Boundary condition on positions.
-        lxy = jnp.asarray(geom.domain_size, jnp.float32)
-        if geom.boundary == "closed":
-            eps = jnp.float32(1e-4) * geom.cell_size
-            new_attrs[POS] = jnp.clip(new_attrs[POS], eps, lxy - eps)
+        # Per-axis boundary condition on positions: closed axes clamp
+        # (toroidal axes wrap inside the migration exchange).
+        lsz = jnp.asarray(geom.domain_size, jnp.float32)
+        if not all(tor):
+            eps = 1e-4 * geom.cell_size
+            lo = np.asarray([-np.inf if t else eps for t in tor],
+                            np.float32)
+            hi = np.asarray(
+                [np.inf if t else L - eps
+                 for t, L in zip(tor, geom.domain_size)], np.float32)
+            new_attrs[POS] = jnp.clip(new_attrs[POS], lo, hi)
 
         # 4. Flatten interior (+children) for re-binning.
-        n_int = ix * iy * k
-        flat = {n: a.reshape((n_int,) + a.shape[3:])
+        n_int = math.prod(geom.interior) * k
+        flat = {n: a.reshape((n_int,) + a.shape[nd + 1:])
                 for n, a in new_attrs.items()}
         fvalid = new_valid.reshape((n_int,))
 
         if beh.can_spawn:
             sflat = spawn.reshape((n_int,)) & fvalid
             n_spawn = jnp.sum(sflat.astype(jnp.int32))
-            child = {n: a.reshape((n_int,) + a.shape[3:])
+            child = {n: a.reshape((n_int,) + a.shape[nd + 1:])
                      for n, a in child_attrs.items()}
             order = jnp.cumsum(sflat.astype(jnp.int32)) - 1
             child[GID_RANK] = jnp.full((n_int,), lrank, jnp.int32)
@@ -309,102 +342,123 @@ class Engine:
         soa2, d1 = bin_agents(geom, flat, fvalid, origin)
         dropped = dropped + d1
 
-        # 5. Agent migration: dimension-ordered ring exchange (x then y).
-        soa3, d2 = self._migrate(soa2, comm, origin, toroidal, lxy)
+        # 5. Agent migration: dimension-ordered ring exchange over all axes.
+        soa3, d2 = self._migrate(soa2, comm, origin, lsz)
         dropped = dropped + d2
 
         # 6. Repack per-device state.
-        mxmy = state.it.shape
+        mesh = tuple(state.it.shape)
         new_refs = {
-            d: {f: jnp.broadcast_to(v[None, None], mxmy + v.shape)
-                for f, v in slab.items()}
+            d: {f: _bcast(v, mesh) for f, v in slab.items()}
             for d, slab in refs.items()
         }
         return SimState(
             soa=soa3,
             refs=new_refs,
-            it=jnp.broadcast_to((it + 1)[None, None], mxmy),
+            it=_bcast(it + 1, mesh),
             key=state.key,
-            gid_counter=jnp.broadcast_to(gidc[None, None], mxmy),
-            dropped=jnp.broadcast_to(dropped[None, None], mxmy),
-            halo_bytes=jnp.broadcast_to(hbytes[None, None], mxmy),
+            gid_counter=_bcast(gidc, mesh),
+            dropped=_bcast(dropped, mesh),
+            halo_bytes=_bcast(hbytes, mesh),
         )
 
     def _migrate(self, soa: AgentSoA, comm: Comm, origin: Array,
-                 toroidal: bool, lxy: Array) -> Tuple[AgentSoA, Array]:
+                 lsz: Array) -> Tuple[AgentSoA, Array]:
         """Dimension-ordered emigrant routing with one-pass re-binning.
 
-        x faces (rows 0 / hx-1, incl. corner cells) are exchanged first.
-        Diagonal migrants arrive in the *y-ring cells* of the received x
-        slabs (their y-binning used the sender's — identical — y origin),
-        so instead of re-binning to rediscover them, the y payload widens
-        by 2K slots carrying those corners forward directly: extra slot
-        block rows 1 / hx-2 hold the agents that entered at x-cells 1 /
-        hx-2.  Everything — the face-cleared grid, both x receives (corners
-        invalidated) and both widened y receives — then re-bins in a single
-        argsort pass, cutting the sort-based binning passes per step from
-        3 (step re-bin + one per axis) to 2 (step re-bin + this one).
+        Axis-0 faces (incl. corner cells) are exchanged first.  Diagonal
+        migrants arrive in the *later-axis ring cells* of the received
+        slabs (their binning along every unshifted axis used the sender's
+        — identical — origin), so instead of re-binning to rediscover
+        them, each later axis's payload widens with the ring cells of
+        every previously received slab, carrying corners forward directly:
+        a received slab sits at a known coordinate (1 or h-2) along the
+        axis it arrived on, and its forwarded cells are embedded at that
+        coordinate in extra slot blocks of the next payload.  Everything —
+        the face-cleared grid and all ``2 * ndim`` receives (forwarded
+        rings invalidated) — then re-bins in a single argsort pass,
+        cutting the sort-based binning passes per step from ``1 + ndim``
+        (step re-bin + one per axis) to 2 (step re-bin + this one), in
+        any dimensionality.
         """
         geom = self.geom
-        hx, hy = geom.local_shape
-        k = geom.cap
+        nd = geom.ndim
+        shape = geom.local_shape
+        tor = geom.toroidal
 
         def wrap_pos(slab: Slab) -> Slab:
-            if not toroidal:
+            if not any(tor):
                 return slab
             out = dict(slab)
-            out[POS] = jnp.mod(slab[POS], lxy)
+            p = slab[POS]
+            wrapped = jnp.mod(p, lsz)
+            out[POS] = wrapped if all(tor) else jnp.where(
+                jnp.asarray(tor), wrapped, p)
             return out
 
         def fl(slab: Slab):
             slab = dict(slab)
             v = slab.pop("valid")
-            return ({n: a.reshape((-1,) + a.shape[2:])
+            return ({n: a.reshape((-1,) + a.shape[v.ndim:])
                      for n, a in slab.items()},
                     v.reshape((-1,)))
 
-        # x phase: emigrant rows, corner cells included.
-        out_m = wrap_pos(take_slab(soa, 0, 0))
-        out_p = wrap_pos(take_slab(soa, 0, hx - 1))
-        recv_p = comm.shift(out_p, 0, +1)  # from -x neighbor -> my x-cell 1
-        recv_m = comm.shift(out_m, 0, -1)  # from +x neighbor -> x-cell hx-2
-        v = soa.valid.at[0].set(False).at[hx - 1].set(False)
-        soa = soa.replace(valid=v)
+        # Received slabs still carrying cells that need later-axis hops:
+        # (slab, axis it arrived along, its fixed cell index on that axis).
+        pending = []
+        for a in range(nd):
+            h = shape[a]
+            grid_axes = [c for c in range(nd) if c != a]
+            face_grid = tuple(shape[c] for c in grid_axes)
 
-        # y phase: own y-face columns + forwarded corners from the x
-        # receives.  recv slab cell j sits at my y-cell j, so cells 0 and
-        # hy-1 are exactly the diagonal migrants still needing a y hop.
-        def widen(col: Slab, fwd_p: Slab, fwd_m: Slab) -> Slab:
-            out = {}
-            for n, a in col.items():
-                extra = jnp.zeros((hx, 2 * k) + a.shape[2:], a.dtype)
-                extra = extra.at[1, :k].set(fwd_p[n])
-                extra = extra.at[hx - 2, k:].set(fwd_m[n])
-                out[n] = jnp.concatenate([a, extra], axis=1)
-            return out
+            out_m = take_slab(soa, a, 0)
+            out_p = take_slab(soa, a, h - 1)
 
-        def at_cell(slab: Slab, j: int) -> Slab:
-            return {n: a[j] for n, a in slab.items()}
+            # Forward the axis-a ring cells of every pending slab inside
+            # widened payloads, and invalidate them at their source.
+            blocks_m, blocks_p, fwd = [], [], []
+            for slab, b, fb in pending:
+                p_axes = [c for c in range(nd) if c != b]
+                ap = p_axes.index(a)
+                lo = {n: v[ring_index(ap, 0)] for n, v in slab.items()}
+                hi = {n: v[ring_index(ap, h - 1)] for n, v in slab.items()}
+                nv = slab["valid"].at[ring_index(ap, 0)].set(False) \
+                                  .at[ring_index(ap, h - 1)].set(False)
+                fwd.append(({**slab, "valid": nv}, b, fb))
+                bpos = grid_axes.index(b)
+                blocks_m.append((lo, bpos, fb))
+                blocks_p.append((hi, bpos, fb))
+            pending = fwd
 
-        yout_m = wrap_pos(widen(take_slab(soa, 1, 0),
-                                at_cell(recv_p, 0), at_cell(recv_m, 0)))
-        yout_p = wrap_pos(widen(take_slab(soa, 1, hy - 1),
-                                at_cell(recv_p, hy - 1),
-                                at_cell(recv_m, hy - 1)))
-        yrecv_p = comm.shift(yout_p, 1, +1)
-        yrecv_m = comm.shift(yout_m, 1, -1)
+            def widen(face: Slab, blocks) -> Slab:
+                if not blocks:
+                    return face
+                g = len(face_grid)
+                out = {}
+                for n, base in face.items():
+                    trailing = base.shape[g + 1:]
+                    parts = [base]
+                    for blk, bpos, fb in blocks:
+                        v = blk[n]
+                        z = jnp.zeros(
+                            face_grid + (v.shape[g - 1],) + trailing,
+                            base.dtype)
+                        parts.append(z.at[ring_index(bpos, fb)].set(v))
+                    out[n] = jnp.concatenate(parts, axis=g)
+                return out
 
-        # The y faces were sent; the x-receive corners were forwarded.
-        v = soa.valid.at[:, 0].set(False).at[:, hy - 1].set(False)
-        soa = soa.replace(valid=v)
-        recv_p = dict(recv_p)
-        recv_m = dict(recv_m)
-        for slab in (recv_p, recv_m):
-            slab["valid"] = slab["valid"].at[0].set(False) \
-                                         .at[hy - 1].set(False)
+            recv_p = comm.shift(wrap_pos(widen(out_p, blocks_p)), a, +1)
+            recv_m = comm.shift(wrap_pos(widen(out_m, blocks_m)), a, -1)
+
+            v = soa.valid.at[ring_index(a, 0)].set(False) \
+                         .at[ring_index(a, h - 1)].set(False)
+            soa = soa.replace(valid=v)
+            # recv_p came from the -a neighbor -> sits at my a-cell 1;
+            # recv_m from the +a neighbor -> my a-cell h-2.
+            pending = pending + [(recv_p, a, 1), (recv_m, a, h - 2)]
 
         base_attrs, base_valid = flat_view(soa)
-        parts = [fl(recv_p), fl(recv_m), fl(yrecv_p), fl(yrecv_m)]
+        parts = [fl(slab) for slab, _, _ in pending]
         cat = {n: jnp.concatenate([base_attrs[n]] + [p[0][n] for p in parts])
                for n in base_attrs}
         catv = jnp.concatenate([base_valid] + [p[1] for p in parts])
@@ -422,11 +476,14 @@ class Engine:
     def make_local_step(self):
         return _cached_local_step(self)
 
-    def make_sharded_step(self, mesh, axis_names: Tuple[str, str] = ("sx", "sy")):
-        return _cached_sharded_step(self, mesh, axis_names)
+    def make_sharded_step(self, mesh,
+                          axis_names: Optional[Tuple[str, ...]] = None):
+        if axis_names is None:
+            axis_names = spatial_axis_names(self.geom.ndim)
+        return _cached_sharded_step(self, mesh, tuple(axis_names))
 
     def make_segment_runner(self, mesh=None,
-                            axis_names: Tuple[str, str] = ("sx", "sy")):
+                            axis_names: Optional[Tuple[str, ...]] = None):
         """Scan-fused driver: ``seg(state, n_steps, full_first=True)`` runs
         ``n_steps`` iterations in ONE compiled dispatch (a ``fori_loop``
         over the step body), eliminating the per-step Python/dispatch floor.
@@ -438,7 +495,9 @@ class Engine:
         and ``full_first`` is ignored.  ``n_steps`` is a *dynamic* loop
         bound — one executable covers every segment length.
         """
-        return _cached_segment_runner(self, mesh, axis_names)
+        if axis_names is None:
+            axis_names = spatial_axis_names(self.geom.ndim)
+        return _cached_segment_runner(self, mesh, tuple(axis_names))
 
     def _segment_body(self, comm, full_first: bool):
         """Per-device segment: first step optionally full, rest delta."""
@@ -558,8 +617,8 @@ class Engine:
 # ---------------------------------------------------------------------------
 
 def _mesh_for(engine: "Engine"):
-    """Spatial mesh for an engine's geometry (None on 1x1)."""
-    if engine.geom.mesh_shape == (1, 1):
+    """Spatial mesh for an engine's geometry (None on a single device)."""
+    if engine.geom.n_devices == 1:
         return None
     from repro.launch.mesh import make_abm_mesh  # deferred: device state
     return make_abm_mesh(engine.geom.mesh_shape)
@@ -567,7 +626,7 @@ def _mesh_for(engine: "Engine"):
 
 @functools.lru_cache(maxsize=64)
 def _cached_local_step(engine: "Engine"):
-    comm = LocalComm(toroidal=engine.geom.boundary == "toroidal")
+    comm = LocalComm(toroidal=engine.geom.toroidal)
 
     @partial(jax.jit, static_argnames=("full_halo",))
     def step(state: SimState, full_halo: bool = True) -> SimState:
@@ -576,7 +635,7 @@ def _cached_local_step(engine: "Engine"):
     return step
 
 
-def _shard_comm(engine: "Engine", axis_names: Tuple[str, str]):
+def _shard_comm(engine: "Engine", axis_names: Tuple[str, ...]):
     """(ShardComm, PartitionSpec) pair shared by every sharded factory, so
     the per-step and fused paths cannot diverge in their sharding setup."""
     from jax.sharding import PartitionSpec as P
@@ -584,14 +643,14 @@ def _shard_comm(engine: "Engine", axis_names: Tuple[str, str]):
     comm = ShardComm(
         axis_names=axis_names,
         mesh_shape=engine.geom.mesh_shape,
-        toroidal=engine.geom.boundary == "toroidal",
+        toroidal=engine.geom.toroidal,
     )
     return comm, P(*axis_names)
 
 
 @functools.lru_cache(maxsize=64)
 def _cached_sharded_step(engine: "Engine", mesh,
-                         axis_names: Tuple[str, str]):
+                         axis_names: Tuple[str, ...]):
     comm, spec = _shard_comm(engine, axis_names)
 
     def body(state: SimState, full_halo: bool) -> SimState:
@@ -614,9 +673,9 @@ def _cached_sharded_step(engine: "Engine", mesh,
 
 @functools.lru_cache(maxsize=64)
 def _cached_segment_runner(engine: "Engine", mesh,
-                           axis_names: Tuple[str, str]):
+                           axis_names: Tuple[str, ...]):
     if mesh is None:
-        comm = LocalComm(toroidal=engine.geom.boundary == "toroidal")
+        comm = LocalComm(toroidal=engine.geom.toroidal)
         seg_t = jax.jit(engine._segment_body(comm, True))
         seg_f = jax.jit(engine._segment_body(comm, False))
     else:

@@ -7,8 +7,13 @@ Mirrors the paper's two-level decomposition (§2.1, §2.4.1):
   partitioning-box length is a configurable multiple of the NSG cell length
   (the paper's memory/granularity trade-off parameter).
 * The **NSG** is a uniform grid whose cell edge is >= the maximum interaction
-  radius, so neighbor search visits only the 3x3 cell neighborhood.  BioDynaMo
+  radius, so neighbor search visits only the 3^D cell neighborhood.  BioDynaMo
   found a uniform grid beats trees for these workloads; we keep that choice.
+
+All of this is expressed over an N-dimensional :class:`repro.core.domain.Domain`
+(2-D sheets and 3-D tissues run through the same code paths): cell ids are
+``ravel_multi_index``-style mixed-radix folds over the per-axis coordinates,
+and ring handling loops over axes instead of naming them.
 
 The binning pass replaces the paper's incremental NSG update: instead of
 pointer-chasing updates we re-scatter agents into their (possibly new) cells
@@ -18,121 +23,86 @@ shapes, the XLA-friendly formulation of "incremental add/remove/move".
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Dict, Tuple
+import math
+import warnings
+from typing import Dict, Tuple, Union
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.agent_soa import AgentSoA, POS, flat_view, from_flat
+from repro.core.agent_soa import AgentSoA, POS, flat_view
+from repro.core.domain import Domain
 
 Array = jax.Array
 
 
-@dataclasses.dataclass(frozen=True)
-class GridGeom:
-    """Static geometry of one device's local grid.
-
-    Attributes:
-      cell_size: NSG cell edge length (>= max interaction radius).
-      interior: (ix, iy) interior cell counts per device.
-      mesh_shape: (mx, my) spatial device mesh.
-      cap: per-cell slot capacity K.
-      boundary: "closed" | "toroidal" — SpaceBoundaryCondition analogue.
-      box_factor: partitioning-box length as a multiple of the NSG cell
-        (paper §2.4.1); load-balancing granularity only.
-    """
-
-    cell_size: float
-    interior: Tuple[int, int]
-    mesh_shape: Tuple[int, int]
-    cap: int
-    boundary: str = "closed"
-    box_factor: int = 1
-
-    @property
-    def local_shape(self) -> Tuple[int, int]:
-        return self.interior[0] + 2, self.interior[1] + 2  # + halo ring
-
-    @property
-    def global_cells(self) -> Tuple[int, int]:
-        return (
-            self.interior[0] * self.mesh_shape[0],
-            self.interior[1] * self.mesh_shape[1],
-        )
-
-    @property
-    def domain_size(self) -> Tuple[float, float]:
-        gx, gy = self.global_cells
-        return gx * self.cell_size, gy * self.cell_size
-
-    @property
-    def box_grid(self) -> Tuple[int, int]:
-        """Global partitioning-box grid (paper §2.4.1): the granularity at
-        which the load-balance planners reason, ``box_factor`` NSG cells per
-        box edge."""
-        gx, gy = self.global_cells
-        if gx % self.box_factor or gy % self.box_factor:
-            raise ValueError(
-                f"box_factor {self.box_factor} must divide the global cell "
-                f"grid {(gx, gy)}")
-        return gx // self.box_factor, gy // self.box_factor
-
-    def with_mesh_shape(self, mesh_shape: Tuple[int, int]) -> "GridGeom":
-        """Same global domain re-partitioned over a different device mesh —
-        the geometry half of a re-shard (core.reshard).  The global cell grid
-        is invariant; only the per-device interior block changes."""
-        gx, gy = self.global_cells
-        mx, my = mesh_shape
-        if gx % mx or gy % my:
-            raise ValueError(
-                f"mesh {mesh_shape} does not divide the global cell grid "
-                f"{(gx, gy)}")
-        return dataclasses.replace(
-            self, mesh_shape=(mx, my), interior=(gx // mx, gy // my))
-
-    def device_origin(self, coords: Tuple[Array, Array]) -> Array:
-        """World-space origin of the device's interior region."""
-        ox = coords[0] * self.interior[0] * self.cell_size
-        oy = coords[1] * self.interior[1] * self.cell_size
-        return jnp.stack([ox, oy]).astype(jnp.float32)
+def GridGeom(
+    cell_size: float,
+    interior: Tuple[int, int],
+    mesh_shape: Tuple[int, int] = (1, 1),
+    cap: int = 24,
+    boundary: Union[str, Tuple[str, ...]] = "closed",
+    box_factor: int = 1,
+) -> Domain:
+    """DEPRECATED 2-D constructor shim: build a :class:`Domain` from the
+    historical ``GridGeom`` signature.  Use ``Domain`` directly — it takes
+    the same keywords plus per-axis boundaries and 3-D interiors."""
+    warnings.warn(
+        "GridGeom is deprecated — use repro.core.Domain(cell_size=..., "
+        "interior=..., mesh_shape=..., cap=..., boundary=...) which also "
+        "supports 3-D interiors and per-axis boundary conditions",
+        DeprecationWarning, stacklevel=2)
+    return Domain(cell_size=cell_size, interior=interior,
+                  mesh_shape=mesh_shape, cap=cap, boundary=boundary,
+                  box_factor=box_factor)
 
 
-def cell_of(geom: GridGeom, pos: Array, origin: Array) -> Tuple[Array, Array]:
-    """Map world positions (N, 2) to local cell coordinates incl. halo offset.
+def cell_of(geom: Domain, pos: Array, origin: Array) -> Array:
+    """Map world positions (N, ndim) to local cell coordinates (N, ndim)
+    including the halo offset.
 
-    Interior cells are [1, ix] x [1, iy]; ring cells (0 or ix+1 / iy+1) hold
+    Interior cells are [1, i_a] per axis; ring cells (0 or i_a + 1) hold
     agents that have left the device's region and must migrate.
     """
     rel = (pos - origin[None, :]) / jnp.float32(geom.cell_size)
     c = jnp.floor(rel).astype(jnp.int32) + 1
-    hx, hy = geom.local_shape
-    cx = jnp.clip(c[:, 0], 0, hx - 1)
-    cy = jnp.clip(c[:, 1], 0, hy - 1)
-    return cx, cy
+    shape = geom.local_shape
+    return jnp.stack(
+        [jnp.clip(c[:, a], 0, shape[a] - 1) for a in range(geom.ndim)],
+        axis=1)
+
+
+def ravel_cells(geom: Domain, cells: Array) -> Array:
+    """Mixed-radix fold of per-axis cell coordinates (N, ndim) into flat
+    row-major cell ids (N,) — ``ravel_multi_index`` over the local grid."""
+    shape = geom.local_shape
+    cid = cells[:, 0]
+    for a in range(1, geom.ndim):
+        cid = cid * shape[a] + cells[:, a]
+    return cid
 
 
 def bin_agents(
-    geom: GridGeom,
+    geom: Domain,
     attrs: Dict[str, Array],
     valid: Array,
     origin: Array,
 ) -> Tuple[AgentSoA, Array]:
-    """Capacity-bounded scatter of flat agents (N, ...) into (hx, hy, K, ...).
+    """Capacity-bounded scatter of flat agents (N, ...) into the local
+    cell-slot grid ``local_shape + (K, ...)``.
 
     Returns the binned SoA and the number of agents dropped due to cell
     overflow (must be asserted == 0 by callers at configuration time; tests
     enforce this — it is the analogue of the paper's fixed transmission
     buffers being sized correctly).
     """
-    hx, hy = geom.local_shape
+    shape = geom.local_shape
     cap = geom.cap
     n = valid.shape[0]
 
-    cx, cy = cell_of(geom, attrs[POS], origin)
-    cell_id = cx * hy + cy
-    n_cells = hx * hy
+    cell_id = ravel_cells(geom, cell_of(geom, attrs[POS], origin))
+    n_cells = math.prod(shape)
     # Invalid agents sort to a sentinel bucket past the last cell.
     key = jnp.where(valid, cell_id, n_cells)
     order = jnp.argsort(key, stable=True)
@@ -158,37 +128,40 @@ def bin_agents(
         src = a[order]
         tgt = jnp.zeros((total + 1,) + a.shape[1:], dtype=a.dtype)
         tgt = tgt.at[slot].set(src)
-        out_attrs[name] = tgt[:total].reshape((hx, hy, cap) + a.shape[1:])
+        out_attrs[name] = tgt[:total].reshape(shape + (cap,) + a.shape[1:])
     v = jnp.zeros((total + 1,), jnp.bool_).at[slot].set(ok)
-    soa = AgentSoA(attrs=out_attrs, valid=v[:total].reshape((hx, hy, cap)))
+    soa = AgentSoA(attrs=out_attrs, valid=v[:total].reshape(shape + (cap,)))
     return soa, dropped
 
 
-# Compiled binning entry point: GridGeom is a hashable frozen dataclass, so
+# Compiled binning entry point: Domain is a hashable frozen dataclass, so
 # jit caches one executable per (geometry, input shapes) across *all*
 # callers — the per-call ``jax.jit(partial(bin_agents, geom))`` idiom this
 # replaces recompiled on every fresh closure.
 bin_agents_jit = jax.jit(bin_agents, static_argnames=("geom",))
 
 
-def rebin(geom: GridGeom, soa: AgentSoA, origin: Array) -> Tuple[AgentSoA, Array]:
+def rebin(geom: Domain, soa: AgentSoA, origin: Array) -> Tuple[AgentSoA, Array]:
     attrs, valid = flat_view(soa)
     return bin_agents(geom, attrs, valid, origin)
 
 
-def interior_mask(geom: GridGeom) -> np.ndarray:
-    hx, hy = geom.local_shape
-    m = np.zeros((hx, hy), dtype=bool)
-    m[1:-1, 1:-1] = True
+def interior_mask(geom: Domain) -> np.ndarray:
+    m = np.zeros(geom.local_shape, dtype=bool)
+    m[(slice(1, -1),) * geom.ndim] = True
     return m
+
+
+def ring_index(axis: int, index) -> Tuple:
+    """Indexing tuple selecting one cell-hyperplane along a grid axis."""
+    return (slice(None),) * axis + (index,)
 
 
 def clear_ring(soa: AgentSoA) -> AgentSoA:
     """Invalidate all halo-ring slots (aura is rebuilt from scratch each
     iteration, exactly as in the paper §2.2.1 'Deallocation')."""
     v = soa.valid
-    v = v.at[0, :, :].set(False)
-    v = v.at[-1, :, :].set(False)
-    v = v.at[:, 0, :].set(False)
-    v = v.at[:, -1, :].set(False)
+    for axis in range(v.ndim - 1):   # every grid axis; last dim is the slot
+        v = v.at[ring_index(axis, 0)].set(False)
+        v = v.at[ring_index(axis, -1)].set(False)
     return soa.replace(valid=v)

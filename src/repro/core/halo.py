@@ -1,4 +1,4 @@
-"""Aura (halo) exchange and spatial communication primitives.
+"""Aura (halo) exchange and spatial communication primitives, N-dimensional.
 
 The paper exchanges boundary-region agents between neighboring MPI ranks every
 iteration with non-blocking point-to-point sends (§2.1, §2.4.3).  The TPU
@@ -7,10 +7,12 @@ neighbor-only collective that XLA schedules asynchronously and overlaps with
 compute (the paper's speculative receives correspond to XLA's async
 collective start/done scheduling).
 
-Exchange is dimension-ordered: x-axis slabs first, then y-axis slabs that
-include the freshly-filled x-ring cells, which propagates corner (diagonal)
-neighbors in two hops — the standard halo trick, and the same reason the
-paper's agent migration needs no diagonal sends.
+Exchange is dimension-ordered over the Domain's ``ndim`` axes (``2 * ndim``
+directed edges): axis-0 slabs first, then axis-1 slabs that include the
+freshly-filled axis-0 ring cells, and so on — which propagates corner
+(diagonal) neighbors across any subset of axes in at most ``ndim`` hops —
+the standard halo trick, and the same reason the paper's agent migration
+needs no diagonal sends.
 
 All slabs are fixed-shape SoA slices (see agent_soa.py): the "serialization"
 of a slab is the identity function.  Optional delta encoding of slabs is
@@ -20,7 +22,7 @@ provided by core.delta and threaded through here.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Dict, Optional, Tuple
+from typing import Dict, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -35,7 +37,8 @@ from repro.core.delta import (
     encode_full,
     payload_bytes,
 )
-from repro.core.grid import GridGeom
+from repro.core.domain import AXIS_CHARS, Domain
+from repro.core.grid import ring_index
 
 Array = jax.Array
 
@@ -45,14 +48,14 @@ from repro.compat import shard_map_compat  # noqa: E402,F401
 
 
 class Comm:
-    """Spatial communication abstraction over a (sx, sy) device mesh."""
+    """Spatial communication abstraction over an N-D device mesh."""
 
     def shift(self, tree, axis: int, direction: int):
         """Move data one step along mesh axis; devices with no source get zeros
         (closed boundary) or wrap (toroidal)."""
         raise NotImplementedError
 
-    def coords(self) -> Tuple[Array, Array]:
+    def coords(self) -> Tuple[Array, ...]:
         raise NotImplementedError
 
     def linear_rank(self) -> Array:
@@ -66,64 +69,64 @@ class Comm:
 @dataclasses.dataclass(frozen=True)
 class ShardComm(Comm):
     """Runs inside shard_map over mesh axes ``axis_names`` of shape
-    ``mesh_shape``."""
+    ``mesh_shape``; ``toroidal`` carries the per-axis boundary flags."""
 
-    axis_names: Tuple[str, str]
-    mesh_shape: Tuple[int, int]
-    toroidal: bool
+    axis_names: Tuple[str, ...]
+    mesh_shape: Tuple[int, ...]
+    toroidal: Tuple[bool, ...]
 
-    def _perm(self, size: int, direction: int):
+    def _perm(self, size: int, direction: int, toroidal: bool):
         if direction == +1:
             perm = [(i, i + 1) for i in range(size - 1)]
-            if self.toroidal:
+            if toroidal:
                 perm.append((size - 1, 0))
         else:
             perm = [(i + 1, i) for i in range(size - 1)]
-            if self.toroidal:
+            if toroidal:
                 perm.append((0, size - 1))
         return perm
 
     def shift(self, tree, axis: int, direction: int):
         size = self.mesh_shape[axis]
         name = self.axis_names[axis]
+        toroidal = self.toroidal[axis]
         if size == 1:
-            if self.toroidal:
+            if toroidal:
                 return tree
             return jax.tree_util.tree_map(jnp.zeros_like, tree)
-        perm = self._perm(size, direction)
+        perm = self._perm(size, direction, toroidal)
         return jax.tree_util.tree_map(
             lambda x: jax.lax.ppermute(x, name, perm), tree
         )
 
-    def coords(self) -> Tuple[Array, Array]:
-        return (
-            jax.lax.axis_index(self.axis_names[0]),
-            jax.lax.axis_index(self.axis_names[1]),
-        )
+    def coords(self) -> Tuple[Array, ...]:
+        return tuple(jax.lax.axis_index(n) for n in self.axis_names)
 
     def linear_rank(self) -> Array:
-        cx, cy = self.coords()
-        return cx * self.mesh_shape[1] + cy
+        r = jnp.int32(0)
+        for c, m in zip(self.coords(), self.mesh_shape):
+            r = r * m + c
+        return r
 
     def sum_over_all_ranks(self, x):
-        return jax.lax.psum(jax.lax.psum(x, self.axis_names[0]),
-                            self.axis_names[1])
+        for name in self.axis_names:
+            x = jax.lax.psum(x, name)
+        return x
 
 
 @dataclasses.dataclass(frozen=True)
 class LocalComm(Comm):
-    """Single-device oracle: 1x1 mesh."""
+    """Single-device oracle: an all-ones mesh."""
 
-    toroidal: bool
+    toroidal: Tuple[bool, ...]
 
     def shift(self, tree, axis: int, direction: int):
-        if self.toroidal:
+        if self.toroidal[axis]:
             return tree
         return jax.tree_util.tree_map(jnp.zeros_like, tree)
 
-    def coords(self) -> Tuple[Array, Array]:
-        z = jnp.int32(0)
-        return z, z
+    def coords(self) -> Tuple[Array, ...]:
+        return tuple(jnp.int32(0) for _ in self.toroidal)
 
     def linear_rank(self) -> Array:
         return jnp.int32(0)
@@ -137,39 +140,40 @@ class LocalComm(Comm):
 # ---------------------------------------------------------------------------
 
 def take_slab(soa: AgentSoA, axis: int, index: int) -> Slab:
-    """Extract one cell-row/column (incl. valid mask) as an exchange slab."""
-    if axis == 0:
-        slab = {name: a[index] for name, a in soa.attrs.items()}
-        slab["valid"] = soa.valid[index]
-    else:
-        slab = {name: a[:, index] for name, a in soa.attrs.items()}
-        slab["valid"] = soa.valid[:, index]
+    """Extract one cell-hyperplane (incl. valid mask) as an exchange slab."""
+    idx = ring_index(axis, index)
+    slab = {name: a[idx] for name, a in soa.attrs.items()}
+    slab["valid"] = soa.valid[idx]
     return slab
 
 
 def put_slab(soa: AgentSoA, axis: int, index: int, slab: Slab) -> AgentSoA:
+    idx = ring_index(axis, index)
     attrs = dict(soa.attrs)
-    if axis == 0:
-        for name in attrs:
-            attrs[name] = attrs[name].at[index].set(slab[name])
-        valid = soa.valid.at[index].set(slab["valid"])
-    else:
-        for name in attrs:
-            attrs[name] = attrs[name].at[:, index].set(slab[name])
-        valid = soa.valid.at[:, index].set(slab["valid"])
+    for name in attrs:
+        attrs[name] = attrs[name].at[idx].set(slab[name])
+    valid = soa.valid.at[idx].set(slab["valid"])
     return AgentSoA(attrs=attrs, valid=valid)
 
 
 def clear_slab_at(soa: AgentSoA, axis: int, index: int) -> AgentSoA:
-    if axis == 0:
-        valid = soa.valid.at[index].set(False)
-    else:
-        valid = soa.valid.at[:, index].set(False)
+    valid = soa.valid.at[ring_index(axis, index)].set(False)
     return soa.replace(valid=valid)
 
 
-# Directed edges for delta references: (axis, direction) keyed by name.
-DIRS = {"xm": (0, -1), "xp": (0, +1), "ym": (1, -1), "yp": (1, +1)}
+def dirs_for(ndim: int) -> Dict[str, Tuple[int, int]]:
+    """Directed edges for delta references: ``2 * ndim`` (axis, direction)
+    pairs keyed ``"xm"/"xp"/"ym"/"yp"[/"zm"/"zp"]``."""
+    out: Dict[str, Tuple[int, int]] = {}
+    for axis in range(ndim):
+        c = AXIS_CHARS[axis]
+        out[c + "m"] = (axis, -1)
+        out[c + "p"] = (axis, +1)
+    return out
+
+
+# Historical 2-D constant (kept for callers that predate N-D domains).
+DIRS = dirs_for(2)
 
 
 def _codec_send(slab, ref, cfg: DeltaConfig, full: bool):
@@ -185,7 +189,7 @@ def _codec_recv(payload, ref, cfg: DeltaConfig, full: bool):
 
 
 def halo_exchange(
-    geom: GridGeom,
+    geom: Domain,
     soa: AgentSoA,
     comm: Comm,
     refs: Dict[str, Slab],
@@ -196,12 +200,12 @@ def halo_exchange(
 
     Returns (soa with ring filled, updated delta references, wire bytes).
 
-    ``refs`` carries, for each directed edge d in DIRS, ``d + "_out"`` (what I
-    last sent that way, receiver-reconstructed) and ``d + "_in"`` (what I last
-    received from that way).  Closed-loop invariant: my ``xp_out`` equals my
-    +x neighbor's ``xm_in``.
+    ``refs`` carries, for each directed edge d in ``dirs_for(ndim)``,
+    ``d + "_out"`` (what I last sent that way, receiver-reconstructed) and
+    ``d + "_in"`` (what I last received from that way).  Closed-loop
+    invariant: my ``xp_out`` equals my +x neighbor's ``xm_in``.
     """
-    hx, hy = geom.local_shape
+    shape = geom.local_shape
     new_refs = dict(refs)
     nbytes = 0
 
@@ -216,25 +220,31 @@ def halo_exchange(
         new_refs[in_key] = ref_in
         return put_slab(soa, axis, dst_index, recon), nbytes_local
 
-    # x axis: my east boundary -> +x neighbor's west ring, and vice versa.
-    soa, b = _exchange(soa, 0, hx - 2, 0, +1, "xp_out", "xm_in")
-    nbytes += b
-    soa, b = _exchange(soa, 0, 1, hx - 1, -1, "xm_out", "xp_in")
-    nbytes += b
-    # y axis, full rows including x-ring cells -> corners propagate.
-    soa, b = _exchange(soa, 1, hy - 2, 0, +1, "yp_out", "ym_in")
-    nbytes += b
-    soa, b = _exchange(soa, 1, 1, hy - 1, -1, "ym_out", "yp_in")
-    nbytes += b
+    # Dimension-ordered: each axis sends full hyperplanes including the
+    # ring cells already filled by earlier axes -> corners propagate.
+    for axis in range(geom.ndim):
+        h = shape[axis]
+        c = AXIS_CHARS[axis]
+        # my high face -> +axis neighbor's low ring, and vice versa
+        soa, b = _exchange(soa, axis, h - 2, 0, +1, c + "p_out", c + "m_in")
+        nbytes += b
+        soa, b = _exchange(soa, axis, 1, h - 1, -1, c + "m_out", c + "p_in")
+        nbytes += b
     return soa, new_refs, jnp.int32(nbytes)
 
 
-def init_refs(geom: GridGeom, soa: AgentSoA) -> Dict[str, Slab]:
-    """Zero-valued reference slabs for all eight directed edges."""
-    hx, hy = geom.local_shape
+def init_refs(geom: Domain, soa: AgentSoA) -> Dict[str, Slab]:
+    """Zero-valued reference slabs for all ``4 * ndim`` directed-edge refs.
+
+    The proto slab for an edge along ``axis`` is that axis's face at index
+    0 — any index would do (every hyperplane along one axis has the same
+    shape); what matters is that the slab is taken along the *edge's own
+    axis*, so refs for different axes get the differently-shaped slabs the
+    exchange will actually send (tests pin these shapes per axis).
+    """
     refs: Dict[str, Slab] = {}
-    for d, (axis, _) in DIRS.items():
-        proto = take_slab(soa, axis, 0 if axis == 0 else 0)
+    for d, (axis, _) in dirs_for(geom.ndim).items():
+        proto = take_slab(soa, axis, 0)
         zeros = {k: jnp.zeros_like(v) for k, v in proto.items()}
         refs[d + "_out"] = dict(zeros)
         refs[d + "_in"] = dict(zeros)

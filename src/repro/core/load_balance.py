@@ -51,45 +51,46 @@ def device_loads(ownership: np.ndarray, weights: np.ndarray,
 # ---------------------------------------------------------------------------
 
 def plan_rcb(weights: np.ndarray, n_devices: int) -> np.ndarray:
-    """Partition a 2D weight histogram into ``n_devices`` contiguous
-    rectangles by recursive coordinate bisection.
+    """Partition an N-D weight histogram into ``n_devices`` contiguous
+    hyper-rectangles by recursive coordinate bisection.
 
     Args:
-      weights: (BX, BY) per-partitioning-box weight (agent count, optionally
-        scaled by last-iteration runtime, as in the paper).
+      weights: per-partitioning-box weight over the Domain's box grid
+        (agent count, optionally scaled by last-iteration runtime, as in
+        the paper) — 2-D or 3-D.
       n_devices: number of devices; must be a power of two.
 
     Returns:
-      ownership: (BX, BY) int32 box -> device map.
+      ownership: int32 box -> device map, same shape as ``weights``.
     """
     if n_devices & (n_devices - 1):
         raise ValueError("RCB requires a power-of-two device count")
-    bx, by = weights.shape
-    ownership = np.zeros((bx, by), dtype=np.int32)
+    nd = weights.ndim
+    ownership = np.zeros(weights.shape, dtype=np.int32)
 
-    def split(x0, x1, y0, y1, dev0, ndev):
+    def split(bounds, dev0, ndev):
+        region = tuple(slice(lo, hi) for lo, hi in bounds)
         if ndev == 1:
-            ownership[x0:x1, y0:y1] = dev0
+            ownership[region] = dev0
             return
-        w = weights[x0:x1, y0:y1]
-        # Bisect the longer axis at the weighted median.
-        if (x1 - x0) >= (y1 - y0):
-            prof = w.sum(axis=1)
-            axis_len = x1 - x0
-        else:
-            prof = w.sum(axis=0)
-            axis_len = y1 - y0
+        lens = [hi - lo for lo, hi in bounds]
+        # Bisect the longest axis (ties -> lowest axis) at the weighted
+        # median.
+        ax = int(np.argmax(lens))
+        w = weights[region]
+        prof = w.sum(axis=tuple(a for a in range(nd) if a != ax))
         half = prof.sum() / 2.0
         cut = int(np.searchsorted(np.cumsum(prof), half)) + 1
-        cut = max(1, min(axis_len - 1, cut))
-        if (x1 - x0) >= (y1 - y0):
-            split(x0, x0 + cut, y0, y1, dev0, ndev // 2)
-            split(x0 + cut, x1, y0, y1, dev0 + ndev // 2, ndev // 2)
-        else:
-            split(x0, x1, y0, y0 + cut, dev0, ndev // 2)
-            split(x0, x1, y0 + cut, y1, dev0 + ndev // 2, ndev // 2)
+        cut = max(1, min(lens[ax] - 1, cut))
+        lo, hi = bounds[ax]
+        b1 = list(bounds)
+        b1[ax] = (lo, lo + cut)
+        b2 = list(bounds)
+        b2[ax] = (lo + cut, hi)
+        split(tuple(b1), dev0, ndev // 2)
+        split(tuple(b2), dev0 + ndev // 2, ndev // 2)
 
-    split(0, bx, 0, by, 0, n_devices)
+    split(tuple((0, s) for s in weights.shape), 0, n_devices)
     return ownership
 
 
@@ -136,33 +137,51 @@ def widths_to_ownership(widths: np.ndarray) -> np.ndarray:
 
 
 def equal_split_loads(weights: np.ndarray,
-                      mesh_shape: Tuple[int, int]) -> np.ndarray:
-    """Per-device loads of the engine's equal-split partition: device (i, j)
-    owns the (BX/mx, BY/my) block of boxes at block-index (i, j)."""
-    bx, by = weights.shape
-    mx, my = mesh_shape
-    if bx % mx or by % my:
+                      mesh_shape: Tuple[int, ...]) -> np.ndarray:
+    """Per-device loads of the engine's equal-split partition: the device at
+    mesh coordinate ``c`` owns the equal block of boxes at block-index
+    ``c`` along every axis."""
+    mesh = tuple(mesh_shape)
+    if weights.ndim != len(mesh):
         raise ValueError(
-            f"mesh {mesh_shape} does not divide the box grid {(bx, by)}")
-    return weights.reshape(mx, bx // mx, my, by // my).sum(axis=(1, 3)).ravel()
+            f"mesh {mesh} has {len(mesh)} axes for a {weights.ndim}-D "
+            "box grid")
+    if any(b % m for b, m in zip(weights.shape, mesh)):
+        raise ValueError(
+            f"mesh {mesh} does not divide the box grid {weights.shape}")
+    shape: Tuple[int, ...] = ()
+    for b, m in zip(weights.shape, mesh):
+        shape += (m, b // m)
+    return weights.reshape(shape).sum(
+        axis=tuple(range(1, 2 * len(mesh), 2))).ravel()
 
 
-def choose_mesh_shape(weights: np.ndarray, n_devices: int) -> Tuple[int, int]:
-    """Pick the (mx, my) factorization of ``n_devices`` minimizing the
-    equal-split imbalance over the density histogram — the realizable half of
-    a re-shard plan (core.reshard) and the elastic path's mesh picker when
-    the device count changes.  All divisor factorizations are scanned (not
-    just powers of two) so degraded counts like 3 or 6 factorize too; ties
-    break toward the smaller mx."""
+def _factorizations(n: int, ndim: int):
+    """All ordered ``ndim``-tuples of positive ints with product ``n``,
+    lexicographically ascending."""
+    if ndim == 1:
+        yield (n,)
+        return
+    for m in range(1, n + 1):
+        if n % m == 0:
+            for rest in _factorizations(n // m, ndim - 1):
+                yield (m,) + rest
+
+
+def choose_mesh_shape(weights: np.ndarray,
+                      n_devices: int) -> Tuple[int, ...]:
+    """Pick the mesh factorization of ``n_devices`` (one factor per box-grid
+    axis) minimizing the equal-split imbalance over the density histogram —
+    the realizable half of a re-shard plan (core.reshard) and the elastic
+    path's mesh picker when the device count changes.  All divisor
+    factorizations are scanned (not just powers of two) so degraded counts
+    like 3 or 6 factorize too; ties break toward smaller earlier axes."""
     best = None
-    for m in range(1, n_devices + 1):
-        if n_devices % m == 0:
-            mx, my = m, n_devices // m
-            bx, by = weights.shape
-            if bx % mx == 0 and by % my == 0:
-                score = imbalance(equal_split_loads(weights, (mx, my)))
-                if best is None or score < best[0]:
-                    best = (score, (mx, my))
+    for mesh in _factorizations(n_devices, weights.ndim):
+        if all(b % m == 0 for b, m in zip(weights.shape, mesh)):
+            score = imbalance(equal_split_loads(weights, mesh))
+            if best is None or score < best[0]:
+                best = (score, mesh)
     if best is None:
         raise ValueError("no valid mesh factorization divides the histogram")
     return best[1]

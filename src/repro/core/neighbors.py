@@ -2,21 +2,25 @@
 
 Three interchangeable backends compute the same per-agent accumulator sums
 (selected per engine via ``Engine.sweep_backend`` / the ``Simulation``
-``sweep_backend`` kwarg, see docs/performance.md):
+``sweep_backend`` kwarg, see docs/performance.md), over 2-D or 3-D domains
+(the cell neighborhood is the ``3**ndim`` offset stencil of the Domain):
 
-* ``"reference"`` — :func:`pair_accumulate`: gathers the 3x3 cell
-  neighborhood of every interior cell into a (9K,) slot axis and applies the
-  pair kernel over the full (K, 9K) pair block.  Simple, obviously correct,
-  and the parity oracle for the other two — but it materializes a 9x copy of
-  every attribute per sweep.
-* ``"tiled"`` — :func:`pair_accumulate_tiled`: loops over the nine cell
-  offsets with (K, K) pair tiles built from plain array *slices*, so no 9x
+* ``"reference"`` — :func:`pair_accumulate`: gathers the 3^D cell
+  neighborhood of every interior cell into a (3^D K,) slot axis and applies
+  the pair kernel over the full (K, 3^D K) pair block.  Simple, obviously
+  correct, and the parity oracle for the other two — but it materializes a
+  3^D-times copy of every attribute per sweep.
+* ``"tiled"`` — :func:`pair_accumulate_tiled`: loops over the 3^D cell
+  offsets with (K, K) pair tiles built from plain array *slices*, so no
   neighborhood gather is ever materialized and XLA fuses each tile's
-  slice->compute->mask chain.  This is the fast path on CPU/GPU backends.
+  slice->compute->mask chain.  This is the fast path on CPU/GPU backends
+  and the only non-reference path for 3-D domains.
 * ``"pallas"`` — the generic Pallas kernel factory in
   :mod:`repro.kernels.neighbor_interaction`: the gather stays in XLA (cheap
   data movement), and one VMEM-resident program per block of cells evaluates
   the full pair block with VPU-vectorized masked arithmetic — the TPU path.
+  The kernel factory is 2-D; ``"auto"`` therefore falls back to ``tiled``
+  whenever ``ndim == 3`` (docs/domains.md, "Pallas fallback rule").
 
 All backends share the masking semantics: invalid slots, self-pairs (by
 global id), and pairs beyond the interaction radius contribute zero.
@@ -24,80 +28,112 @@ global id), and pairs beyond the interaction radius contribute zero.
 differently, so FMA contraction can differ in the last bit); integer-valued
 accumulators (counts) agree exactly.  ``pallas`` agrees within the usual
 kernel tolerance.  tests/test_sweep.py pins all three for every bundled sim
-behavior and for composed stacks.
+behavior and for composed stacks; tests/test_domain.py pins the 3-D parity.
 """
 
 from __future__ import annotations
 
+import itertools
 from typing import Callable, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.agent_soa import AgentSoA, GID_COUNT, GID_RANK, POS
-from repro.core.grid import GridGeom
+from repro.core.domain import Domain
 
 Array = jax.Array
 
-OFFSETS = [(-1, -1), (-1, 0), (-1, 1), (0, -1), (0, 0), (0, 1),
-           (1, -1), (1, 0), (1, 1)]
+
+def offsets_for(ndim: int) -> Tuple[Tuple[int, ...], ...]:
+    """The 3^ndim cell-offset stencil, in row-major (reference) order."""
+    return tuple(itertools.product((-1, 0, 1), repeat=ndim))
+
+
+# Historical 2-D constant (row-major order matches offsets_for(2)).
+OFFSETS = list(offsets_for(2))
 
 SWEEP_BACKENDS = ("reference", "tiled", "pallas")
 
 # pair_fn(attrs_i, attrs_j, disp, dist2, params) -> dict of contributions,
-# each broadcastable over the pair axes (..., K, 9K) with trailing dims.
+# each broadcastable over the pair axes (..., K, 3^D K) with trailing dims.
 PairFn = Callable[[Dict[str, Array], Dict[str, Array], Array, Array, dict],
                   Dict[str, Array]]
 
 
-def resolve_sweep_backend(backend: str = "auto") -> str:
-    """Resolve the ``"auto"`` sweep backend for the current JAX backend:
-    the Pallas kernel on TPU, the tiled XLA sweep everywhere else."""
+def resolve_sweep_backend(backend: str = "auto", ndim: int = 2) -> str:
+    """Resolve the ``"auto"`` sweep backend for the current JAX backend and
+    spatial dimensionality: the Pallas kernel on TPU for 2-D domains, the
+    tiled XLA sweep everywhere else (the Pallas kernel factory is 2-D, so
+    3-D domains fall back to ``tiled`` even on TPU)."""
     if backend in (None, "auto"):
+        if ndim != 2:
+            return "tiled"
         return "pallas" if jax.default_backend() == "tpu" else "tiled"
     if backend not in SWEEP_BACKENDS:
         raise ValueError(
             f"unknown sweep backend {backend!r}; expected 'auto' or one of "
             f"{SWEEP_BACKENDS}")
+    if backend == "pallas" and ndim != 2:
+        raise ValueError(
+            "the Pallas sweep kernel factory is 2-D; use 'tiled' (or "
+            "'auto', which falls back to it) for 3-D domains")
     return backend
 
 
-def gather_neighborhood(geom: GridGeom, soa: AgentSoA, names: Tuple[str, ...]):
-    """Stack the 9-cell neighborhood of every interior cell.
+def _interior(geom: Domain):
+    return tuple(slice(1, h - 1) for h in geom.local_shape)
+
+
+def gather_neighborhood(geom: Domain, soa: AgentSoA, names: Tuple[str, ...]):
+    """Stack the 3^D-cell neighborhood of every interior cell.
 
     Returns (self_attrs, nbr_attrs, self_valid, nbr_valid) where self arrays
-    have shape (ix, iy, K, ...) and nbr arrays (ix, iy, 9K, ...).
+    have shape (*interior, K, ...) and nbr arrays (*interior, 3^D K, ...).
     """
-    hx, hy = geom.local_shape
-    ix, iy = geom.interior
+    shape = geom.local_shape
+    interior = geom.interior
+    nd = geom.ndim
     k = geom.cap
+    offs = offsets_for(nd)
     need = set(names) | {POS, GID_RANK, GID_COUNT}
+    isl = _interior(geom)
 
-    self_attrs = {n: soa.attrs[n][1:hx - 1, 1:hy - 1] for n in need}
-    self_valid = soa.valid[1:hx - 1, 1:hy - 1]
+    def off_slice(off):
+        return tuple(slice(1 + o, h - 1 + o) for o, h in zip(off, shape))
+
+    self_attrs = {n: soa.attrs[n][isl] for n in need}
+    self_valid = soa.valid[isl]
 
     nbr_attrs: Dict[str, Array] = {}
     for n in need:
         a = soa.attrs[n]
-        slabs = [a[1 + dx:hx - 1 + dx, 1 + dy:hy - 1 + dy] for dx, dy in OFFSETS]
-        stacked = jnp.stack(slabs, axis=2)  # (ix, iy, 9, K, ...)
-        nbr_attrs[n] = stacked.reshape((ix, iy, 9 * k) + a.shape[3:])
+        slabs = [a[off_slice(off)] for off in offs]
+        stacked = jnp.stack(slabs, axis=nd)  # (*interior, 3^D, K, ...)
+        nbr_attrs[n] = stacked.reshape(
+            interior + (len(offs) * k,) + a.shape[nd + 1:])
     v = soa.valid
-    slabs = [v[1 + dx:hx - 1 + dx, 1 + dy:hy - 1 + dy] for dx, dy in OFFSETS]
-    nbr_valid = jnp.stack(slabs, axis=2).reshape((ix, iy, 9 * k))
+    slabs = [v[off_slice(off)] for off in offs]
+    nbr_valid = jnp.stack(slabs, axis=nd).reshape(
+        interior + (len(offs) * k,))
     return self_attrs, nbr_attrs, self_valid, nbr_valid
 
 
-def min_image(disp: Array, geom: GridGeom) -> Array:
-    if geom.boundary != "toroidal":
+def min_image(disp: Array, geom: Domain) -> Array:
+    """Per-axis minimum-image convention: wrap displacement components of
+    toroidal axes only."""
+    tor = geom.toroidal
+    if not any(tor):
         return disp
-    lx, ly = geom.domain_size
-    box = jnp.asarray([lx, ly], dtype=disp.dtype)
-    return disp - box * jnp.round(disp / box)
+    box = jnp.asarray(geom.domain_size, dtype=disp.dtype)
+    wrapped = disp - box * jnp.round(disp / box)
+    if all(tor):
+        return wrapped
+    return jnp.where(jnp.asarray(tor), wrapped, disp)
 
 
 def pair_accumulate(
-    geom: GridGeom,
+    geom: Domain,
     soa: AgentSoA,
     pair_fn: PairFn,
     pair_attrs: Tuple[str, ...],
@@ -106,21 +142,22 @@ def pair_accumulate(
 ) -> Dict[str, Array]:
     """Sum pair-kernel contributions over each interior agent's neighbors.
 
-    Returns a dict of accumulators with shape (ix, iy, K, *trailing).
+    Returns a dict of accumulators with shape (*interior, K, *trailing).
     """
+    nd = geom.ndim
     self_a, nbr_a, self_v, nbr_v = gather_neighborhood(geom, soa, pair_attrs)
 
-    # Broadcast views: i -> (..., K, 1, t), j -> (..., 1, 9K, t)
+    # Broadcast views: i -> (..., K, 1, t), j -> (..., 1, 3^D K, t)
     def bi(a):
-        return jnp.expand_dims(a, 3)
+        return jnp.expand_dims(a, nd + 1)
 
     def bj(a):
-        return jnp.expand_dims(a, 2)
+        return jnp.expand_dims(a, nd)
 
     attrs_i = {n: bi(a) for n, a in self_a.items()}
     attrs_j = {n: bj(a) for n, a in nbr_a.items()}
 
-    disp = min_image(attrs_j[POS] - attrs_i[POS], geom)  # (ix,iy,K,9K,2)
+    disp = min_image(attrs_j[POS] - attrs_i[POS], geom)  # (..., K, 3^D K, D)
     dist2 = jnp.sum(disp * disp, axis=-1)
 
     same = (attrs_i[GID_RANK] == attrs_j[GID_RANK]) & (
@@ -140,20 +177,20 @@ def pair_accumulate(
         m = mask
         while m.ndim < c.ndim:
             m = m[..., None]
-        out[name] = jnp.sum(jnp.where(m, c, jnp.zeros_like(c)), axis=3)
+        out[name] = jnp.sum(jnp.where(m, c, jnp.zeros_like(c)), axis=nd + 1)
     return out
 
 
 def pair_accumulate_tiled(
-    geom: GridGeom,
+    geom: Domain,
     soa: AgentSoA,
     pair_fn: PairFn,
     pair_attrs: Tuple[str, ...],
     radius: float,
     params: dict,
 ) -> Dict[str, Array]:
-    """Offset-tiled sweep: nine (ix, iy, K, K) pair tiles instead of one
-    (ix, iy, K, 9K) block over a materialized 9x gather.
+    """Offset-tiled sweep: 3^D (*interior, K, K) pair tiles instead of one
+    (*interior, K, 3^D K) block over a materialized neighborhood gather.
 
     Every neighbor view is a plain slice of the resident SoA, so XLA fuses
     slice -> pair math -> mask per tile with no gather copies; the per-tile
@@ -162,24 +199,23 @@ def pair_accumulate_tiled(
     order matches :func:`pair_accumulate` exactly (agreement is to float
     ulp — fusion differences can flip the last bit of FMA chains).
     """
-    hx, hy = geom.local_shape
+    shape = geom.local_shape
+    nd = geom.ndim
     need = set(pair_attrs) | {POS, GID_RANK, GID_COUNT}
+    isl = _interior(geom)
 
-    # i views: (ix, iy, K, 1, t)
-    attrs_i = {n: jnp.expand_dims(soa.attrs[n][1:hx - 1, 1:hy - 1], 3)
-               for n in need}
-    vi = jnp.expand_dims(soa.valid[1:hx - 1, 1:hy - 1], 3)
+    # i views: (*interior, K, 1, t)
+    attrs_i = {n: jnp.expand_dims(soa.attrs[n][isl], nd + 1) for n in need}
+    vi = jnp.expand_dims(soa.valid[isl], nd + 1)
     r2 = jnp.float32(radius * radius)
 
     tiles: Dict[str, list] = {}
-    for dx, dy in OFFSETS:
-        # j views for this offset: (ix, iy, 1, K, t) slices — no copies
-        nbr = {n: jnp.expand_dims(
-            soa.attrs[n][1 + dx:hx - 1 + dx, 1 + dy:hy - 1 + dy], 2)
-            for n in need}
-        nv = jnp.expand_dims(
-            soa.valid[1 + dx:hx - 1 + dx, 1 + dy:hy - 1 + dy], 2)
-        disp = min_image(nbr[POS] - attrs_i[POS], geom)   # (ix,iy,K,K,2)
+    for off in offsets_for(nd):
+        osl = tuple(slice(1 + o, h - 1 + o) for o, h in zip(off, shape))
+        # j views for this offset: (*interior, 1, K, t) slices — no copies
+        nbr = {n: jnp.expand_dims(soa.attrs[n][osl], nd) for n in need}
+        nv = jnp.expand_dims(soa.valid[osl], nd)
+        disp = min_image(nbr[POS] - attrs_i[POS], geom)  # (..., K, K, D)
         dist2 = jnp.sum(disp * disp, axis=-1)
         same = (attrs_i[GID_RANK] == nbr[GID_RANK]) & (
             attrs_i[GID_COUNT] == nbr[GID_COUNT])
@@ -194,20 +230,21 @@ def pair_accumulate_tiled(
 
     out: Dict[str, Array] = {}
     for name, parts in tiles.items():
-        # (ix,iy,K,K,t) tiles -> (ix,iy,K,9,K,t) -> (ix,iy,K,9K,t): the j
-        # axis ends up in the reference's offset-major order before the
-        # one-shot reduction.
-        shape = jnp.broadcast_shapes(*[p.shape for p in parts])
-        parts = [jnp.broadcast_to(p, shape) for p in parts]
-        stacked = jnp.stack(parts, axis=3)
+        # (*interior,K,K,t) tiles -> (*interior,K,3^D,K,t) ->
+        # (*interior,K,3^D K,t): the j axis ends up in the reference's
+        # offset-major order before the one-shot reduction.
+        shape_b = jnp.broadcast_shapes(*[p.shape for p in parts])
+        parts = [jnp.broadcast_to(p, shape_b) for p in parts]
+        stacked = jnp.stack(parts, axis=nd + 1)
         flat = stacked.reshape(
-            shape[:3] + (len(parts) * shape[3],) + shape[4:])
-        out[name] = jnp.sum(flat, axis=3)
+            shape_b[:nd + 1] + (len(parts) * shape_b[nd + 1],)
+            + shape_b[nd + 2:])
+        out[name] = jnp.sum(flat, axis=nd + 1)
     return out
 
 
 def pair_accumulate_pallas(
-    geom: GridGeom,
+    geom: Domain,
     soa: AgentSoA,
     pair_fn: PairFn,
     pair_attrs: Tuple[str, ...],
@@ -217,9 +254,9 @@ def pair_accumulate_pallas(
     block_cells: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Dict[str, Array]:
-    """Pallas-kernel sweep: XLA builds the neighborhood gather (pure data
-    movement), then one fused kernel program per block of cells evaluates
-    every pair kernel for its (BC, K) x (BC, 9K) slabs in VMEM.
+    """Pallas-kernel sweep (2-D domains): XLA builds the neighborhood gather
+    (pure data movement), then one fused kernel program per block of cells
+    evaluates every pair kernel for its (BC, K) x (BC, 9K) slabs in VMEM.
 
     ``interpret=None`` auto-detects from the JAX backend
     (``kernels.ops.use_interpret``); on TPU the same kernel compiles to
@@ -227,23 +264,31 @@ def pair_accumulate_pallas(
     """
     from repro.kernels import ops as kops
 
+    if geom.ndim != 2:
+        raise ValueError(
+            "pair_accumulate_pallas supports 2-D domains only; use the "
+            "tiled backend for 3-D")
     ix, iy = geom.interior
     k = geom.cap
     c = ix * iy
+    nk = (3 ** geom.ndim) * k
     self_a, nbr_a, self_v, nbr_v = gather_neighborhood(geom, soa, pair_attrs)
     flat_i = {n: a.reshape((c, k) + a.shape[3:]) for n, a in self_a.items()}
-    flat_j = {n: a.reshape((c, 9 * k) + a.shape[3:])
+    flat_j = {n: a.reshape((c, nk) + a.shape[3:])
               for n, a in nbr_a.items()}
-    box = geom.domain_size if geom.boundary == "toroidal" else None
+    tor = geom.toroidal
+    box = (tuple(L if t else None
+                 for L, t in zip(geom.domain_size, tor))
+           if any(tor) else None)
     acc = kops.neighborhood_pair_sweep(
-        flat_i, flat_j, self_v.reshape((c, k)), nbr_v.reshape((c, 9 * k)),
+        flat_i, flat_j, self_v.reshape((c, k)), nbr_v.reshape((c, nk)),
         pair_fn=pair_fn, radius=radius, params=params, box=box,
         block_cells=block_cells, interpret=interpret)
     return {n: a.reshape((ix, iy, k) + a.shape[2:]) for n, a in acc.items()}
 
 
 def sweep_accumulate(
-    geom: GridGeom,
+    geom: Domain,
     soa: AgentSoA,
     pair_fn: PairFn,
     pair_attrs: Tuple[str, ...],
@@ -253,7 +298,7 @@ def sweep_accumulate(
     backend: str = "reference",
 ) -> Dict[str, Array]:
     """Backend-dispatched neighborhood sweep (the engine's entry point)."""
-    backend = resolve_sweep_backend(backend)
+    backend = resolve_sweep_backend(backend, geom.ndim)
     if backend == "reference":
         return pair_accumulate(geom, soa, pair_fn, pair_attrs, radius, params)
     if backend == "tiled":

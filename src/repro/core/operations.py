@@ -124,6 +124,8 @@ def checkpoint_op(ckpt_dir: str, keep: int = 3) -> Callable:
 
 
 def positions_of(state) -> np.ndarray:
-    """Host-side (N, 2) positions of all live agents (diagnostics helper)."""
+    """Host-side (N, ndim) positions of all live agents (diagnostics
+    helper)."""
     v = np.asarray(state.soa.valid).ravel()
-    return np.asarray(state.soa.attrs["pos"]).reshape(-1, 2)[v]
+    pos = np.asarray(state.soa.attrs["pos"])
+    return pos.reshape(-1, pos.shape[-1])[v]

@@ -16,14 +16,14 @@ load balancing at *re-shard boundaries* (DESIGN note in core.load_balance):
    ``plan_diffusive`` as box-granular bounds) and triggers a re-shard.
 3. The mass migration is paid exactly once per re-shard:
    ``flatten_state`` gathers every live agent to host, ``reshard_state``
-   re-derives the :class:`GridGeom` (new mesh shape, new device origins) and
+   re-derives the :class:`Domain` (new mesh shape, new device origins) and
    re-initializes through ``Engine.init_state`` — preserving global agent
    identifiers, the RNG lineage, the iteration counter, and the cumulative
    drop diagnostics.  Delta-encoding references are reset, so the first
    aura exchange after a re-shard must be a full refresh (the drivers force
    ``full_halo=True`` on the next step).
 
-Realizability note: the engine shards one uniform SoA over an (mx, my)
+Realizability note: the engine shards one uniform SoA over an N-D spatial
 device mesh, so the *realizable* plans are the equal-split factorizations
 scanned by ``choose_mesh_shape``; ``plan_rcb``'s box-granular ownership maps
 are reported alongside as the achievable lower bound (closing that gap needs
@@ -36,6 +36,7 @@ from the checkpoint (distributed.elastic.elastic_restore_abm).
 from __future__ import annotations
 
 import dataclasses
+import itertools
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
@@ -43,8 +44,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.agent_soa import GID_COUNT, GID_RANK, POS
+from repro.core.domain import Domain
 from repro.core.engine import Engine, SimState
-from repro.core.grid import GridGeom
 from repro.core.load_balance import (
     choose_mesh_shape,
     device_loads,
@@ -60,57 +61,81 @@ from repro.core.load_balance import (
 # 1. Occupancy histogram extraction
 # ---------------------------------------------------------------------------
 
-def _interior_blocks(geom: GridGeom, arr: np.ndarray) -> np.ndarray:
-    """(mx*hx, my*hy, ...) global array -> (mx, ix, my, iy, ...) interior
-    (ring cells hold aura copies of neighbor agents and must be excluded
-    from any global reduction)."""
-    mx, my = geom.mesh_shape
-    hx, hy = geom.local_shape
+def _interleaved_shape(geom: Domain) -> Tuple[int, ...]:
+    """(m0, i0, m1, i1, ...) device-block/interior interleave."""
+    out: Tuple[int, ...] = ()
+    for m, i in zip(geom.mesh_shape, geom.interior):
+        out += (m, i)
+    return out
+
+
+def _interior_axes(geom: Domain) -> Tuple[int, ...]:
+    """Axes of the interleaved layout holding per-device interior cells."""
+    return tuple(range(1, 2 * geom.ndim, 2))
+
+
+def _interior_blocks(geom: Domain, arr: np.ndarray) -> np.ndarray:
+    """Global ``(m0*h0, m1*h1, ..., ...)`` array -> interleaved
+    ``(m0, i0, m1, i1, ..., ...)`` interior (ring cells hold aura copies of
+    neighbor agents and must be excluded from any global reduction)."""
+    nd = geom.ndim
     a = np.asarray(arr)
-    a = a.reshape((mx, hx, my, hy) + a.shape[2:])
-    return a[:, 1:-1, :, 1:-1]
+    shape: Tuple[int, ...] = ()
+    for m, h in zip(geom.mesh_shape, geom.local_shape):
+        shape += (m, h)
+    a = a.reshape(shape + a.shape[nd:])
+    sl: Tuple = ()
+    for _ in range(nd):
+        sl += (slice(None), slice(1, -1))
+    return a[sl]
 
 
 def occupancy_histogram(
-    geom: GridGeom,
+    geom: Domain,
     state: SimState,
     runtimes: Optional[np.ndarray] = None,
 ) -> np.ndarray:
-    """Per-partitioning-box weight map (BX, BY) for the planners.
+    """Per-partitioning-box weight map (the Domain's ``box_grid`` shape)
+    for the planners.
 
     The base weight is the live-agent count per box.  With ``runtimes``
-    (an (mx, my) array of last-iteration wall-clock per device) each
+    (a ``mesh_shape`` array of last-iteration wall-clock per device) each
     device's boxes are scaled by its measured time per agent, matching the
     paper's runtime-weighted box loads — a box full of expensive agents
     then weighs more than one full of cheap agents.
     """
-    counts = _interior_blocks(geom, state.soa.valid).sum(axis=-1)  # (mx,ix,my,iy)
+    nd = geom.ndim
+    counts = _interior_blocks(geom, state.soa.valid).sum(axis=-1)
     if runtimes is not None:
         rt = np.asarray(runtimes, np.float64).reshape(geom.mesh_shape)
-        dev_counts = counts.sum(axis=(1, 3))
+        dev_counts = counts.sum(axis=_interior_axes(geom))
         total = float(counts.sum())
         per_agent = rt / np.maximum(dev_counts, 1.0)
-        counts = counts * per_agent[:, None, :, None]
+        expand: Tuple[int, ...] = ()
+        for m in geom.mesh_shape:
+            expand += (m, 1)
+        counts = counts * per_agent.reshape(expand)
         # renormalize so the histogram total still reads as an agent count
         # (empty devices contribute nothing, so they cannot skew the scale)
         if counts.sum() > 0:
             counts = counts * (total / counts.sum())
-    mx, my = geom.mesh_shape
-    ix, iy = geom.interior
-    cells = counts.reshape(mx * ix, my * iy)
+    cells = counts.reshape(geom.global_cells)
     bf = geom.box_factor
-    bx, by = geom.box_grid
-    return cells.reshape(bx, bf, by, bf).sum(axis=(1, 3)).astype(np.float64)
+    boxed: Tuple[int, ...] = ()
+    for b in geom.box_grid:
+        boxed += (b, bf)
+    return cells.reshape(boxed).sum(
+        axis=tuple(range(1, 2 * nd, 2))).astype(np.float64)
 
 
-def current_imbalance(geom: GridGeom, state: SimState,
+def current_imbalance(geom: Domain, state: SimState,
                       runtimes: Optional[np.ndarray] = None) -> float:
     """``imbalance()`` of the live equal-split partition."""
     hist = occupancy_histogram(geom, state, runtimes)
     return imbalance(equal_split_loads(hist, geom.mesh_shape))
 
 
-def estimate_device_runtimes(geom: GridGeom, state: SimState,
+def estimate_device_runtimes(geom: Domain, state: SimState,
                              wall_s: float) -> np.ndarray:
     """Split one measured host-side step wall time into per-device runtimes.
 
@@ -119,29 +144,31 @@ def estimate_device_runtimes(geom: GridGeom, state: SimState,
     paper's per-rank iteration timers have no direct analogue.  What the
     host can attribute is each device's share of the pair-interaction work —
     the dominant cost — measured from the live state: per NSG cell,
-    ``occupancy * (3x3 neighborhood occupancy)`` counts the pair evaluations
+    ``occupancy * (3^D neighborhood occupancy)`` counts the pair evaluations
     the interaction sweep actually performs (a quadratic-in-density signal,
     unlike the linear agent count the unweighted histogram uses).  The
     measured wall clock calibrates the absolute scale; the work shares
-    distribute it.  The 3x3 sum uses closed (zero-padded) edges — for
+    distribute it.  The 3^D sum uses closed (zero-padded) edges — for
     toroidal domains this slightly underweights seam cells, which is noise
     at re-shard granularity.
 
-    Returns an (mx, my) float array suitable for ``Rebalancer.runtimes`` /
-    ``occupancy_histogram(..., runtimes=...)``.
+    Returns a ``mesh_shape`` float array suitable for
+    ``Rebalancer.runtimes`` / ``occupancy_histogram(..., runtimes=...)``.
     """
-    mx, my = geom.mesh_shape
-    ix, iy = geom.interior
-    occ = _interior_blocks(geom, state.soa.valid).sum(axis=-1)  # (mx,ix,my,iy)
-    cells = occ.reshape(mx * ix, my * iy).astype(np.float64)
+    nd = geom.ndim
+    occ = _interior_blocks(geom, state.soa.valid).sum(axis=-1)
+    cells = occ.reshape(geom.global_cells).astype(np.float64)
     padded = np.pad(cells, 1)
-    nbhd = sum(padded[1 + dx:1 + dx + cells.shape[0],
-                      1 + dy:1 + dy + cells.shape[1]]
-               for dx in (-1, 0, 1) for dy in (-1, 0, 1))
-    work = (cells * nbhd).reshape(mx, ix, my, iy).sum(axis=(1, 3))  # (mx,my)
+    nbhd = sum(
+        padded[tuple(slice(1 + o, 1 + o + s)
+                     for o, s in zip(off, cells.shape))]
+        for off in itertools.product((-1, 0, 1), repeat=nd))
+    work = (cells * nbhd).reshape(_interleaved_shape(geom)).sum(
+        axis=_interior_axes(geom))
     total = work.sum()
     if total <= 0:
-        return np.full((mx, my), float(wall_s) / (mx * my))
+        return np.full(geom.mesh_shape,
+                       float(wall_s) / geom.n_devices)
     return float(wall_s) * work / total
 
 
@@ -153,7 +180,7 @@ def estimate_device_runtimes(geom: GridGeom, state: SimState,
 class ReshardPlan:
     """Outcome of one planning pass over the occupancy histogram."""
 
-    mesh_shape: Tuple[int, int]        # realizable equal-split target
+    mesh_shape: Tuple[int, ...]        # realizable equal-split target
     imbalance: float                   # planned imbalance of mesh_shape
     current: float                     # imbalance of the live partition
     rcb_bound: Optional[float]         # box-granular RCB imbalance (lower bound)
@@ -162,7 +189,7 @@ class ReshardPlan:
 
 def plan_reshard(
     hist: np.ndarray,
-    geom: GridGeom,
+    geom: Domain,
     n_devices: Optional[int] = None,
     runtimes: Optional[np.ndarray] = None,
 ) -> ReshardPlan:
@@ -170,14 +197,16 @@ def plan_reshard(
 
     ``choose_mesh_shape`` gives the realizable equal-split plan; ``plan_rcb``
     (power-of-two counts) gives the box-granular bound the mesh plan is
-    measured against; for 1-D meshes one ``plan_diffusive`` step over the
-    column marginal is evaluated too (using measured runtimes when given,
-    else the column loads as the runtime proxy).
+    measured against; for chain meshes (all but one axis of size 1) one
+    ``plan_diffusive`` step over the chain-axis marginal is evaluated too
+    (using measured runtimes when given, else the column loads as the
+    runtime proxy).
     """
-    mx, my = geom.mesh_shape
-    n = n_devices if n_devices is not None else mx * my
-    cur = imbalance(equal_split_loads(hist, (mx, my))) \
-        if (hist.shape[0] % mx == 0 and hist.shape[1] % my == 0) else float("inf")
+    mesh = geom.mesh_shape
+    n = n_devices if n_devices is not None else geom.n_devices
+    divisible = all(b % m == 0 for b, m in zip(hist.shape, mesh))
+    cur = imbalance(equal_split_loads(hist, mesh)) if divisible \
+        else float("inf")
 
     target = choose_mesh_shape(hist, n)
     planned = imbalance(equal_split_loads(hist, target))
@@ -188,18 +217,21 @@ def plan_reshard(
         rcb_bound = imbalance(device_loads(own, hist, n))
 
     diff_bound = None
-    d = max(mx, my)
-    col_w = hist.sum(axis=1) if my == 1 else hist.sum(axis=0)
-    if (n == mx * my and 1 in (mx, my) and n > 1
-            and col_w.size % d == 0 and cur != float("inf")):
-        widths = np.full((d,), col_w.size // d, np.int64)
-        loads0 = equal_split_loads(hist, (mx, my))
-        rt = (np.asarray(runtimes, np.float64).ravel()
-              if runtimes is not None else loads0)
-        new_w = plan_diffusive(widths, col_w, rt)
-        own_1d = widths_to_ownership(new_w)
-        loads = device_loads(own_1d[:, None], col_w[:, None], d)
-        diff_bound = imbalance(loads)
+    is_chain = n > 1 and sum(m > 1 for m in mesh) == 1
+    if is_chain and n == geom.n_devices and cur != float("inf"):
+        chain = int(np.argmax(mesh))
+        d = mesh[chain]
+        col_w = hist.sum(axis=tuple(a for a in range(hist.ndim)
+                                    if a != chain))
+        if col_w.size % d == 0:
+            widths = np.full((d,), col_w.size // d, np.int64)
+            loads0 = equal_split_loads(hist, mesh)
+            rt = (np.asarray(runtimes, np.float64).ravel()
+                  if runtimes is not None else loads0)
+            new_w = plan_diffusive(widths, col_w, rt)
+            own_1d = widths_to_ownership(new_w)
+            loads = device_loads(own_1d[:, None], col_w[:, None], d)
+            diff_bound = imbalance(loads)
 
     return ReshardPlan(mesh_shape=target, imbalance=planned, current=cur,
                        rcb_bound=rcb_bound, diffusive_bound=diff_bound)
@@ -214,7 +246,7 @@ class FlatAgents:
     """Host-side flattened simulation state — the unit of mass migration
     (and of the logical ABM checkpoint, distributed.checkpoint.save_abm)."""
 
-    positions: np.ndarray              # (N, 2) float32
+    positions: np.ndarray              # (N, ndim) float32
     attrs: Dict[str, np.ndarray]       # (N, ...) incl. gid_rank/gid_count
     it: int                            # iteration counter
     gid_counters: np.ndarray           # (old_n_ranks,) next spawn counter
@@ -222,14 +254,15 @@ class FlatAgents:
     dropped_total: int                 # cumulative overflow drops
 
 
-def flatten_state(geom: GridGeom, state: SimState) -> FlatAgents:
+def flatten_state(geom: Domain, state: SimState) -> FlatAgents:
     """Gather every live agent (interior cells only — the aura ring holds
     copies) plus the engine carry needed to re-initialize elsewhere."""
+    nd = geom.ndim
     valid = _interior_blocks(geom, state.soa.valid).ravel()
     attrs = {}
     for name, a in state.soa.attrs.items():
         blocks = _interior_blocks(geom, a)
-        trailing = blocks.shape[5:]
+        trailing = blocks.shape[2 * nd + 1:]
         attrs[name] = blocks.reshape((valid.size,) + trailing)[valid]
     positions = attrs.pop(POS)
     return FlatAgents(
@@ -237,13 +270,13 @@ def flatten_state(geom: GridGeom, state: SimState) -> FlatAgents:
         attrs=attrs,
         it=int(np.max(np.asarray(state.it))),
         gid_counters=np.asarray(state.gid_counter, np.int64).ravel(),
-        base_key=np.asarray(state.key)[0, 0].astype(np.uint32),
+        base_key=np.asarray(state.key)[(0,) * nd].astype(np.uint32),
         dropped_total=int(np.sum(np.asarray(state.dropped))),
     )
 
 
 def reshard_state(
-    engine: Engine, state: SimState, mesh_shape: Tuple[int, int]
+    engine: Engine, state: SimState, mesh_shape: Tuple[int, ...]
 ) -> Tuple[Engine, SimState]:
     """Mass-migrate ``state`` onto a new device mesh.
 
@@ -265,8 +298,8 @@ def reshard_state(
         base_key=flat.base_key,
     )
     if flat.dropped_total:
-        new_state.dropped = new_state.dropped.at[0, 0].add(
-            jnp.int32(flat.dropped_total))
+        new_state.dropped = new_state.dropped.at[
+            (0,) * new_geom.ndim].add(jnp.int32(flat.dropped_total))
     return new_engine, new_state
 
 
@@ -275,9 +308,9 @@ def reshard_state(
 # ---------------------------------------------------------------------------
 
 def default_make_step(engine: Engine):
-    """Step factory used after a re-shard: local step on a 1x1 mesh, else a
-    sharded step over a fresh version-compat spatial mesh."""
-    if engine.geom.mesh_shape == (1, 1):
+    """Step factory used after a re-shard: local step on a single-device
+    mesh, else a sharded step over a fresh version-compat spatial mesh."""
+    if engine.geom.n_devices == 1:
         return engine.make_local_step()
     from repro.launch.mesh import make_abm_mesh  # deferred: device state
     return engine.make_sharded_step(make_abm_mesh(engine.geom.mesh_shape))
@@ -314,12 +347,12 @@ class Rebalancer:
                 and np.asarray(self.runtimes).shape != engine.geom.mesh_shape):
             self.runtimes = None  # measured on a different mesh: stale
         hist = occupancy_histogram(engine.geom, state, self.runtimes)
-        mx, my = engine.geom.mesh_shape
+        mesh = engine.geom.mesh_shape
         # a box grid coarser than the mesh (large box_factor) has no
         # per-device load reading: treat as maximally imbalanced and let the
         # planner look for a factorization the box grid does support
-        cur = (imbalance(equal_split_loads(hist, (mx, my)))
-               if hist.shape[0] % mx == 0 and hist.shape[1] % my == 0
+        cur = (imbalance(equal_split_loads(hist, mesh))
+               if all(b % m == 0 for b, m in zip(hist.shape, mesh))
                else float("inf"))
         record = {
             "it": int(np.max(np.asarray(state.it))),

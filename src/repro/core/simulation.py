@@ -37,13 +37,15 @@ import numpy as np
 
 from repro.core.behaviors import Behavior, compose
 from repro.core.delta import DeltaConfig
+from repro.core.domain import Domain
 from repro.core.engine import Engine, SimState, total_agents
-from repro.core.grid import GridGeom
 from repro.core.operations import Operation, checkpoint_op
 from repro.core.reshard import Rebalancer, estimate_device_runtimes
 
 # Geometry defaults applied when the first argument is a kwargs dict
-# (mirrors the historical sims.common.make_engine defaults).
+# (mirrors the historical sims.common.make_engine defaults; an all-ones
+# mesh_shape broadcasts to the interior's dimensionality, so a 3-D
+# ``interior`` alone is enough to get a 3-D single-device Domain).
 _GEOM_DEFAULTS = dict(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
                       cap=24, boundary="closed")
 
@@ -84,14 +86,16 @@ class Simulation:
     """Single owner of engine, mesh, state, step function, and rebalancer.
 
     Args:
-      geom: a :class:`GridGeom`, or a dict of GridGeom kwargs (defaults:
-        ``cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1), cap=24,
-        boundary="closed"``).
+      geom: a :class:`repro.core.Domain` (2-D or 3-D, per-axis boundaries),
+        or a dict of Domain kwargs (defaults: ``cell_size=2.0,
+        interior=(8, 8), mesh_shape=(1, 1), cap=24, boundary="closed"``).
+        The deprecated ``GridGeom`` shim also lands here (it returns a
+        ``Domain``).
       behaviors: one :class:`Behavior` or a sequence — sequences are merged
         with :func:`repro.core.behaviors.compose`.
-      mesh: an explicit ``(sx, sy)`` device mesh; by default one is built
-        lazily via ``launch.mesh.make_abm_mesh`` whenever
-        ``geom.mesh_shape != (1, 1)`` (and rebuilt after every re-shard).
+      mesh: an explicit spatial device mesh; by default one is built
+        lazily via ``launch.mesh.make_abm_mesh`` whenever the Domain spans
+        more than one device (and rebuilt after every re-shard).
       delta: optional :class:`DeltaConfig` for delta-encoded aura exchange.
       dt: integration step.
       rebalance: a :class:`Rebalance` policy, an int shorthand for
@@ -104,7 +108,7 @@ class Simulation:
         CPU/GPU and the Pallas kernel on TPU.
     """
 
-    def __init__(self, geom: Union[GridGeom, Dict[str, Any]],
+    def __init__(self, geom: Union[Domain, Dict[str, Any]],
                  behaviors: Union[Behavior, Sequence[Behavior]], *,
                  mesh=None, delta: Optional[DeltaConfig] = None,
                  dt: float = 1.0,
@@ -112,7 +116,7 @@ class Simulation:
                  checkpoint: Union[Checkpoint, str, None] = None,
                  sweep_backend: str = "auto"):
         if isinstance(geom, dict):
-            geom = GridGeom(**{**_GEOM_DEFAULTS, **geom})
+            geom = Domain(**{**_GEOM_DEFAULTS, **geom})
         if isinstance(behaviors, Behavior):
             behavior = behaviors
         else:
@@ -155,7 +159,7 @@ class Simulation:
     # Introspection
     # ------------------------------------------------------------------
     @property
-    def geom(self) -> GridGeom:
+    def geom(self) -> Domain:
         return self.engine.geom
 
     @property
@@ -164,10 +168,10 @@ class Simulation:
 
     @property
     def mesh(self):
-        """The live spatial device mesh (None on a 1x1 geometry).  Always
-        matches ``self.engine.geom.mesh_shape``, also right after a
+        """The live spatial device mesh (None on a single-device geometry).
+        Always matches ``self.engine.geom.mesh_shape``, also right after a
         re-shard."""
-        if self.engine.geom.mesh_shape == (1, 1):
+        if self.engine.geom.n_devices == 1:
             return None
         if (self._mesh is None
                 or self._mesh.devices.shape != self.engine.geom.mesh_shape):
@@ -223,12 +227,12 @@ class Simulation:
     # Running
     # ------------------------------------------------------------------
     def _make_step(self) -> Callable:
-        if self.engine.geom.mesh_shape == (1, 1):
+        if self.engine.geom.n_devices == 1:
             return self.engine.make_local_step()
         return self.engine.make_sharded_step(self.mesh)
 
     def _make_seg(self) -> Callable:
-        mesh = None if self.engine.geom.mesh_shape == (1, 1) else self.mesh
+        mesh = None if self.engine.geom.n_devices == 1 else self.mesh
         return self.engine.make_segment_runner(mesh)
 
     def _maybe_rebalance(self) -> None:

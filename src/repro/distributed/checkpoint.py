@@ -131,9 +131,12 @@ def save_abm(ckpt_dir: str, step: int, engine, state,
         "it": int(flat.it),
         "dropped_total": int(flat.dropped_total),
         "cell_size": float(geom.cell_size),
+        "ndim": int(geom.ndim),
         "global_cells": list(geom.global_cells),
         "cap": int(geom.cap),
-        "boundary": geom.boundary,
+        # per-axis boundary list (legacy checkpoints stored one string;
+        # Domain normalizes either form on restore)
+        "boundary": list(geom.boundary),
         "box_factor": int(geom.box_factor),
         "dt": float(engine.dt),
         "attr_names": sorted(flat.attrs),

@@ -50,11 +50,12 @@ def elastic_restore_abm(ckpt_dir: str, behavior, *,
 
     The checkpoint stores mesh-independent flattened agents plus the
     occupancy histogram; ``choose_mesh_shape`` picks the least-imbalanced
-    (mx, my) factorization of the surviving device count over that
-    histogram, the :class:`GridGeom` is re-derived for it, and the state is
-    re-initialized through the same mass-migration path the mid-run
-    re-shard uses — global agent ids, spawn-counter floors, the iteration
-    counter, and the RNG lineage all carry over.
+    mesh factorization of the surviving device count over that histogram
+    (2-D or 3-D, per the checkpointed Domain), the :class:`Domain` is
+    re-derived for it, and the state is re-initialized through the same
+    mass-migration path the mid-run re-shard uses — global agent ids,
+    spawn-counter floors, the iteration counter, and the RNG lineage all
+    carry over.
 
     Returns ``(engine, state, step)``; drive the state with
     ``engine.make_sharded_step(make_abm_mesh(engine.geom.mesh_shape))`` (or
@@ -63,8 +64,8 @@ def elastic_restore_abm(ckpt_dir: str, behavior, *,
     import jax.numpy as jnp
     import numpy as np
 
+    from repro.core.domain import Domain
     from repro.core.engine import Engine
-    from repro.core.grid import GridGeom
     from repro.core.load_balance import choose_mesh_shape
     from repro.core.delta import DeltaConfig
 
@@ -73,13 +74,14 @@ def elastic_restore_abm(ckpt_dir: str, behavior, *,
     meta = extras["abm"]
     hist = np.asarray(flat["histogram"])
     mesh_shape = choose_mesh_shape(hist, n)
-    gx, gy = meta["global_cells"]
-    geom = GridGeom(
+    global_cells = tuple(meta["global_cells"])
+    boundary = meta["boundary"]   # str (legacy) or per-axis list
+    geom = Domain(
         cell_size=meta["cell_size"],
-        interior=(gx // mesh_shape[0], gy // mesh_shape[1]),
+        interior=tuple(g // m for g, m in zip(global_cells, mesh_shape)),
         mesh_shape=mesh_shape,
         cap=meta["cap"],
-        boundary=meta["boundary"],
+        boundary=boundary if isinstance(boundary, str) else tuple(boundary),
         box_factor=meta["box_factor"],
     )
     engine = Engine(
@@ -98,7 +100,7 @@ def elastic_restore_abm(ckpt_dir: str, behavior, *,
         base_key=flat["base_key"],
     )
     if meta["dropped_total"]:
-        state.dropped = state.dropped.at[0, 0].add(
+        state.dropped = state.dropped.at[(0,) * geom.ndim].add(
             jnp.int32(meta["dropped_total"]))
     return engine, state, step_
 

@@ -57,12 +57,16 @@ def _pair_eval(attrs_i, attrs_j, valid_i, valid_j, *, pair_fn, radius,
     disp = aj[_POS] - ai[_POS]                       # (..., K, NK, 2)
     if box is not None:
         # per-component minimum image with scalar literals: a (2,) constant
-        # array would be a captured constant inside the Pallas kernel body
+        # array would be a captured constant inside the Pallas kernel body.
+        # A None component marks a closed (non-wrapping) axis.
         comps = []
         for axis in range(disp.shape[-1]):
             d = disp[..., axis]
-            b = jnp.float32(box[axis])
-            comps.append(d - b * jnp.round(d / b))
+            if box[axis] is None:
+                comps.append(d)
+            else:
+                b = jnp.float32(box[axis])
+                comps.append(d - b * jnp.round(d / b))
         disp = jnp.stack(comps, axis=-1)
     dist2 = jnp.sum(disp * disp, axis=-1)            # (..., K, NK)
 
@@ -90,7 +94,8 @@ def pair_sweep_kernel(
     pair_fn,
     radius: float,
     params: dict,
-    box: Optional[Tuple[float, float]] = None,  # toroidal minimum-image box
+    box: Optional[Tuple[Optional[float], ...]] = None,  # per-axis minimum-
+    # image box lengths; a None component marks a closed axis
     block_cells: int = 8,
     interpret: bool = True,
 ) -> Dict[str, jax.Array]:

@@ -71,7 +71,7 @@ def neighborhood_pair_sweep(
     pair_fn,
     radius: float,
     params: dict,
-    box: Optional[Tuple[float, float]] = None,
+    box: Optional[Tuple[Optional[float], ...]] = None,
     block_cells: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Dict[str, jax.Array]:

@@ -27,13 +27,18 @@ def make_mesh(shape: Tuple[int, ...], axes: Tuple[str, ...]):
     return jax.make_mesh(shape, axes, **_axis_types_kwargs(len(axes)))
 
 
-def make_abm_mesh(mesh_shape: Tuple[int, int],
-                  axes: Tuple[str, str] = ("sx", "sy")):
-    """Spatial (sx, sy) device mesh for the ABM engine (paper Fig. 1 rank
-    grid), version-compat across JAX releases.  The canonical way to build
-    the mesh passed to ``Engine.make_sharded_step`` and the re-shard
-    runtime."""
-    return make_mesh(tuple(mesh_shape), tuple(axes))
+def make_abm_mesh(mesh_shape: Tuple[int, ...],
+                  axes: Optional[Tuple[str, ...]] = None):
+    """Spatial device mesh for the ABM engine (paper Fig. 1 rank grid),
+    version-compat across JAX releases: ``(sx, sy)`` for 2-D domains,
+    ``(sx, sy, sz)`` for 3-D ones.  The canonical way to build the mesh
+    passed to ``Engine.make_sharded_step`` and the re-shard runtime."""
+    mesh_shape = tuple(mesh_shape)
+    if axes is None:
+        # deferred: keeps this module importable without the core layer
+        from repro.core.domain import spatial_axis_names
+        axes = spatial_axis_names(len(mesh_shape))
+    return make_mesh(mesh_shape, tuple(axes))
 
 
 # TPU v5e hardware model used by the roofline analysis (per-chip).

@@ -22,7 +22,7 @@ from repro.core import DeltaConfig, Rebalance, total_agents
 from repro.launch.mesh import make_abm_mesh
 
 SIMS = ["cell_clustering", "cell_proliferation", "epidemiology",
-        "oncology", "sir_mechanics"]
+        "oncology", "sir_mechanics", "tumor_spheroid"]
 
 
 def main():
@@ -30,7 +30,9 @@ def main():
     ap.add_argument("--sim", required=True, choices=SIMS)
     ap.add_argument("--agents", type=int, default=400)
     ap.add_argument("--steps", type=int, default=30)
-    ap.add_argument("--mesh", default="1x1", help="e.g. 2x2 (spatial)")
+    ap.add_argument("--mesh", default="1x1",
+                    help="spatial device mesh, e.g. 2x2 (2-D) or 1x1x2 "
+                         "(3-D); the axis count sets the Domain's ndim")
     ap.add_argument("--delta", default="off",
                     choices=["off", "int8", "int16"])
     ap.add_argument("--interior", type=int, default=16,
@@ -53,13 +55,27 @@ def main():
     import importlib
 
     mod = importlib.import_module(f"repro.sims.{args.sim}")
-    mx, my = (int(v) for v in args.mesh.split("x"))
+    # a sim declares its dimensionality via a module-level NDIM (3-D sims
+    # only; 2-D is the default); an all-ones --mesh broadcasts to it so
+    # the single-device default works for any sim, and a real mesh must
+    # match the sim's axis count
+    sim_ndim = getattr(mod, "NDIM", 2)
+    mesh_shape = tuple(int(v) for v in args.mesh.split("x"))
+    if len(mesh_shape) != sim_ndim:
+        if all(m == 1 for m in mesh_shape):
+            mesh_shape = (1,) * sim_ndim
+        else:
+            ap.error(f"--mesh {args.mesh} has {len(mesh_shape)} axes but "
+                     f"{args.sim} is {sim_ndim}-D")
+    n_dev = 1
+    for m in mesh_shape:
+        n_dev *= m
     mesh = None
-    if mx * my > 1:
-        assert len(jax.devices()) >= mx * my, (
-            f"need {mx*my} devices (set "
-            f"XLA_FLAGS=--xla_force_host_platform_device_count={mx*my})")
-        mesh = make_abm_mesh((mx, my))
+    if n_dev > 1:
+        assert len(jax.devices()) >= n_dev, (
+            f"need {n_dev} devices (set "
+            f"XLA_FLAGS=--xla_force_host_platform_device_count={n_dev})")
+        mesh = make_abm_mesh(mesh_shape)
     delta = None
     if args.delta != "off":
         delta = DeltaConfig(enabled=True, qdtype=jnp.dtype(args.delta),
@@ -70,17 +86,17 @@ def main():
                               threshold=args.imbalance,
                               weighted=args.weighted)
 
-    interior = (args.interior // mx, args.interior // my)
+    interior = tuple(args.interior // m for m in mesh_shape)
     t0 = time.time()
     state, metrics = mod.run(
         n_agents=args.agents, steps=args.steps, mesh=mesh,
-        mesh_shape=(mx, my), interior=interior, delta=delta,
+        mesh_shape=mesh_shape, interior=interior, delta=delta,
         rebalance=rebalance, sweep_backend=args.sweep_backend)
     dt = time.time() - t0
     n = total_agents(state)
-    print(f"sim={args.sim} devices={mx*my} agents={n} steps={args.steps} "
+    print(f"sim={args.sim} devices={n_dev} agents={n} steps={args.steps} "
           f"wall={dt:.2f}s ({n*args.steps/dt:.0f} agent_updates/s)")
-    print(f"aura bytes/iter={int(state.halo_bytes[0,0])} "
+    print(f"aura bytes/iter={int(state.halo_bytes.ravel()[0])} "
           f"dropped={int(state.dropped.sum())}")
     for k, v in metrics.items():
         if not hasattr(v, "__len__") or len(str(v)) < 120:

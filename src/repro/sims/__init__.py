@@ -1,5 +1,7 @@
 """The paper's four benchmark simulations (§3.1) — cell clustering, cell
 proliferation, epidemiology (SIR), oncology (tumor spheroid) — plus
 ``sir_mechanics``, a composed-behavior sim (``compose(mechanics, sir)``)
-exercising the facade's behavior-stacking algebra.  Each module exposes
+exercising the facade's behavior-stacking algebra, and ``tumor_spheroid``,
+the 3-D flagship workload on the N-D Domain (proliferation + soft-sphere
+mechanics + nutrient-gated growth).  Each module exposes
 ``simulation(...) -> repro.core.Simulation`` and a ``run(...)`` wrapper."""

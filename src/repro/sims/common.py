@@ -1,9 +1,11 @@
 """Shared scaffolding for the paper's benchmark simulations (§3.1).
 
 The sims build on :class:`repro.core.Simulation` — ``make_sim`` wires the
-historical geometry defaults into the facade.  The former
-``make_engine``/``run_sim`` pairing survives only as deprecation shims with
-the one-line facade equivalent in the warning text.
+historical geometry defaults into the facade and is fully N-dimensional:
+pass a 3-axis ``interior``/``mesh_shape`` (or a :class:`repro.core.Domain`
+via ``domain=``) and the same model runs in 3-D (docs/domains.md).  The
+former ``make_engine``/``run_sim`` pairing survives only as deprecation
+shims with the one-line facade equivalent in the warning text.
 """
 
 from __future__ import annotations
@@ -14,7 +16,7 @@ from typing import Callable, Optional, Tuple, Union
 import numpy as np
 
 from repro.core import (
-    Behavior, DeltaConfig, Engine, GridGeom, Rebalance, Simulation,
+    Behavior, DeltaConfig, Domain, Engine, Rebalance, Simulation,
 )
 from repro.core.engine import SimState, warn_if_stale_engine
 
@@ -22,11 +24,12 @@ from repro.core.engine import SimState, warn_if_stale_engine
 def make_sim(
     behaviors,
     *,
-    interior: Tuple[int, int] = (8, 8),
-    mesh_shape: Tuple[int, int] = (1, 1),
+    interior: Tuple[int, ...] = (8, 8),
+    mesh_shape: Tuple[int, ...] = (1, 1),
     cell_size: float = 2.0,
     cap: int = 24,
-    boundary: str = "closed",
+    boundary: Union[str, Tuple[str, ...]] = "closed",
+    domain: Optional[Domain] = None,
     delta: Optional[DeltaConfig] = None,
     dt: float = 0.1,
     mesh=None,
@@ -34,11 +37,17 @@ def make_sim(
     checkpoint=None,
     sweep_backend: str = "auto",
 ) -> Simulation:
-    """Facade builder with the sims' historical geometry defaults."""
+    """Facade builder with the sims' historical geometry defaults.
+
+    ``domain=`` takes a ready-made :class:`Domain` and wins over the
+    individual geometry kwargs; otherwise the kwargs build one (an
+    all-ones ``mesh_shape`` broadcasts to ``interior``'s dimensionality).
+    """
+    geom = domain if domain is not None else dict(
+        cell_size=cell_size, interior=interior, mesh_shape=mesh_shape,
+        cap=cap, boundary=boundary)
     return Simulation(
-        dict(cell_size=cell_size, interior=interior, mesh_shape=mesh_shape,
-             cap=cap, boundary=boundary),
-        behaviors, mesh=mesh, delta=delta, dt=dt,
+        geom, behaviors, mesh=mesh, delta=delta, dt=dt,
         rebalance=rebalance, checkpoint=checkpoint,
         sweep_backend=sweep_backend)
 
@@ -51,19 +60,31 @@ def init_agents(sim, positions: np.ndarray, attrs, seed: int = 0):
     return sim.init_state(positions, attrs, seed=seed)
 
 
-def uniform_positions(rng: np.random.Generator, n: int, geom: GridGeom,
+def uniform_positions(rng: np.random.Generator, n: int, geom: Domain,
                       margin: float = 0.5) -> np.ndarray:
-    lx, ly = geom.domain_size
-    return rng.uniform([margin, margin], [lx - margin, ly - margin],
-                       size=(n, 2)).astype(np.float32)
+    """Uniform positions over the domain interior, any dimensionality."""
+    size = geom.domain_size
+    lo = [margin] * geom.ndim
+    hi = [s - margin for s in size]
+    return rng.uniform(lo, hi, size=(n, geom.ndim)).astype(np.float32)
 
 
 def disk_positions(rng: np.random.Generator, n: int, center, radius
                    ) -> np.ndarray:
+    """Uniform positions inside a 2-D disk."""
     th = rng.uniform(0, 2 * np.pi, n)
     r = radius * np.sqrt(rng.uniform(0, 1, n))
     return np.stack([center[0] + r * np.cos(th),
                      center[1] + r * np.sin(th)], axis=1).astype(np.float32)
+
+
+def ball_positions(rng: np.random.Generator, n: int, center, radius
+                   ) -> np.ndarray:
+    """Uniform positions inside a 3-D ball (the spheroid seeds)."""
+    v = rng.normal(size=(n, 3))
+    v /= np.maximum(np.linalg.norm(v, axis=1, keepdims=True), 1e-12)
+    r = radius * np.cbrt(rng.uniform(0, 1, n))[:, None]
+    return (np.asarray(center)[None, :] + v * r).astype(np.float32)
 
 
 # ---------------------------------------------------------------------------
@@ -73,11 +94,11 @@ def disk_positions(rng: np.random.Generator, n: int, center, radius
 def make_engine(
     behavior: Behavior,
     *,
-    interior: Tuple[int, int] = (8, 8),
-    mesh_shape: Tuple[int, int] = (1, 1),
+    interior: Tuple[int, ...] = (8, 8),
+    mesh_shape: Tuple[int, ...] = (1, 1),
     cell_size: float = 2.0,
     cap: int = 24,
-    boundary: str = "closed",
+    boundary: Union[str, Tuple[str, ...]] = "closed",
     delta: Optional[DeltaConfig] = None,
     dt: float = 0.1,
     mesh=None,
@@ -92,8 +113,8 @@ def make_engine(
         "dict(interior=..., mesh_shape=..., cap=...), behavior, delta=..., "
         "dt=..., rebalance=Rebalance(every=n, threshold=t)) instead",
         DeprecationWarning, stacklevel=2)
-    geom = GridGeom(cell_size=cell_size, interior=interior,
-                    mesh_shape=mesh_shape, cap=cap, boundary=boundary)
+    geom = Domain(cell_size=cell_size, interior=interior,
+                  mesh_shape=mesh_shape, cap=cap, boundary=boundary)
     return Engine(geom=geom, behavior=behavior,
                   delta_cfg=delta or DeltaConfig(enabled=False), dt=dt,
                   rebalance_every=rebalance_every,

@@ -77,7 +77,8 @@ def init(sim, n_agents: int, seed: int = 0):
 
 def tumor_diameter(state) -> float:
     """Paper's approximate measurement: enclosing bounding box."""
-    pos = np.asarray(state.soa.attrs["pos"]).reshape(-1, 2)
+    pos = np.asarray(state.soa.attrs["pos"])
+    pos = pos.reshape(-1, pos.shape[-1])
     v = np.asarray(state.soa.valid).ravel()
     pos = pos[v]
     if pos.size == 0:

@@ -1,0 +1,153 @@
+"""Tumor spheroid growth in 3-D (paper §3.1 oncology use case, now on the
+N-D Domain): the flagship 3-D workload exercising the new spatial axis.
+
+A composed behavior stack (``compose(mechanics, growth)``, docs/api.md):
+
+* **mechanics** — soft-sphere repulsion + adhesion with overdamped
+  displacement (the shared :func:`soft_repulsion_adhesion` /
+  :func:`displacement_update` pair, unchanged from the 2-D sims — the pair
+  math is dimension-agnostic, so the same behavior code runs in 3-D).
+* **growth** — nutrient-gated proliferation: each cell carries a
+  ``nutrient`` level relaxing toward the local supply, which crowding
+  (the 3^3-neighborhood occupancy, an oxygen-consumption proxy) depletes.
+  Cells grow only while nutrient holds above a threshold, and divide once
+  past the division diameter — so the spheroid develops the classic
+  rim-proliferating / core-quiescent structure without any global field.
+
+The spheroid diameter is measured with the paper's approximate method —
+the enclosing bounding box of all tumor cells (§3.4) — identical in serial
+and distributed execution.  Moving this model from one device to a
+``1x1x2`` (or larger) spatial mesh is a ``mesh_shape`` argument change
+only: see ``examples/spheroid_3d.py``.
+"""
+
+from __future__ import annotations
+
+from functools import lru_cache
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import AgentSchema, Behavior, POS, Simulation, compose, total_agents
+from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
+from repro.sims.common import ball_positions, init_agents, make_sim
+
+# Spatial dimensionality of this sim's default geometry (read by
+# launch.simulate to size an all-ones --mesh; 2-D sims omit it).
+NDIM = 3
+
+MECH_SCHEMA = AgentSchema.create({
+    "diameter": ((), jnp.float32),
+    "ctype": ((), jnp.int32),
+})
+
+GROWTH_SCHEMA = AgentSchema.create({
+    "diameter": ((), jnp.float32),
+    "nutrient": ((), jnp.float32),
+})
+
+
+def _crowd_pair(ai, aj, disp, dist2, params):
+    """Neighbor count — the local oxygen-consumption proxy."""
+    return {"crowd": jnp.ones_like(dist2)}
+
+
+def _growth_update(attrs, valid, acc, key, params, dt):
+    crowd = acc["crowd"]
+    # nutrient relaxes toward supply and is depleted by crowding
+    uptake = params["uptake"] * crowd
+    nut = attrs["nutrient"] + dt * (params["supply"]
+                                    * (1.0 - attrs["nutrient"]) - uptake)
+    nut = jnp.clip(nut, 0.0, 1.0)
+    fed = nut > params["nutrient_threshold"]
+    # growth is nutrient-gated; starved cells go quiescent
+    d = attrs["diameter"] + jnp.where(
+        valid & fed, params["growth"] * dt, 0.0)
+    divide_ready = d >= params["div_diameter"]
+    k1, k2 = jax.random.split(key)
+    u = jax.random.uniform(k1, valid.shape)
+    spawn = valid & fed & divide_ready & (u < params["div_prob"])
+    d = jnp.where(spawn, d * 0.5, d)
+    new = dict(attrs)
+    new["diameter"] = d
+    new["nutrient"] = nut
+    # child: sibling half of the division, offset in a random 3-D direction
+    off = params["div_offset"] * jax.random.normal(k2, new[POS].shape)
+    child = dict(new)
+    child[POS] = new[POS] + off
+    child["diameter"] = jnp.where(spawn, d, jnp.float32(0.5))
+    child["nutrient"] = 0.5 * nut
+    return new, valid, spawn, child
+
+
+@lru_cache(maxsize=8)
+def behavior(radius=2.0, repulsion=4.0, adhesion=0.4) -> Behavior:
+    """``compose(mechanics, growth)`` — union schema
+    {diameter, ctype, nutrient}, both pair kernels over one 3^3 sweep."""
+    mech = Behavior(
+        schema=MECH_SCHEMA,
+        pair_fn=soft_repulsion_adhesion,
+        pair_attrs=("diameter", "ctype"),
+        update_fn=displacement_update,
+        radius=radius,
+        params={"repulsion": repulsion, "adhesion": adhesion,
+                "same_type_only": 0.0, "max_step": 0.3},
+    )
+    growth = Behavior(
+        schema=GROWTH_SCHEMA,
+        pair_fn=_crowd_pair,
+        pair_attrs=("diameter",),
+        update_fn=_growth_update,
+        radius=radius,
+        params={"growth": 0.35, "div_diameter": 1.0, "div_prob": 0.4,
+                "div_offset": 0.25, "supply": 0.6, "uptake": 0.035,
+                "nutrient_threshold": 0.3},
+        can_spawn=True,
+    )
+    return compose(mech, growth)
+
+
+def init(sim, n_agents: int, seed: int = 0):
+    rng = np.random.default_rng(seed)
+    size = sim.geom.domain_size
+    center = tuple(s / 2 for s in size)
+    pos = ball_positions(rng, n_agents, center, min(size) / 8)
+    attrs = {
+        "diameter": np.full((n_agents,), 0.8, np.float32),
+        "ctype": np.ones((n_agents,), np.int32),
+        "nutrient": np.full((n_agents,), 1.0, np.float32),
+    }
+    return init_agents(sim, pos, attrs, seed=seed)
+
+
+def spheroid_diameter(state) -> float:
+    """Paper's approximate measurement: enclosing bounding box."""
+    pos = np.asarray(state.soa.attrs["pos"])
+    pos = pos.reshape(-1, pos.shape[-1])
+    v = np.asarray(state.soa.valid).ravel()
+    pos = pos[v]
+    if pos.size == 0:
+        return 0.0
+    ext = pos.max(axis=0) - pos.min(axis=0)
+    return float(np.max(ext))
+
+
+def simulation(n_agents=40, seed=0, mesh=None, mesh_shape=(1, 1, 1),
+               interior=(6, 6, 6), delta=None, rebalance=None,
+               sweep_backend="auto") -> Simulation:
+    sim = make_sim(behavior(), interior=interior, mesh_shape=mesh_shape,
+                   cap=32, delta=delta, mesh=mesh, rebalance=rebalance,
+                   sweep_backend=sweep_backend)
+    return init(sim, n_agents, seed)
+
+
+def run(n_agents=40, steps=15, seed=0, mesh=None, mesh_shape=(1, 1, 1),
+        interior=(6, 6, 6), delta=None, rebalance=None,
+        sweep_backend="auto"):
+    sim = simulation(n_agents=n_agents, seed=seed, mesh=mesh,
+                     mesh_shape=mesh_shape, interior=interior, delta=delta,
+                     rebalance=rebalance, sweep_backend=sweep_backend)
+    d0 = spheroid_diameter(sim.state)
+    sim.run(steps, collect=lambda s: (total_agents(s), spheroid_diameter(s)))
+    return sim.state, {"diam_initial": d0, "series": sim.series["collect"]}

@@ -8,7 +8,7 @@ import pytest
 from hypothesis_compat import given, settings, st
 
 from repro.core import (
-    AgentSchema, Behavior, DeltaConfig, Engine, GridGeom, total_agents,
+    AgentSchema, Behavior, DeltaConfig, Engine, Domain, total_agents,
 )
 from repro.core.agent_soa import AgentSoA, POS
 from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
@@ -26,7 +26,7 @@ SCHEMA = AgentSchema.create({
 
 
 def make_engine(interior=(8, 8), cap=16, boundary="closed", delta=None):
-    geom = GridGeom(cell_size=2.0, interior=interior, mesh_shape=(1, 1),
+    geom = Domain(cell_size=2.0, interior=interior, mesh_shape=(1, 1),
                     cap=cap, boundary=boundary)
     beh = Behavior(
         schema=SCHEMA, pair_fn=soft_repulsion_adhesion,

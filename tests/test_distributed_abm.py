@@ -29,7 +29,7 @@ def run_sub(code: str, devices: int = 4, timeout: int = 1200) -> str:
 
 COMMON = """
 import numpy as np, jax, jax.numpy as jnp
-from repro.core import AgentSchema, Behavior, DeltaConfig, Engine, GridGeom, total_agents
+from repro.core import AgentSchema, Behavior, DeltaConfig, Engine, Domain, total_agents
 from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
 
 schema = AgentSchema.create({"diameter": ((), jnp.float32),
@@ -53,14 +53,14 @@ def sorted_positions(state):
 
 def test_distributed_matches_single_device_oracle():
     out = run_sub(COMMON + """
-geom1 = GridGeom(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1), cap=16)
+geom1 = Domain(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1), cap=16)
 eng1 = Engine(geom=geom1, behavior=beh, dt=0.1)
 s1 = eng1.init_state(pos, attrs, seed=0)
 step1 = eng1.make_local_step()
 for _ in range(10):
     s1 = step1(s1, full_halo=True)
 
-geom4 = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=16)
+geom4 = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=16)
 eng4 = Engine(geom=geom4, behavior=beh, dt=0.1)
 s4 = eng4.init_state(pos, attrs, seed=0)
 from repro.launch.mesh import make_abm_mesh
@@ -79,7 +79,7 @@ print("OK", err)
 
 def test_distributed_delta_encoding_bounded_drift_and_byte_reduction():
     out = run_sub(COMMON + """
-geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=16)
+geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=16)
 from repro.launch.mesh import make_abm_mesh
 mesh = make_abm_mesh((2, 2))
 
@@ -112,7 +112,7 @@ def test_toroidal_migration_wraps_domain_seam():
 # agents drifting east across the seam must reappear on device 0
 # NB: 2x1 mesh of 8x8-cell interiors => domain is 32 x 16
 pos = rng.uniform([0.5, 0.5], [31.5, 15.5], size=(n, 2)).astype(np.float32)
-geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 1), cap=16,
+geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 1), cap=16,
                 boundary="toroidal")
 from repro.launch.mesh import make_abm_mesh
 mesh = make_abm_mesh((2, 1))

@@ -15,7 +15,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    AgentSchema, Behavior, Engine, GridGeom, Rebalancer, total_agents,
+    AgentSchema, Behavior, Engine, Domain, Rebalancer, total_agents,
 )
 from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
 from repro.core.load_balance import equal_split_loads, imbalance
@@ -57,7 +57,7 @@ def make_skewed_state(mesh_shape=(2, 2), n=400, cap=32, seed=0):
     pathological for the static 2x2 equal split, near-perfect for a 1-D
     4-way split."""
     gx = gy = 16
-    geom = GridGeom(cell_size=2.0,
+    geom = Domain(cell_size=2.0,
                     interior=(gx // mesh_shape[0], gy // mesh_shape[1]),
                     mesh_shape=mesh_shape, cap=cap)
     eng = Engine(geom=geom, behavior=make_behavior(), dt=0.1)
@@ -135,7 +135,7 @@ def test_plan_reshard_reports_diffusive_bound_on_1d_mesh():
     load toward balance (it is iterative, so near-balanced densities may
     oscillate — that is the planner's documented behavior, not a bug)."""
     gx = gy = 16
-    geom = GridGeom(cell_size=2.0, interior=(4, 16), mesh_shape=(4, 1),
+    geom = Domain(cell_size=2.0, interior=(4, 16), mesh_shape=(4, 1),
                     cap=48)
     eng = Engine(geom=geom, behavior=make_behavior(), dt=0.1)
     rng = np.random.default_rng(0)
@@ -189,7 +189,7 @@ def test_gid_floors_survive_mesh_downsize():
     must keep every new rank's counter above the *global* floor bound, so
     ids issued by dropped ranks (even to since-dead agents) are never
     reissued after a later re-expansion."""
-    geom = GridGeom(cell_size=2.0, interior=(8, 16), mesh_shape=(2, 1),
+    geom = Domain(cell_size=2.0, interior=(8, 16), mesh_shape=(2, 1),
                     cap=32)
     eng = Engine(geom=geom, behavior=make_behavior(), dt=0.1)
     rng = np.random.default_rng(0)
@@ -225,7 +225,7 @@ def test_rebalancer_acceptance_two_x_reduction_and_conservation():
 def test_rebalancer_declines_below_threshold_and_without_gain():
     # uniform density: already balanced -> below threshold, no re-shard
     gx = gy = 16
-    geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=32)
+    geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=32)
     eng = Engine(geom=geom, behavior=make_behavior(), dt=0.1)
     rng = np.random.default_rng(1)
     n = 400
@@ -306,7 +306,7 @@ def test_mid_run_reshard_matches_single_device_oracle():
     tracks the single-device oracle's positions."""
     out = run_sub("""
 import numpy as np, jax, jax.numpy as jnp
-from repro.core import AgentSchema, Behavior, Engine, GridGeom, Rebalancer, total_agents
+from repro.core import AgentSchema, Behavior, Engine, Domain, Rebalancer, total_agents
 from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
 from repro.core.reshard import current_imbalance
 from repro.launch.mesh import make_abm_mesh
@@ -330,7 +330,7 @@ def sorted_positions(state):
     return p[np.lexsort(p.T)]
 
 # single-device oracle
-geom1 = GridGeom(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1), cap=32)
+geom1 = Domain(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1), cap=32)
 eng1 = Engine(geom=geom1, behavior=beh, dt=0.1)
 s1 = eng1.init_state(pos, attrs, seed=0)
 step1 = eng1.make_local_step()
@@ -338,7 +338,7 @@ for _ in range(10):
     s1 = step1(s1, full_halo=True)
 
 # distributed on the pathological 2x2 split, re-shard allowed at step 5
-geom4 = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=32)
+geom4 = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=32)
 eng4 = Engine(geom=geom4, behavior=beh, dt=0.1)
 s4 = eng4.init_state(pos, attrs, seed=0)
 before = current_imbalance(eng4.geom, s4)
@@ -362,7 +362,7 @@ def test_mid_run_reshard_with_delta_encoding_forces_full_refresh():
     aura refresh so the run stays bounded-drift."""
     out = run_sub("""
 import numpy as np, jax, jax.numpy as jnp
-from repro.core import (AgentSchema, Behavior, DeltaConfig, Engine, GridGeom,
+from repro.core import (AgentSchema, Behavior, DeltaConfig, Engine, Domain,
                         Rebalancer, total_agents)
 from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
 from repro.launch.mesh import make_abm_mesh
@@ -380,7 +380,7 @@ pos = np.clip(c + rng.normal(0, 3.0, (n, 2)), 0.5, 31.5).astype(np.float32)
 attrs = {"diameter": np.full((n,), 1.0, np.float32),
          "ctype": rng.integers(0, 2, n).astype(np.int32)}
 
-geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=32)
+geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=32)
 cfg = DeltaConfig(enabled=True, qdtype=jnp.int16, refresh_interval=8)
 eng = Engine(geom=geom, behavior=beh, delta_cfg=cfg, dt=0.1)
 s = eng.init_state(pos, attrs, seed=0)

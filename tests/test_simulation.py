@@ -22,7 +22,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    AgentSchema, Behavior, Checkpoint, Engine, GridGeom, Rebalance,
+    AgentSchema, Behavior, Checkpoint, Engine, Domain, Rebalance,
     Simulation, compose, operations, total_agents,
 )
 from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
@@ -67,7 +67,7 @@ def sorted_positions(state):
 def test_facade_matches_raw_engine_bit_exact():
     pos, attrs = make_inputs()
     beh = make_behavior()
-    geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+    geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
                     cap=24)
 
     eng = Engine(geom=geom, behavior=beh, dt=0.1)
@@ -171,7 +171,7 @@ def test_compose_gates_smaller_radius_kernel():
     pos = np.asarray([[4.0, 4.0], [5.5, 4.0]], np.float32)
     attrs = {"diameter": np.ones(2, np.float32),
              "ctype": np.zeros(2, np.int32)}
-    geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1), cap=8)
+    geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1), cap=8)
     eng = Engine(geom=geom, behavior=comp, dt=0.1)
     state = eng.init_state(pos, attrs, seed=0)
 
@@ -286,7 +286,7 @@ def test_estimate_device_runtimes_weights_dense_devices():
         rng.uniform(17.0, 30.0, (10, 2))]).astype(np.float32)
     attrs = {"diameter": np.full((n,), 1.0, np.float32),
              "ctype": np.zeros((n,), np.int32)}
-    geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2),
+    geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2),
                     cap=64)
     eng = Engine(geom=geom, behavior=make_behavior(), dt=0.1)
     state = eng.init_state(pos, attrs, seed=0)
@@ -328,7 +328,7 @@ def test_facade_matches_raw_sharded_loop():
     loop — and the facade built its own mesh from the geometry."""
     out = run_sub("""
 import numpy as np, jax, jax.numpy as jnp
-from repro.core import AgentSchema, Behavior, Engine, GridGeom, Simulation
+from repro.core import AgentSchema, Behavior, Engine, Domain, Simulation
 from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
 from repro.launch.mesh import make_abm_mesh
 
@@ -344,7 +344,7 @@ pos = rng.uniform(0.5, 31.5, size=(n, 2)).astype(np.float32)
 attrs = {"diameter": np.full((n,), 1.0, np.float32),
          "ctype": rng.integers(0, 2, n).astype(np.int32)}
 
-geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=16)
+geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=16)
 eng = Engine(geom=geom, behavior=beh, dt=0.1)
 s = eng.init_state(pos, attrs, seed=0)
 step = eng.make_sharded_step(make_abm_mesh((2, 2)))
@@ -368,7 +368,7 @@ def test_reshard_through_facade_keeps_engine_state_consistent():
     trajectory still matches the single-device oracle."""
     out = run_sub("""
 import warnings, numpy as np, jax, jax.numpy as jnp
-from repro.core import (AgentSchema, Behavior, Engine, GridGeom, Rebalance,
+from repro.core import (AgentSchema, Behavior, Engine, Domain, Rebalance,
                         Simulation)
 from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
 from repro.core.reshard import current_imbalance
@@ -392,11 +392,11 @@ def sorted_positions(state):
     return p[np.lexsort(p.T)]
 
 # single-device oracle
-geom1 = GridGeom(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1), cap=32)
+geom1 = Domain(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1), cap=32)
 s1 = Simulation(geom1, beh, dt=0.1).init(pos, attrs, seed=0).run(10)
 
 # facade on the pathological 2x2 split, weighted re-shard allowed at step 5
-geom4 = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=32)
+geom4 = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=32)
 sim = Simulation(geom4, beh, dt=0.1,
                  rebalance=Rebalance(every=5, threshold=0.3, weighted=True))
 sim.init(pos, attrs, seed=0)

@@ -25,7 +25,7 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    AgentSchema, Behavior, DeltaConfig, Engine, GridGeom, compose,
+    AgentSchema, Behavior, DeltaConfig, Domain, Engine, compose,
     total_agents,
 )
 from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
@@ -50,7 +50,7 @@ SIM_BEHAVIORS = {
 
 def make_state(beh, boundary="closed", n=260, seed=0, interior=(6, 6),
                cap=16):
-    geom = GridGeom(cell_size=2.0, interior=interior, mesh_shape=(1, 1),
+    geom = Domain(cell_size=2.0, interior=interior, mesh_shape=(1, 1),
                     cap=cap, boundary=boundary)
     eng = Engine(geom=geom, behavior=beh, dt=0.1)
     rng = np.random.default_rng(seed)
@@ -129,7 +129,7 @@ def test_composed_spawning_stack_end_to_end(backend):
     assert comp.can_spawn
 
     def final(backend):
-        geom = GridGeom(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1),
+        geom = Domain(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1),
                         cap=32)
         eng = Engine(geom=geom, behavior=comp, dt=0.1,
                      sweep_backend=backend)
@@ -186,7 +186,7 @@ def test_segment_runner_matches_per_step_drive(delta):
         beh = cell_clustering.behavior()
         cfg = DeltaConfig(enabled=delta, qdtype=jnp.int16,
                           refresh_interval=4)
-        geom = GridGeom(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+        geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
                         cap=24)
         eng = Engine(geom=geom, behavior=beh, delta_cfg=cfg, dt=0.1)
         rng = np.random.default_rng(0)
@@ -264,7 +264,7 @@ def test_one_pass_migration_conserves_through_diagonal_wrap():
                    radius=2.0,
                    params={"repulsion": 0.0, "adhesion": 0.0,
                            "same_type_only": 0.0, "max_step": 0.0})
-    geom = GridGeom(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1),
+    geom = Domain(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1),
                     cap=16, boundary="toroidal")
     eng = Engine(geom=geom, behavior=beh, dt=1.0)
     rng = np.random.default_rng(1)
