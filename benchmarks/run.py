@@ -11,7 +11,8 @@ Prints ``name,us_per_call,derived`` CSV rows:
                       evaluations/s and speedup vs the reference gather
                       (docs/performance.md explains how to read these);
                       sweep_3d_* repeats it on a 3-D Domain (27-offset
-                      stencil, no pallas row — the kernel factory is 2-D)
+                      stencil, incl. the pallas row — the kernel factory
+                      takes 3-D blocks)
   halo_bytes_3d     — 3-D aura-exchange wire bytes/iter (6 directed edges),
                       full f32 vs int16 delta
   sim_*             — paper Fig. 6 analogue: per-simulation iteration rate
@@ -22,6 +23,10 @@ Prints ``name,us_per_call,derived`` CSV rows:
                       (subprocess: needs >1 XLA host device); derived reports
                       agent_updates/s, parallel efficiency vs 1 device, and
                       halo bytes/iter
+  rebalance_uneven_* — §2.4.5 uneven ownership: per clustered workload the
+                      imbalance before / after-equal / after-rcb (the
+                      realized box-granular partition) vs the rcb_bound,
+                      plus the padded-grid memory overhead
   roofline_*        — LM stack: dry-run-derived roofline summary per chosen
                       cell (reads results/dryrun; skips if absent)
 
@@ -190,10 +195,10 @@ def bench_sweep():
 # ---------------------------------------------------------------------------
 
 def bench_sweep_3d():
-    """reference | tiled on a 3-D Domain (27-offset stencil).  The Pallas
-    kernel factory is 2-D, so there is no pallas row here — ``auto``
-    resolves to ``tiled`` for 3-D (docs/domains.md, Pallas fallback rule).
-    """
+    """reference | tiled | pallas on a 3-D Domain (27-offset stencil).
+    The kernel factory takes 3-D blocks since the uneven-ownership PR;
+    as in :func:`bench_sweep`, the pallas row runs the interpreter on CPU
+    (it tracks parity/plumbing, not Mosaic performance)."""
     from repro.core import Domain, Engine
     from repro.core.neighbors import sweep_accumulate
     from repro.sims import cell_clustering
@@ -214,17 +219,19 @@ def bench_sweep_3d():
     pairs = cells * geom.cap * 27 * geom.cap
 
     times = {}
-    for backend in ("reference", "tiled"):
+    for backend in ("reference", "tiled", "pallas"):
         fn = jax.jit(lambda soa, b=backend: sweep_accumulate(
             geom, soa, beh.pair_fn, beh.pair_attrs, beh.radius, beh.params,
             backend=b))
         jax.block_until_ready(fn(state.soa))     # compile
+        reps = 2 if backend == "pallas" else 5
         t = timeit(lambda: jax.block_until_ready(fn(state.soa)),
-                   n=5, warmup=1)
+                   n=reps, warmup=1)
         times[backend] = t
+        extra = "_interpret" if backend == "pallas" else ""
         emit(f"sweep_3d_{backend}", t,
              f"pairs_per_s={pairs / (t / 1e6):.3g}"
-             f"_speedup_vs_reference={times['reference'] / t:.2f}x")
+             f"_speedup_vs_reference={times['reference'] / t:.2f}x{extra}")
 
 
 # ---------------------------------------------------------------------------
@@ -416,6 +423,67 @@ print(f"rebalance_iter_rate,{dt1*1e6:.1f},"
     run_sub_bench(code, "rebalance_")
 
 
+def bench_rebalance_uneven():
+    """Uneven ownership on the clustered workloads: per workload the
+    imbalance before / after the equal-split plan / after the realized
+    box-granular RCB partition, plus the reported ``rcb_bound`` — the rows
+    that show the former plan-vs-realizable gap is closed (subprocess:
+    needs 4 XLA host devices)."""
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import time, numpy as np, jax
+from repro.core import total_agents
+from repro.core.reshard import (current_imbalance, occupancy_histogram,
+                                plan_reshard, reshard_state)
+
+def report(name, eng, state, n):
+    hist = occupancy_histogram(eng.geom, state)
+    imb0 = current_imbalance(eng.geom, state)
+    plan = plan_reshard(hist, eng.geom)
+    eng_eq, st_eq = reshard_state(eng, state, plan.mesh_shape)
+    imb_eq = current_imbalance(eng_eq.geom, st_eq)
+    assert total_agents(st_eq) == n
+    t0 = time.perf_counter()
+    eng_un, st_un = reshard_state(eng, state, partition=plan.partition)
+    t_mig = time.perf_counter() - t0
+    imb_un = current_imbalance(eng_un.geom, st_un)
+    assert total_agents(st_un) == n
+    rcb = plan.rcb_bound
+    within = imb_un <= rcb * 1.1 + 1e-9
+    print(f"rebalance_uneven_{name},{t_mig*1e6:.1f},"
+          f"imb={imb0:.2f}_after_equal={imb_eq:.2f}_after_rcb={imb_un:.2f}"
+          f"_rcb_bound={rcb:.2f}_within_10pct={within}"
+          f"_mesh={eng_un.geom.mesh_shape}"
+          f"_pad={eng_un.geom.partition.pad_fraction() if eng_un.geom.uneven else 0.0:.2f}"
+          .replace(" ", ""))
+
+# (a) cell_clustering: diagonal two-cluster Gaussian density on a 2x2 mesh
+from repro.sims import cell_clustering
+from repro.sims.common import init_agents, make_sim
+rng = np.random.default_rng(0)
+n = 600
+c = np.asarray([(8.0, 8.0), (24.0, 24.0)])[rng.integers(0, 2, n)]
+pos = np.clip(c + rng.normal(0, 3.0, (n, 2)), 0.5, 31.5).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, n).astype(np.int32)}
+sim = make_sim(cell_clustering.behavior(adhesion=0.3),
+               interior=(8, 8), mesh_shape=(2, 2), cap=64)
+init_agents(sim, pos, attrs, seed=0)
+sim.run(2)
+report("cell_clustering", sim.engine, sim.state, n)
+
+# (b) tumor_spheroid: off-center 3-D ball on a 2x2x1 mesh
+from repro.sims import tumor_spheroid
+sim3 = tumor_spheroid.simulation(
+    n_agents=60, mesh_shape=(2, 2, 1), interior=(6, 6, 12), cap=64,
+    center_frac=(0.3, 0.3, 0.3))
+sim3.run(2)
+report("tumor_spheroid", sim3.engine, sim3.state, sim3.n_agents())
+"""
+    run_sub_bench(code, "rebalance_uneven_")
+
+
 # ---------------------------------------------------------------------------
 # Facade overhead: Simulation.run vs the raw Engine.drive loop
 # ---------------------------------------------------------------------------
@@ -517,6 +585,7 @@ BENCHES = {
     "api_overhead": bench_api_overhead,
     "scaling": bench_scaling,
     "rebalance": bench_rebalance,
+    "rebalance_uneven": bench_rebalance_uneven,
     "roofline": bench_roofline,
 }
 

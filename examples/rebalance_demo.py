@@ -5,9 +5,15 @@ measured per-device step timing), pays one mass migration to a better mesh,
 and keeps simulating — ``sim.engine``/``sim.state`` stay consistent the
 whole way, with no stale engine handle to juggle.
 
-    PYTHONPATH=src python examples/rebalance_demo.py
+With ``--ownership rcb`` the re-shard realizes a box-granular *uneven*
+rectilinear partition (padded per-device grids + masked halo exchange)
+instead of an equal-split mesh — on this diagonal-cluster density it
+closes the remaining gap to the planner's box-granular bound.
+
+    PYTHONPATH=src python examples/rebalance_demo.py [--ownership rcb]
 """
 
+import argparse
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
@@ -20,12 +26,20 @@ from repro.sims import cell_clustering
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ownership", default="equal",
+                    choices=["equal", "rcb"],
+                    help="what the re-shard may realize: equal-split "
+                         "meshes or uneven RCB partitions")
+    args = ap.parse_args()
+
     # adhesion kept gentle and cap generous so the condensing clusters never
     # overflow a cell's slot capacity over the demo horizon
     sim = Simulation(
         dict(interior=(8, 8), mesh_shape=(2, 2), cap=64),
         cell_clustering.behavior(adhesion=0.3), dt=0.1,
-        rebalance=Rebalance(every=5, threshold=0.3, weighted=True))
+        rebalance=Rebalance(every=5, threshold=0.3, weighted=True,
+                            ownership=args.ownership))
 
     # Two diagonal Gaussian clusters: half the devices own almost nothing.
     rng = np.random.default_rng(0)
@@ -50,11 +64,20 @@ def main():
                   f"{rec['imbalance_after']:.2f}  "
                   f"(RCB bound {rec['rcb_bound']:.2f}, "
                   f"migration {rec['migration_s']*1e3:.0f} ms)")
+            if rec.get("partition_widths") is not None and rec["applied"] \
+                    and sim.engine.geom.uneven:
+                print(f"  uneven slab widths (cells): "
+                      f"{rec['partition_widths']}  padded-grid overhead "
+                      f"{rec['pad_fraction']*100:.0f}%")
 
-    print(f"final mesh {sim.engine.geom.mesh_shape}, imbalance = "
+    print(f"final mesh {sim.engine.geom.mesh_shape} "
+          f"({'uneven rcb' if sim.engine.geom.uneven else 'equal'} "
+          f"ownership), imbalance = "
           f"{current_imbalance(sim.geom, sim.state):.2f}, "
           f"agents {sim.n_agents()}/{n} "
           f"(capacity drops: {int(np.asarray(sim.state.dropped).sum())})")
+    if args.ownership == "rcb":
+        assert sim.engine.geom.uneven, "rcb run should land uneven"
 
 
 if __name__ == "__main__":

@@ -8,9 +8,15 @@ and a ``(1, 1, 2)`` spatial device mesh, sharding the tissue along z.  The
 halo exchange runs over all 6 directed edges with delta encoding, and the
 one-pass migration forwards corner migrants across all three axes.
 
-    PYTHONPATH=src python examples/spheroid_3d.py
+With ``--ownership rcb`` the spheroid seeds *off-center* (most of the
+tissue in one device's half) and the dynamic load balancer re-cuts the z
+axis into uneven slabs — box-granular RCB ownership on padded per-device
+grids with masked halo exchange (docs/load_balancing.md).
+
+    PYTHONPATH=src python examples/spheroid_3d.py [--ownership rcb]
 """
 
+import argparse
 import os
 
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
@@ -18,16 +24,32 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=2")
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import DeltaConfig
+from repro.core import DeltaConfig, Rebalance
 from repro.sims import tumor_spheroid
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ownership", default="equal",
+                    choices=["equal", "rcb"])
+    args = ap.parse_args()
+
     delta = DeltaConfig(enabled=True, qdtype=jnp.int16, refresh_interval=8)
+    rebalance = None
+    center_frac = None
+    if args.ownership == "rcb":
+        # off-center on EVERY axis: no equal split along any mesh
+        # factorization can balance, only an uneven cut through the ball
+        center_frac = (0.3, 0.3, 0.3)
+        rebalance = Rebalance(every=5, threshold=0.3, ownership="rcb")
     # identical model code as one device: only the Domain arguments differ —
     # the facade derives the (sx, sy, sz) device mesh from the geometry
+    # the off-center ball concentrates the proliferating tissue in a few
+    # cells: a generous cap keeps the densest cell from overflowing
     sim = tumor_spheroid.simulation(
-        n_agents=40, mesh_shape=(1, 1, 2), interior=(6, 6, 3), delta=delta)
+        n_agents=40, mesh_shape=(1, 1, 2), interior=(6, 6, 3), delta=delta,
+        rebalance=rebalance, center_frac=center_frac,
+        cap=64 if args.ownership == "rcb" else 32)
     n0 = sim.n_agents()
     d0 = tumor_spheroid.spheroid_diameter(sim.state)
     sim.run(15, collect=lambda s: (
@@ -45,6 +67,13 @@ def main():
           f"{sim.engine.geom.mesh_shape}, 6-edge delta-encoded aura "
           f"exchange ({int(sim.state.halo_bytes.ravel()[0])} wire "
           "bytes/iter), zero drops:", int(sim.state.dropped.sum()))
+    if args.ownership == "rcb":
+        applied = [r for r in sim.rebalancer.history if r["applied"]]
+        assert applied and sim.engine.geom.uneven, sim.rebalancer.history
+        print(f"uneven re-cut at it {applied[0]['it']}: z slab widths "
+              f"{sim.engine.geom.partition.widths[2]} (cells), imbalance "
+              f"{applied[0]['imbalance_before']:.2f} -> "
+              f"{applied[0]['imbalance_after']:.2f}")
     assert n1 > n0 and int(sim.state.dropped.sum()) == 0
 
 

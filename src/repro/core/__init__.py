@@ -9,6 +9,9 @@ Public API:
   Domain                   — N-D spatial spec: partitioning grid +
                              neighbor-search grid + per-axis boundaries
                              (2-D sheets and 3-D tissues; docs/domains.md)
+  Partition                — per-axis cut positions for uneven box-granular
+                             ownership (padded per-device grids + masked
+                             halo; docs/load_balancing.md)
   GridGeom                 — DEPRECATED 2-D constructor shim over Domain
   Behavior / compose       — model definition (pair kernel + update) and
                              the behavior-stacking composition algebra
@@ -22,7 +25,7 @@ from repro.core import operations
 from repro.core.agent_soa import AgentSchema, AgentSoA, GID_COUNT, GID_RANK, POS
 from repro.core.behaviors import Behavior, compose
 from repro.core.delta import DeltaConfig
-from repro.core.domain import Domain
+from repro.core.domain import Domain, Partition
 from repro.core.engine import Engine, SimState, total_agents
 from repro.core.grid import GridGeom
 from repro.core.reshard import Rebalancer
@@ -31,6 +34,7 @@ from repro.core.simulation import Checkpoint, Rebalance, Simulation
 __all__ = [
     "AgentSchema", "AgentSoA", "GID_COUNT", "GID_RANK", "POS",
     "Behavior", "compose", "Checkpoint", "DeltaConfig", "Domain", "Engine",
-    "SimState", "GridGeom", "Rebalance", "Rebalancer", "Simulation",
+    "Partition", "SimState", "GridGeom", "Rebalance", "Rebalancer",
+    "Simulation",
     "operations", "total_agents",
 ]

@@ -39,6 +39,8 @@ from repro.core.grid import (
     bin_agents,
     bin_agents_jit,
     clear_ring,
+    mask_unowned,
+    owned_mask,
     ring_index,
 )
 from repro.core.halo import (
@@ -158,9 +160,29 @@ class Engine:
                 f"{'x'.join(f'[0,{g})' for g in gsz)} — out-of-domain "
                 "agents would land in the halo ring and be destroyed by "
                 "the first aura rebuild")
-        lens = [i * geom.cell_size for i in geom.interior]
-        dev = [np.clip((positions[:, a] // lens[a]).astype(np.int64),
-                       0, mesh[a] - 1) for a in range(nd)]
+        part = geom.partition
+        if part is None:
+            lens = [i * geom.cell_size for i in geom.interior]
+            dev = [np.clip((positions[:, a] // lens[a]).astype(np.int64),
+                           0, mesh[a] - 1) for a in range(nd)]
+            origins = None
+            owned_w = None
+        else:
+            # uneven ownership: route each agent to the device whose cut
+            # slab contains its global cell along every axis
+            cell_idx = [np.clip(
+                (positions[:, a] // geom.cell_size).astype(np.int64),
+                0, geom.global_cells[a] - 1) for a in range(nd)]
+            dev = [np.clip(
+                np.searchsorted(np.asarray(part.cuts[a]), cell_idx[a],
+                                side="right") - 1,
+                0, mesh[a] - 1) for a in range(nd)]
+            # per-axis world-space slab starts, float64 -> float32 exactly
+            # as Domain.device_origin computes them
+            origins = [
+                (np.asarray(part.cuts[a][:-1], np.float64)
+                 * geom.cell_size).astype(np.float32) for a in range(nd)]
+            owned_w = part.widths
 
         bin_fn = partial(bin_agents_jit, geom)
 
@@ -209,9 +231,18 @@ class Engine:
                     a = np.asarray(attrs[name][sel], dtype=dtype)
                 flat[name] = jnp.asarray(a)
             valid = jnp.ones((n,), jnp.bool_)
-            origin = jnp.asarray(
-                [coords[a] * lens[a] for a in range(nd)], dtype=jnp.float32)
-            soa, dropped = bin_fn(flat, valid, origin)
+            if part is None:
+                origin = jnp.asarray(
+                    [coords[a] * lens[a] for a in range(nd)],
+                    dtype=jnp.float32)
+                soa, dropped = bin_fn(flat, valid, origin)
+            else:
+                origin = jnp.asarray(
+                    [origins[a][coords[a]] for a in range(nd)],
+                    dtype=jnp.float32)
+                soa, dropped = bin_fn(
+                    flat, valid, origin,
+                    tuple(owned_w[a][coords[a]] for a in range(nd)))
             if int(dropped) != 0:
                 raise ValueError(
                     f"cell capacity overflow at init on device {coords}: "
@@ -276,6 +307,11 @@ class Engine:
 
         coords = comm.coords()
         origin = geom.device_origin(coords)
+        # Per-axis owned slab widths under uneven ownership (None on the
+        # legacy equal split): every grid/halo/migration index below
+        # resolves against the owned extent, so padding cells never bin
+        # agents, never contribute pairs, and never emit halo slabs.
+        owned = geom.owned_widths(coords)
         lrank = comm.linear_rank()
 
         idx0 = (0,) * nd
@@ -288,9 +324,10 @@ class Engine:
         dropped = state.dropped[idx0]
 
         # 1. Aura update (rebuilt from scratch each iteration, §2.2.1).
-        soa = clear_ring(soa)
+        soa = clear_ring(soa) if owned is None \
+            else mask_unowned(soa, geom, owned)
         soa, refs, hbytes = halo_exchange(
-            geom, soa, comm, refs, self.delta_cfg, full_halo
+            geom, soa, comm, refs, self.delta_cfg, full_halo, owned
         )
 
         # 2. Local interaction (backend-dispatched fused sweep).
@@ -299,10 +336,16 @@ class Engine:
             backend=self.sweep_backend,
         )
 
-        # 3. Pointwise update on interior agents.
+        # 3. Pointwise update on interior agents.  Under uneven ownership
+        # the padded interior slice still contains this device's aura ring
+        # (at owned[a] + 1 <= interior[a]): those slots hold neighbor
+        # copies and must not be updated as residents, so the validity is
+        # masked down to the owned cells before the update runs.
         isl = tuple(slice(1, h - 1) for h in shape)
         int_attrs = {n: a[isl] for n, a in soa.attrs.items()}
         int_valid = soa.valid[isl]
+        if owned is not None:
+            int_valid = int_valid & owned_mask(geom, owned)[isl][..., None]
         step_key = jax.random.fold_in(jax.random.fold_in(key, it), lrank)
         new_attrs, alive, spawn, child_attrs = beh.update_fn(
             int_attrs, int_valid, acc, step_key, beh.params, self.dt
@@ -339,11 +382,11 @@ class Engine:
             flat = {n: jnp.concatenate([flat[n], child[n]]) for n in flat}
             fvalid = jnp.concatenate([fvalid, sflat])
 
-        soa2, d1 = bin_agents(geom, flat, fvalid, origin)
+        soa2, d1 = bin_agents(geom, flat, fvalid, origin, owned)
         dropped = dropped + d1
 
         # 5. Agent migration: dimension-ordered ring exchange over all axes.
-        soa3, d2 = self._migrate(soa2, comm, origin, lsz)
+        soa3, d2 = self._migrate(soa2, comm, origin, lsz, owned)
         dropped = dropped + d2
 
         # 6. Repack per-device state.
@@ -363,7 +406,7 @@ class Engine:
         )
 
     def _migrate(self, soa: AgentSoA, comm: Comm, origin: Array,
-                 lsz: Array) -> Tuple[AgentSoA, Array]:
+                 lsz: Array, owned=None) -> Tuple[AgentSoA, Array]:
         """Dimension-ordered emigrant routing with one-pass re-binning.
 
         Axis-0 faces (incl. corner cells) are exchanged first.  Diagonal
@@ -380,6 +423,15 @@ class Engine:
         cutting the sort-based binning passes per step from ``1 + ndim``
         (step re-bin + one per axis) to 2 (step re-bin + this one), in
         any dimensionality.
+
+        Under uneven ownership (``owned`` set) the migration ring along
+        axis ``a`` sits at the owned extent ``owned[a] + 1`` instead of the
+        padded edge ``h - 1`` — both the emigrant faces taken here and the
+        forwarded ring cells of pending slabs use that dynamic index
+        (rectilinear cuts make it the same on every device of an axis row).
+        The embedding coordinate of a forwarded block inside a widened
+        payload is only a placement slot (everything re-bins by *position*
+        in the final pass), so it stays at the static legacy coordinate.
         """
         geom = self.geom
         nd = geom.ndim
@@ -408,11 +460,15 @@ class Engine:
         pending = []
         for a in range(nd):
             h = shape[a]
+            # migration ring index along axis a: the padded edge on the
+            # equal split, the owned extent + 1 under uneven ownership
+            hi_idx = h - 1 if owned is None \
+                else jnp.asarray(owned[a], jnp.int32) + 1
             grid_axes = [c for c in range(nd) if c != a]
             face_grid = tuple(shape[c] for c in grid_axes)
 
             out_m = take_slab(soa, a, 0)
-            out_p = take_slab(soa, a, h - 1)
+            out_p = take_slab(soa, a, hi_idx)
 
             # Forward the axis-a ring cells of every pending slab inside
             # widened payloads, and invalidate them at their source.
@@ -421,9 +477,9 @@ class Engine:
                 p_axes = [c for c in range(nd) if c != b]
                 ap = p_axes.index(a)
                 lo = {n: v[ring_index(ap, 0)] for n, v in slab.items()}
-                hi = {n: v[ring_index(ap, h - 1)] for n, v in slab.items()}
+                hi = {n: v[ring_index(ap, hi_idx)] for n, v in slab.items()}
                 nv = slab["valid"].at[ring_index(ap, 0)].set(False) \
-                                  .at[ring_index(ap, h - 1)].set(False)
+                                  .at[ring_index(ap, hi_idx)].set(False)
                 fwd.append(({**slab, "valid": nv}, b, fb))
                 bpos = grid_axes.index(b)
                 blocks_m.append((lo, bpos, fb))
@@ -451,7 +507,7 @@ class Engine:
             recv_m = comm.shift(wrap_pos(widen(out_m, blocks_m)), a, -1)
 
             v = soa.valid.at[ring_index(a, 0)].set(False) \
-                         .at[ring_index(a, h - 1)].set(False)
+                         .at[ring_index(a, hi_idx)].set(False)
             soa = soa.replace(valid=v)
             # recv_p came from the -a neighbor -> sits at my a-cell 1;
             # recv_m from the +a neighbor -> my a-cell h-2.
@@ -462,7 +518,7 @@ class Engine:
         cat = {n: jnp.concatenate([base_attrs[n]] + [p[0][n] for p in parts])
                for n in base_attrs}
         catv = jnp.concatenate([base_valid] + [p[1] for p in parts])
-        return bin_agents(geom, cat, catv, origin)
+        return bin_agents(geom, cat, catv, origin, owned)
 
     # ------------------------------------------------------------------
     # Compiled step factories

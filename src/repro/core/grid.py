@@ -58,18 +58,28 @@ def GridGeom(
                   box_factor=box_factor)
 
 
-def cell_of(geom: Domain, pos: Array, origin: Array) -> Array:
+def cell_of(geom: Domain, pos: Array, origin: Array,
+            owned=None) -> Array:
     """Map world positions (N, ndim) to local cell coordinates (N, ndim)
     including the halo offset.
 
     Interior cells are [1, i_a] per axis; ring cells (0 or i_a + 1) hold
-    agents that have left the device's region and must migrate.
+    agents that have left the device's region and must migrate.  Under
+    uneven ownership ``owned`` carries the device's per-axis owned slab
+    widths and the clamp resolves against the *owned* extent instead: the
+    high migration ring sits at ``owned[a] + 1`` and padding cells beyond
+    it never bin agents.
     """
     rel = (pos - origin[None, :]) / jnp.float32(geom.cell_size)
     c = jnp.floor(rel).astype(jnp.int32) + 1
     shape = geom.local_shape
+    if owned is None:
+        return jnp.stack(
+            [jnp.clip(c[:, a], 0, shape[a] - 1) for a in range(geom.ndim)],
+            axis=1)
     return jnp.stack(
-        [jnp.clip(c[:, a], 0, shape[a] - 1) for a in range(geom.ndim)],
+        [jnp.clip(c[:, a], 0, jnp.asarray(owned[a], jnp.int32) + 1)
+         for a in range(geom.ndim)],
         axis=1)
 
 
@@ -88,6 +98,7 @@ def bin_agents(
     attrs: Dict[str, Array],
     valid: Array,
     origin: Array,
+    owned=None,
 ) -> Tuple[AgentSoA, Array]:
     """Capacity-bounded scatter of flat agents (N, ...) into the local
     cell-slot grid ``local_shape + (K, ...)``.
@@ -95,13 +106,15 @@ def bin_agents(
     Returns the binned SoA and the number of agents dropped due to cell
     overflow (must be asserted == 0 by callers at configuration time; tests
     enforce this — it is the analogue of the paper's fixed transmission
-    buffers being sized correctly).
+    buffers being sized correctly).  ``owned`` (per-axis owned widths)
+    switches the clamp to the uneven-ownership contract of
+    :func:`cell_of`.
     """
     shape = geom.local_shape
     cap = geom.cap
     n = valid.shape[0]
 
-    cell_id = ravel_cells(geom, cell_of(geom, attrs[POS], origin))
+    cell_id = ravel_cells(geom, cell_of(geom, attrs[POS], origin, owned))
     n_cells = math.prod(shape)
     # Invalid agents sort to a sentinel bucket past the last cell.
     key = jnp.where(valid, cell_id, n_cells)
@@ -141,15 +154,42 @@ def bin_agents(
 bin_agents_jit = jax.jit(bin_agents, static_argnames=("geom",))
 
 
-def rebin(geom: Domain, soa: AgentSoA, origin: Array) -> Tuple[AgentSoA, Array]:
+def rebin(geom: Domain, soa: AgentSoA, origin: Array,
+          owned=None) -> Tuple[AgentSoA, Array]:
     attrs, valid = flat_view(soa)
-    return bin_agents(geom, attrs, valid, origin)
+    return bin_agents(geom, attrs, valid, origin, owned)
 
 
 def interior_mask(geom: Domain) -> np.ndarray:
     m = np.zeros(geom.local_shape, dtype=bool)
     m[(slice(1, -1),) * geom.ndim] = True
     return m
+
+
+def owned_mask(geom: Domain, owned) -> Array:
+    """Boolean (local_shape) mask of this device's *owned* cells under
+    uneven ownership: local cells ``[1, owned[a]]`` per axis.  Ring cells
+    (index 0 and ``owned[a] + 1``) and padding cells (beyond the ring) are
+    False.  ``owned`` entries may be traced scalars (from ``comm.coords``).
+    """
+    shape = geom.local_shape
+    nd = geom.ndim
+    m = jnp.ones((), jnp.bool_)
+    for a, h in enumerate(shape):
+        i = jnp.arange(h, dtype=jnp.int32).reshape(
+            (h,) + (1,) * (nd - a - 1))
+        w = jnp.asarray(owned[a], jnp.int32)
+        m = m & (i >= 1) & (i <= w)
+    return jnp.broadcast_to(m, shape)
+
+
+def mask_unowned(soa: AgentSoA, geom: Domain, owned) -> AgentSoA:
+    """Uneven-ownership analogue of :func:`clear_ring`: invalidate every
+    slot outside the owned region — the rebuilt-from-scratch aura ring at
+    ``owned[a] + 1`` / 0 *and* the padding cells beyond it, which must
+    never hold agents."""
+    m = owned_mask(geom, owned)
+    return soa.replace(valid=soa.valid & m[..., None])
 
 
 def ring_index(axis: int, index) -> Tuple:

@@ -195,6 +195,7 @@ def halo_exchange(
     refs: Dict[str, Slab],
     cfg: DeltaConfig,
     full: bool,
+    owned=None,
 ) -> Tuple[AgentSoA, Dict[str, Slab], Array]:
     """Rebuild the aura ring from neighbor devices' boundary cells.
 
@@ -204,6 +205,17 @@ def halo_exchange(
     ``d + "_out"`` (what I last sent that way, receiver-reconstructed) and
     ``d + "_in"`` (what I last received from that way).  Closed-loop
     invariant: my ``xp_out`` equals my +x neighbor's ``xm_in``.
+
+    Under uneven ownership (``owned`` = per-axis owned widths, possibly
+    traced) each device sends the *true* boundary hyperplane of its uneven
+    block — the last owned cell ``owned[a]`` — and receives into its own
+    aura ring at ``owned[a] + 1``; the low side is uniform (first owned
+    cell is always local index 1).  Slab shapes stay static and identical
+    across devices (full padded hyperplanes; slots beyond a sender's
+    cross-axis owned widths are simply invalid), so ``ppermute`` and the
+    per-edge delta references work unchanged.  Rectilinear partitions
+    guarantee neighbors along an axis share their cross-axis widths, so
+    sent boundary cells land aligned with the receiver's own grid.
     """
     shape = geom.local_shape
     new_refs = dict(refs)
@@ -225,10 +237,15 @@ def halo_exchange(
     for axis in range(geom.ndim):
         h = shape[axis]
         c = AXIS_CHARS[axis]
+        if owned is None:
+            hi_src, hi_dst = h - 2, h - 1
+        else:
+            w = jnp.asarray(owned[axis], jnp.int32)
+            hi_src, hi_dst = w, w + 1
         # my high face -> +axis neighbor's low ring, and vice versa
-        soa, b = _exchange(soa, axis, h - 2, 0, +1, c + "p_out", c + "m_in")
+        soa, b = _exchange(soa, axis, hi_src, 0, +1, c + "p_out", c + "m_in")
         nbytes += b
-        soa, b = _exchange(soa, axis, 1, h - 1, -1, c + "m_out", c + "p_in")
+        soa, b = _exchange(soa, axis, 1, hi_dst, -1, c + "m_out", c + "p_in")
         nbytes += b
     return soa, new_refs, jnp.int32(nbytes)
 

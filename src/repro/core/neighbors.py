@@ -13,14 +13,13 @@ Three interchangeable backends compute the same per-agent accumulator sums
 * ``"tiled"`` — :func:`pair_accumulate_tiled`: loops over the 3^D cell
   offsets with (K, K) pair tiles built from plain array *slices*, so no
   neighborhood gather is ever materialized and XLA fuses each tile's
-  slice->compute->mask chain.  This is the fast path on CPU/GPU backends
-  and the only non-reference path for 3-D domains.
+  slice->compute->mask chain.  This is the fast path on CPU/GPU backends.
 * ``"pallas"`` — the generic Pallas kernel factory in
   :mod:`repro.kernels.neighbor_interaction`: the gather stays in XLA (cheap
   data movement), and one VMEM-resident program per block of cells evaluates
-  the full pair block with VPU-vectorized masked arithmetic — the TPU path.
-  The kernel factory is 2-D; ``"auto"`` therefore falls back to ``tiled``
-  whenever ``ndim == 3`` (docs/domains.md, "Pallas fallback rule").
+  the full pair block with VPU-vectorized masked arithmetic — the TPU path
+  for 2-D *and* 3-D domains (the factory flattens the cell grid, so the
+  27-offset stencil only widens the neighborhood slab to 27K).
 
 All backends share the masking semantics: invalid slots, self-pairs (by
 global id), and pairs beyond the interaction radius contribute zero.
@@ -62,22 +61,20 @@ PairFn = Callable[[Dict[str, Array], Dict[str, Array], Array, Array, dict],
 
 
 def resolve_sweep_backend(backend: str = "auto", ndim: int = 2) -> str:
-    """Resolve the ``"auto"`` sweep backend for the current JAX backend and
-    spatial dimensionality: the Pallas kernel on TPU for 2-D domains, the
-    tiled XLA sweep everywhere else (the Pallas kernel factory is 2-D, so
-    3-D domains fall back to ``tiled`` even on TPU)."""
+    """Resolve the ``"auto"`` sweep backend for the current JAX backend:
+    the fused Pallas kernel on TPU (2-D *and* 3-D domains — the kernel
+    factory flattens cell blocks, so the ``3**ndim`` stencil only changes
+    the neighborhood slab width), the tiled XLA sweep everywhere else.
+
+    ``ndim`` is kept for call-site compatibility: resolution has been
+    dimension-independent since the factory gained 3-D blocks (it would
+    matter again only if a dimensionality ever lost its kernel path)."""
     if backend in (None, "auto"):
-        if ndim != 2:
-            return "tiled"
         return "pallas" if jax.default_backend() == "tpu" else "tiled"
     if backend not in SWEEP_BACKENDS:
         raise ValueError(
             f"unknown sweep backend {backend!r}; expected 'auto' or one of "
             f"{SWEEP_BACKENDS}")
-    if backend == "pallas" and ndim != 2:
-        raise ValueError(
-            "the Pallas sweep kernel factory is 2-D; use 'tiled' (or "
-            "'auto', which falls back to it) for 3-D domains")
     return backend
 
 
@@ -254,27 +251,29 @@ def pair_accumulate_pallas(
     block_cells: Optional[int] = None,
     interpret: Optional[bool] = None,
 ) -> Dict[str, Array]:
-    """Pallas-kernel sweep (2-D domains): XLA builds the neighborhood gather
-    (pure data movement), then one fused kernel program per block of cells
-    evaluates every pair kernel for its (BC, K) x (BC, 9K) slabs in VMEM.
+    """Pallas-kernel sweep (2-D and 3-D domains): XLA builds the
+    neighborhood gather (pure data movement), then one fused kernel program
+    per block of cells evaluates every pair kernel for its (BC, K) x
+    (BC, 3^D K) slabs in VMEM — the kernel factory flattens the interior
+    cell grid, so dimensionality only changes the neighborhood slab width
+    (9K -> 27K) and the ``pos`` trailing dim.
 
     ``interpret=None`` auto-detects from the JAX backend
     (``kernels.ops.use_interpret``); on TPU the same kernel compiles to
     Mosaic.
     """
+    import math as _math
+
     from repro.kernels import ops as kops
 
-    if geom.ndim != 2:
-        raise ValueError(
-            "pair_accumulate_pallas supports 2-D domains only; use the "
-            "tiled backend for 3-D")
-    ix, iy = geom.interior
+    nd = geom.ndim
     k = geom.cap
-    c = ix * iy
-    nk = (3 ** geom.ndim) * k
+    c = _math.prod(geom.interior)
+    nk = (3 ** nd) * k
     self_a, nbr_a, self_v, nbr_v = gather_neighborhood(geom, soa, pair_attrs)
-    flat_i = {n: a.reshape((c, k) + a.shape[3:]) for n, a in self_a.items()}
-    flat_j = {n: a.reshape((c, nk) + a.shape[3:])
+    flat_i = {n: a.reshape((c, k) + a.shape[nd + 1:])
+              for n, a in self_a.items()}
+    flat_j = {n: a.reshape((c, nk) + a.shape[nd + 1:])
               for n, a in nbr_a.items()}
     tor = geom.toroidal
     box = (tuple(L if t else None
@@ -284,7 +283,8 @@ def pair_accumulate_pallas(
         flat_i, flat_j, self_v.reshape((c, k)), nbr_v.reshape((c, nk)),
         pair_fn=pair_fn, radius=radius, params=params, box=box,
         block_cells=block_cells, interpret=interpret)
-    return {n: a.reshape((ix, iy, k) + a.shape[2:]) for n, a in acc.items()}
+    return {n: a.reshape(geom.interior + (k,) + a.shape[2:])
+            for n, a in acc.items()}
 
 
 def sweep_accumulate(

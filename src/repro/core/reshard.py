@@ -12,8 +12,9 @@ load balancing at *re-shard boundaries* (DESIGN note in core.load_balance):
    paper weights boxes by the owning rank's last-iteration runtime).
 2. :class:`Rebalancer` checks ``imbalance()`` at a configurable cadence
    inside ``Engine.run``/``Engine.drive``; past a threshold it consults the
-   planners (``choose_mesh_shape`` for the realizable plan, ``plan_rcb`` /
-   ``plan_diffusive`` as box-granular bounds) and triggers a re-shard.
+   planners (``choose_partition`` for the realizable plan — equal-split or
+   box-granular uneven per its ``ownership`` knob; ``plan_rcb`` /
+   ``plan_diffusive`` as reported bounds) and triggers a re-shard.
 3. The mass migration is paid exactly once per re-shard:
    ``flatten_state`` gathers every live agent to host, ``reshard_state``
    re-derives the :class:`Domain` (new mesh shape, new device origins) and
@@ -24,13 +25,19 @@ load balancing at *re-shard boundaries* (DESIGN note in core.load_balance):
    ``full_halo=True`` on the next step).
 
 Realizability note: the engine shards one uniform SoA over an N-D spatial
-device mesh, so the *realizable* plans are the equal-split factorizations
-scanned by ``choose_mesh_shape``; ``plan_rcb``'s box-granular ownership maps
-are reported alongside as the achievable lower bound (closing that gap needs
-padded unequal blocks + masked halo — tracked in ROADMAP.md).  The same
-flatten→plan→re-init path makes the engine *elastic*: restoring a
-checkpoint onto a different device count is a re-shard whose histogram comes
-from the checkpoint (distributed.elastic.elastic_restore_abm).
+device mesh.  Realizable plans are the equal-split factorizations AND —
+since the uneven-ownership refactor — box-granular rectilinear partitions
+(``Rebalancer(ownership="rcb")``): per-axis cut positions realized with
+padded per-device grids and masked halo exchange (``Partition`` on
+``Domain``, docs/load_balancing.md).  ``plan_rcb``'s *hierarchical*
+ownership maps remain report-only bounds (their per-half independent cuts
+have no aligned ``ppermute`` realization); the ``rebalance_uneven_*``
+bench rows show the realized rectilinear cuts matching or beating them on
+the clustered workloads.  The same flatten→plan→re-init path makes the
+engine *elastic*: restoring a checkpoint onto a different device count is
+a re-shard whose histogram comes from the checkpoint
+(distributed.elastic.elastic_restore_abm) — and it re-cuts uneven when
+the checkpointed run was uneven.
 """
 
 from __future__ import annotations
@@ -44,13 +51,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.agent_soa import GID_COUNT, GID_RANK, POS
-from repro.core.domain import Domain
+from repro.core.domain import Domain, Partition
 from repro.core.engine import Engine, SimState
 from repro.core.load_balance import (
-    choose_mesh_shape,
+    choose_partition,
     device_loads,
     equal_split_loads,
     imbalance,
+    partition_loads,
     plan_diffusive,
     plan_rcb,
     widths_to_ownership,
@@ -90,6 +98,77 @@ def _interior_blocks(geom: Domain, arr: np.ndarray) -> np.ndarray:
     return a[sl]
 
 
+def _owned_valid_blocks(geom: Domain, valid) -> np.ndarray:
+    """Interleaved interior validity with, under uneven ownership, every
+    slot outside a device's owned widths zeroed: the padded interior still
+    contains the aura ring (at interior index ``owned[a]``) and padding
+    cells, which hold neighbor copies / nothing and must be excluded from
+    any global reduction exactly like the equal split's ring cells."""
+    blocks = np.array(_interior_blocks(geom, valid))
+    if geom.uneven:
+        widths = geom.partition.widths
+        for a in range(geom.ndim):
+            for ci, w in enumerate(widths[a]):
+                sl = [slice(None)] * blocks.ndim
+                sl[2 * a] = ci
+                sl[2 * a + 1] = slice(w, None)
+                blocks[tuple(sl)] = False
+    return blocks
+
+
+def _assemble_global(geom: Domain, interleaved: np.ndarray) -> np.ndarray:
+    """Interleaved per-device owned data -> the true global cell grid.  On
+    the equal split this is the legacy contiguous reshape; under uneven
+    ownership each device's owned slab lands at its cut positions (padding
+    is dropped), so downstream box reductions respect the cuts."""
+    nd = geom.ndim
+    trailing = interleaved.shape[2 * nd:]
+    if not geom.uneven:
+        return interleaved.reshape(geom.global_cells + trailing)
+    part = geom.partition
+    out = np.zeros(geom.global_cells + trailing, dtype=interleaved.dtype)
+    for coords in np.ndindex(*geom.mesh_shape):
+        src: Tuple = ()
+        dst: Tuple = ()
+        for a in range(nd):
+            lo, hi = part.cuts[a][coords[a]], part.cuts[a][coords[a] + 1]
+            src += (coords[a], slice(0, hi - lo))
+            dst += (slice(lo, hi),)
+        out[dst] = interleaved[src]
+    return out
+
+
+def _per_device_sums(geom: Domain, arr: np.ndarray) -> np.ndarray:
+    """Global cell grid -> per-device sums (``mesh_shape``), respecting
+    cut positions under uneven ownership."""
+    if not geom.uneven:
+        return np.asarray(arr).reshape(_interleaved_shape(geom)).sum(
+            axis=_interior_axes(geom))
+    part = geom.partition
+    out = np.zeros(geom.mesh_shape, dtype=np.float64)
+    for coords in np.ndindex(*geom.mesh_shape):
+        sl = tuple(
+            slice(part.cuts[a][coords[a]], part.cuts[a][coords[a] + 1])
+            for a in range(geom.ndim))
+        out[coords] = np.asarray(arr)[sl].sum()
+    return out
+
+
+def realized_loads(geom: Domain, hist: np.ndarray) -> np.ndarray:
+    """Per-device loads of the *live* ownership over a box histogram —
+    equal-split blocks, or the Domain's Partition cuts when uneven."""
+    if geom.uneven:
+        bf = geom.box_factor
+        cuts = geom.partition.cuts
+        if any(v % bf for c in cuts for v in c):
+            raise ValueError(
+                f"partition cuts {cuts} are not aligned to box_factor {bf}")
+        return partition_loads(
+            hist, Partition(cuts=tuple(tuple(v // bf for v in c)
+                                       for c in cuts)))
+    return equal_split_loads(hist, geom.mesh_shape)
+
+
 def occupancy_histogram(
     geom: Domain,
     state: SimState,
@@ -105,7 +184,7 @@ def occupancy_histogram(
     then weighs more than one full of cheap agents.
     """
     nd = geom.ndim
-    counts = _interior_blocks(geom, state.soa.valid).sum(axis=-1)
+    counts = _owned_valid_blocks(geom, state.soa.valid).sum(axis=-1)
     if runtimes is not None:
         rt = np.asarray(runtimes, np.float64).reshape(geom.mesh_shape)
         dev_counts = counts.sum(axis=_interior_axes(geom))
@@ -119,7 +198,7 @@ def occupancy_histogram(
         # (empty devices contribute nothing, so they cannot skew the scale)
         if counts.sum() > 0:
             counts = counts * (total / counts.sum())
-    cells = counts.reshape(geom.global_cells)
+    cells = _assemble_global(geom, counts)
     bf = geom.box_factor
     boxed: Tuple[int, ...] = ()
     for b in geom.box_grid:
@@ -130,9 +209,10 @@ def occupancy_histogram(
 
 def current_imbalance(geom: Domain, state: SimState,
                       runtimes: Optional[np.ndarray] = None) -> float:
-    """``imbalance()`` of the live equal-split partition."""
+    """``imbalance()`` of the live ownership (equal split or the Domain's
+    uneven Partition)."""
     hist = occupancy_histogram(geom, state, runtimes)
-    return imbalance(equal_split_loads(hist, geom.mesh_shape))
+    return imbalance(realized_loads(geom, hist))
 
 
 def estimate_device_runtimes(geom: Domain, state: SimState,
@@ -156,15 +236,14 @@ def estimate_device_runtimes(geom: Domain, state: SimState,
     ``Rebalancer.runtimes`` / ``occupancy_histogram(..., runtimes=...)``.
     """
     nd = geom.ndim
-    occ = _interior_blocks(geom, state.soa.valid).sum(axis=-1)
-    cells = occ.reshape(geom.global_cells).astype(np.float64)
+    occ = _owned_valid_blocks(geom, state.soa.valid).sum(axis=-1)
+    cells = _assemble_global(geom, occ).astype(np.float64)
     padded = np.pad(cells, 1)
     nbhd = sum(
         padded[tuple(slice(1 + o, 1 + o + s)
                      for o, s in zip(off, cells.shape))]
         for off in itertools.product((-1, 0, 1), repeat=nd))
-    work = (cells * nbhd).reshape(_interleaved_shape(geom)).sum(
-        axis=_interior_axes(geom))
+    work = _per_device_sums(geom, cells * nbhd)
     total = work.sum()
     if total <= 0:
         return np.full(geom.mesh_shape,
@@ -185,6 +264,8 @@ class ReshardPlan:
     current: float                     # imbalance of the live partition
     rcb_bound: Optional[float]         # box-granular RCB imbalance (lower bound)
     diffusive_bound: Optional[float]   # 1-D diffusive-step imbalance, if 1-D
+    partition: Optional[Partition] = None   # uneven plan, cuts in CELLS
+    partition_imbalance: Optional[float] = None
 
 
 def plan_reshard(
@@ -195,21 +276,51 @@ def plan_reshard(
 ) -> ReshardPlan:
     """Run all applicable planners over a box histogram.
 
-    ``choose_mesh_shape`` gives the realizable equal-split plan; ``plan_rcb``
-    (power-of-two counts) gives the box-granular bound the mesh plan is
-    measured against; for chain meshes (all but one axis of size 1) one
-    ``plan_diffusive`` step over the chain-axis marginal is evaluated too
-    (using measured runtimes when given, else the column loads as the
-    runtime proxy).
+    ``choose_partition(..., "equal")`` gives the realizable equal-split
+    plan; ``choose_partition(..., "rcb")`` cuts a box-granular rectilinear
+    partition (the uneven-ownership plan the engine can now realize with
+    padded grids + masked halo); ``plan_rcb`` (power-of-two counts) gives
+    the hierarchical-bisection bound both are measured against; for chain
+    meshes (all but one axis of size 1) one ``plan_diffusive`` step over
+    the chain-axis marginal is evaluated too (using measured runtimes when
+    given, else the column loads as the runtime proxy).
     """
     mesh = geom.mesh_shape
     n = n_devices if n_devices is not None else geom.n_devices
-    divisible = all(b % m == 0 for b, m in zip(hist.shape, mesh))
-    cur = imbalance(equal_split_loads(hist, mesh)) if divisible \
-        else float("inf")
+    if geom.uneven:
+        cur = imbalance(realized_loads(geom, hist))
+    else:
+        divisible = all(b % m == 0 for b, m in zip(hist.shape, mesh))
+        cur = imbalance(equal_split_loads(hist, mesh)) if divisible \
+            else float("inf")
 
-    target = choose_mesh_shape(hist, n)
-    planned = imbalance(equal_split_loads(hist, target))
+    # Either planner alone may have no valid plan (no factorization
+    # divides the box grid for "equal"; more devices than boxes on every
+    # factorization for "rcb") — each failure is recorded as inf, and only
+    # when BOTH fail is there nothing realizable to report.
+    eq_err = None
+    target = None
+    planned = float("inf")
+    try:
+        eq_plan = choose_partition(hist, n, ownership="equal")
+        target = eq_plan.mesh_shape
+        planned = eq_plan.imbalance
+    except ValueError as e:
+        eq_err = e
+
+    part_cells = None
+    part_imb = None
+    try:
+        uneven_plan = choose_partition(hist, n, ownership="rcb")
+        part_cells = uneven_plan.partition.scale(geom.box_factor)
+        part_imb = uneven_plan.imbalance
+    except ValueError:
+        pass
+    if eq_err is not None:
+        if part_cells is None:
+            raise eq_err
+        if target is None:
+            target = part_cells.mesh_shape   # best realizable mesh overall
 
     rcb_bound = None
     if n & (n - 1) == 0:
@@ -218,7 +329,8 @@ def plan_reshard(
 
     diff_bound = None
     is_chain = n > 1 and sum(m > 1 for m in mesh) == 1
-    if is_chain and n == geom.n_devices and cur != float("inf"):
+    if (is_chain and n == geom.n_devices and not geom.uneven
+            and cur != float("inf")):
         chain = int(np.argmax(mesh))
         d = mesh[chain]
         col_w = hist.sum(axis=tuple(a for a in range(hist.ndim)
@@ -234,7 +346,8 @@ def plan_reshard(
             diff_bound = imbalance(loads)
 
     return ReshardPlan(mesh_shape=target, imbalance=planned, current=cur,
-                       rcb_bound=rcb_bound, diffusive_bound=diff_bound)
+                       rcb_bound=rcb_bound, diffusive_bound=diff_bound,
+                       partition=part_cells, partition_imbalance=part_imb)
 
 
 # ---------------------------------------------------------------------------
@@ -255,10 +368,11 @@ class FlatAgents:
 
 
 def flatten_state(geom: Domain, state: SimState) -> FlatAgents:
-    """Gather every live agent (interior cells only — the aura ring holds
-    copies) plus the engine carry needed to re-initialize elsewhere."""
+    """Gather every live agent (owned interior cells only — the aura ring
+    and, under uneven ownership, the padding cells hold copies/nothing)
+    plus the engine carry needed to re-initialize elsewhere."""
     nd = geom.ndim
-    valid = _interior_blocks(geom, state.soa.valid).ravel()
+    valid = _owned_valid_blocks(geom, state.soa.valid).ravel()
     attrs = {}
     for name, a in state.soa.attrs.items():
         blocks = _interior_blocks(geom, a)
@@ -276,9 +390,13 @@ def flatten_state(geom: Domain, state: SimState) -> FlatAgents:
 
 
 def reshard_state(
-    engine: Engine, state: SimState, mesh_shape: Tuple[int, ...]
+    engine: Engine, state: SimState,
+    mesh_shape: Optional[Tuple[int, ...]] = None,
+    partition: Optional[Partition] = None,
 ) -> Tuple[Engine, SimState]:
-    """Mass-migrate ``state`` onto a new device mesh.
+    """Mass-migrate ``state`` onto a new device mesh — an equal split over
+    ``mesh_shape``, or the uneven box-granular ``partition`` (cuts in
+    cells; the per-device grids pad to the partition's max slab widths).
 
     Preserved across the re-shard: global agent ids, per-rank spawn-counter
     floors (so future spawns never collide with any id ever issued), the
@@ -287,8 +405,15 @@ def reshard_state(
     count.  Delta references are re-zeroed — callers must run the next step
     with ``full_halo=True``.
     """
+    if (mesh_shape is None) == (partition is None):
+        raise ValueError(
+            "reshard_state takes exactly one of mesh_shape (equal split) "
+            "or partition (uneven ownership)")
     flat = flatten_state(engine.geom, state)
-    new_geom = engine.geom.with_mesh_shape(mesh_shape)
+    if partition is not None:
+        new_geom = engine.geom.repartition(partition)
+    else:
+        new_geom = engine.geom.with_mesh_shape(mesh_shape)
     new_engine = dataclasses.replace(engine, geom=new_geom)
     new_state = new_engine.init_state(
         flat.positions,
@@ -323,18 +448,29 @@ class Rebalancer:
     Every ``every`` iterations the occupancy histogram is extracted; when
     the live partition's ``imbalance()`` exceeds ``threshold`` and the best
     realizable plan improves it by at least ``min_gain``x, the state is
-    re-sharded in place.  ``history`` records every decision (both applied
-    and declined) with the planner diagnostics; ``engine`` always points at
-    the engine matching the latest state.
+    re-sharded in place.  ``ownership`` selects what the planner may
+    realize: ``"equal"`` (historical equal-split meshes only) or ``"rcb"``
+    (box-granular rectilinear partitions on padded per-device grids with
+    masked halo exchange — the live analogue of the RCB bound).
+    ``history`` records every decision (both applied and declined) with
+    the planner diagnostics; ``engine`` always points at the engine
+    matching the latest state.
     """
 
     every: int = 10
     threshold: float = 0.5
     min_gain: float = 1.5
+    ownership: str = "equal"
     make_step: Callable[[Engine], Callable] = default_make_step
     runtimes: Optional[np.ndarray] = None   # optional measured per-device times
     engine: Optional[Engine] = None
     history: List[dict] = dataclasses.field(default_factory=list)
+
+    def __post_init__(self):
+        if self.ownership not in ("equal", "rcb"):
+            raise ValueError(
+                f"unknown ownership {self.ownership!r}; expected 'equal' "
+                "or 'rcb'")
 
     def due(self, i: int) -> bool:
         return self.every > 0 and i % self.every == 0
@@ -351,12 +487,16 @@ class Rebalancer:
         # a box grid coarser than the mesh (large box_factor) has no
         # per-device load reading: treat as maximally imbalanced and let the
         # planner look for a factorization the box grid does support
-        cur = (imbalance(equal_split_loads(hist, mesh))
-               if all(b % m == 0 for b, m in zip(hist.shape, mesh))
-               else float("inf"))
+        if engine.geom.uneven:
+            cur = imbalance(realized_loads(engine.geom, hist))
+        else:
+            cur = (imbalance(equal_split_loads(hist, mesh))
+                   if all(b % m == 0 for b, m in zip(hist.shape, mesh))
+                   else float("inf"))
         record = {
             "it": int(np.max(np.asarray(state.it))),
             "mesh_from": engine.geom.mesh_shape,
+            "ownership": self.ownership,
             "imbalance_before": cur,
             "applied": False,
         }
@@ -376,17 +516,36 @@ class Rebalancer:
             imbalance_planned=plan.imbalance,
             rcb_bound=plan.rcb_bound,
             diffusive_bound=plan.diffusive_bound,
+            partition_imbalance=plan.partition_imbalance,
         )
-        no_improvement = (
-            plan.mesh_shape == engine.geom.mesh_shape
-            or cur < plan.imbalance * self.min_gain
-        )
+        uneven = (self.ownership == "rcb" and plan.partition is not None)
+        if uneven:
+            # realize the box-granular cut plan on padded grids
+            target_imb = plan.partition_imbalance
+            new_geom = engine.geom.repartition(plan.partition)
+            record.update(
+                mesh_to=plan.partition.mesh_shape,
+                partition_widths=plan.partition.widths,
+                pad_fraction=plan.partition.pad_fraction(),
+            )
+            no_improvement = (new_geom == engine.geom
+                              or cur < target_imb * self.min_gain)
+        else:
+            no_improvement = (
+                plan.mesh_shape == engine.geom.mesh_shape
+                and not engine.geom.uneven
+            ) or cur < plan.imbalance * self.min_gain
         if no_improvement:
             self.history.append(record)
             return engine, state, False
 
         t0 = time.perf_counter()
-        new_engine, new_state = reshard_state(engine, state, plan.mesh_shape)
+        if uneven:
+            new_engine, new_state = reshard_state(
+                engine, state, partition=plan.partition)
+        else:
+            new_engine, new_state = reshard_state(
+                engine, state, plan.mesh_shape)
         record.update(
             applied=True,
             migration_s=time.perf_counter() - t0,

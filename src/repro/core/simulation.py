@@ -63,12 +63,20 @@ class Rebalance:
     Weighted checks are deferred until a measurement exists, so the first
     one runs at iteration ``every`` rather than 0 (unweighted checks keep
     the iteration-0 check, matching ``Engine.drive``).
+
+    ``ownership`` selects what a triggered re-shard may realize:
+    ``"equal"`` keeps the historical equal-split mesh factorizations;
+    ``"rcb"`` lets the planner cut box-granular *uneven* rectilinear
+    partitions (padded per-device grids + masked halo exchange,
+    docs/load_balancing.md), closing the gap to the reported RCB bound on
+    clustered densities.
     """
 
     every: int = 10
     threshold: float = 0.5
     min_gain: float = 1.5
     weighted: bool = False
+    ownership: str = "equal"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -143,7 +151,8 @@ class Simulation:
         if rebalance is not None and rebalance.every > 0:
             self.rebalancer = Rebalancer(
                 every=rebalance.every, threshold=rebalance.threshold,
-                min_gain=rebalance.min_gain)
+                min_gain=rebalance.min_gain,
+                ownership=rebalance.ownership)
             self._ops.append(Operation(
                 fn=Simulation._maybe_rebalance, every=rebalance.every,
                 name="rebalance", pre=True, record=False))
@@ -370,16 +379,19 @@ class Simulation:
                 dt: Optional[float] = None,
                 rebalance: Union[Rebalance, int, None] = None,
                 checkpoint: Union[Checkpoint, str, None] = None,
+                ownership: Optional[str] = None,
                 ) -> "Simulation":
         """Elastic restore: rebuild a facade from a logical checkpoint onto
-        the current (possibly different) device count."""
+        the current (possibly different) device count.  ``ownership``
+        selects how the new device count is cut (``"equal"`` | ``"rcb"``);
+        ``None`` keeps the checkpointed run's ownership mode."""
         from repro.distributed.elastic import elastic_restore_abm
         if not isinstance(behaviors, Behavior):
             behs = tuple(behaviors)
             behaviors = behs[0] if len(behs) == 1 else compose(*behs)
         engine, state, _ = elastic_restore_abm(
             ckpt_dir, behaviors, n_devices=n_devices, delta_cfg=delta,
-            dt=dt)
+            dt=dt, ownership=ownership)
         sim = cls(engine.geom, behaviors, delta=delta or engine.delta_cfg,
                   dt=engine.dt, rebalance=rebalance, checkpoint=checkpoint)
         return sim.with_state(engine, state)

@@ -140,6 +140,14 @@ def save_abm(ckpt_dir: str, step: int, engine, state,
         "box_factor": int(geom.box_factor),
         "dt": float(engine.dt),
         "attr_names": sorted(flat.attrs),
+        # uneven-ownership provenance: the live cut positions (cells) and
+        # the ownership mode a restore should re-cut with.  Restore never
+        # reuses the cuts verbatim — the device count may differ — it cuts
+        # a FRESH plan from the stored histogram (elastic_restore_abm);
+        # legacy checkpoints without these keys restore as "equal".
+        "partition": ([list(c) for c in geom.partition.cuts]
+                      if geom.uneven else None),
+        "ownership": "rcb" if geom.uneven else "equal",
     }
     return save(ckpt_dir, step, tree,
                 extras={"abm": abm_meta, **(extras or {})}, keep=keep)

@@ -44,15 +44,21 @@ def elastic_restore_abm(ckpt_dir: str, behavior, *,
                         step: Optional[int] = None,
                         delta_cfg=None, dt: Optional[float] = None,
                         rebalance_every: int = 0,
-                        imbalance_threshold: float = 0.5):
+                        imbalance_threshold: float = 0.5,
+                        ownership: Optional[str] = None):
     """Restore an ABM checkpoint (checkpoint.save_abm) onto the *current*
     device population — the ABM half of the elastic protocol.
 
     The checkpoint stores mesh-independent flattened agents plus the
-    occupancy histogram; ``choose_mesh_shape`` picks the least-imbalanced
-    mesh factorization of the surviving device count over that histogram
-    (2-D or 3-D, per the checkpointed Domain), the :class:`Domain` is
-    re-derived for it, and the state is re-initialized through the same
+    occupancy histogram; ``choose_partition`` cuts a fresh plan for the
+    surviving device count over that histogram (2-D or 3-D, per the
+    checkpointed Domain): the least-imbalanced equal-split factorization
+    for ``ownership="equal"``, or a box-granular uneven rectilinear
+    partition for ``ownership="rcb"`` (padded per-device grids + masked
+    halo).  ``ownership=None`` keeps the checkpointed run's mode, so an
+    uneven run restores uneven on a different device count without the
+    caller restating the policy.  The :class:`Domain` is re-derived for
+    the plan and the state is re-initialized through the same
     mass-migration path the mid-run re-shard uses — global agent ids,
     spawn-counter floors, the iteration counter, and the RNG lineage all
     carry over.
@@ -66,24 +72,36 @@ def elastic_restore_abm(ckpt_dir: str, behavior, *,
 
     from repro.core.domain import Domain
     from repro.core.engine import Engine
-    from repro.core.load_balance import choose_mesh_shape
+    from repro.core.load_balance import choose_partition
     from repro.core.delta import DeltaConfig
 
     n = n_devices if n_devices is not None else len(jax.devices())
     step_, flat, extras = ckpt_lib.restore(ckpt_dir, step=step)
     meta = extras["abm"]
     hist = np.asarray(flat["histogram"])
-    mesh_shape = choose_mesh_shape(hist, n)
+    if ownership is None:
+        ownership = meta.get("ownership", "equal")
     global_cells = tuple(meta["global_cells"])
     boundary = meta["boundary"]   # str (legacy) or per-axis list
-    geom = Domain(
+    geom_kw = dict(
         cell_size=meta["cell_size"],
-        interior=tuple(g // m for g, m in zip(global_cells, mesh_shape)),
-        mesh_shape=mesh_shape,
         cap=meta["cap"],
         boundary=boundary if isinstance(boundary, str) else tuple(boundary),
         box_factor=meta["box_factor"],
     )
+    if ownership == "rcb":
+        plan = choose_partition(hist, n, ownership="rcb")
+        part = plan.partition.scale(meta["box_factor"])
+        geom = Domain(
+            interior=part.max_widths, mesh_shape=part.mesh_shape,
+            partition=part, **geom_kw)
+    else:
+        mesh_shape = choose_partition(hist, n,
+                                      ownership="equal").mesh_shape
+        geom = Domain(
+            interior=tuple(g // m for g, m in zip(global_cells,
+                                                  mesh_shape)),
+            mesh_shape=mesh_shape, **geom_kw)
     engine = Engine(
         geom=geom, behavior=behavior,
         delta_cfg=delta_cfg or DeltaConfig(enabled=False),

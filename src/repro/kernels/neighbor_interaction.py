@@ -1,18 +1,22 @@
 """Pallas TPU kernels for the ABM neighbor-interaction hot spot.
 
 The compute-dominant inner loop of every paper benchmark simulation is the
-pairwise sweep between each cell's K agents and the 9K agents of its 3x3
-NSG neighborhood.  :func:`pair_sweep_kernel` is a *kernel factory* over
-that decomposition: it takes an arbitrary behavior pair kernel (the same
-``pair_fn(attrs_i, attrs_j, disp, dist2, params)`` contract the pure-jnp
-reference ``core.neighbors.pair_accumulate`` evaluates, including the
-stacks ``core.behaviors.compose`` builds) and emits one Pallas program per
-block of BC cells that holds its (BC, K) self slabs and (BC, 9K)
-neighborhood slabs in VMEM and evaluates all pair contributions with
-VPU-vectorized masked arithmetic.  The neighborhood gather itself is cheap
-data movement and stays in XLA (the caller builds it), keeping the kernel
-a pure compute tile — the same decomposition BioDynaMo uses between its
-uniform grid and force calculation.
+pairwise sweep between each cell's K agents and the 3^D K agents of its
+3^D NSG neighborhood (9K in 2-D, 27K in 3-D).  :func:`pair_sweep_kernel`
+is a *kernel factory* over that decomposition: it takes an arbitrary
+behavior pair kernel (the same ``pair_fn(attrs_i, attrs_j, disp, dist2,
+params)`` contract the pure-jnp reference
+``core.neighbors.pair_accumulate`` evaluates, including the stacks
+``core.behaviors.compose`` builds) and emits one Pallas program per block
+of BC cells that holds its (BC, K) self slabs and (BC, NK) neighborhood
+slabs in VMEM and evaluates all pair contributions with VPU-vectorized
+masked arithmetic.  The factory is dimension-agnostic: the caller flattens
+its interior cell grid, so 2-D and 3-D domains differ only in the
+neighborhood slab width NK and the trailing dim of ``pos`` (and of the
+per-axis minimum-image ``box`` tuple).  The neighborhood gather itself is
+cheap data movement and stays in XLA (the caller builds it), keeping the
+kernel a pure compute tile — the same decomposition BioDynaMo uses
+between its uniform grid and force calculation.
 
 :func:`neighbor_force_kernel` — the original hardcoded soft-sphere force —
 is retained as a thin wrapper over the factory for its callers and parity
@@ -54,7 +58,7 @@ def _pair_eval(attrs_i, attrs_j, valid_i, valid_j, *, pair_fn, radius,
     ai = {n: jnp.expand_dims(a, 2) for n, a in attrs_i.items()}
     aj = {n: jnp.expand_dims(a, 1) for n, a in attrs_j.items()}
 
-    disp = aj[_POS] - ai[_POS]                       # (..., K, NK, 2)
+    disp = aj[_POS] - ai[_POS]                       # (..., K, NK, D)
     if box is not None:
         # per-component minimum image with scalar literals: a (2,) constant
         # array would be a captured constant inside the Pallas kernel body.

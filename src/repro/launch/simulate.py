@@ -45,6 +45,12 @@ def main():
     ap.add_argument("--weighted", action="store_true",
                     help="weight the rebalance histogram by measured "
                          "per-device step times")
+    ap.add_argument("--ownership", default="equal",
+                    choices=["equal", "rcb"],
+                    help="what a triggered re-shard may realize: equal-"
+                         "split meshes, or box-granular uneven RCB "
+                         "partitions on padded per-device grids "
+                         "(docs/load_balancing.md)")
     ap.add_argument("--sweep-backend", default="auto",
                     choices=["auto", "reference", "tiled", "pallas"],
                     help="neighbor-interaction sweep implementation "
@@ -84,7 +90,11 @@ def main():
     if args.rebalance > 0:
         rebalance = Rebalance(every=args.rebalance,
                               threshold=args.imbalance,
-                              weighted=args.weighted)
+                              weighted=args.weighted,
+                              ownership=args.ownership)
+    elif args.ownership != "equal":
+        ap.error("--ownership rcb needs --rebalance N (the re-shard "
+                 "runtime is what realizes uneven partitions)")
 
     interior = tuple(args.interior // m for m in mesh_shape)
     t0 = time.time()

@@ -16,7 +16,7 @@ from typing import Callable, Optional, Tuple, Union
 import numpy as np
 
 from repro.core import (
-    Behavior, DeltaConfig, Domain, Engine, Rebalance, Simulation,
+    Behavior, DeltaConfig, Domain, Engine, Partition, Rebalance, Simulation,
 )
 from repro.core.engine import SimState, warn_if_stale_engine
 
@@ -30,6 +30,7 @@ def make_sim(
     cap: int = 24,
     boundary: Union[str, Tuple[str, ...]] = "closed",
     domain: Optional[Domain] = None,
+    partition: Optional[Partition] = None,
     delta: Optional[DeltaConfig] = None,
     dt: float = 0.1,
     mesh=None,
@@ -42,10 +43,21 @@ def make_sim(
     ``domain=`` takes a ready-made :class:`Domain` and wins over the
     individual geometry kwargs; otherwise the kwargs build one (an
     all-ones ``mesh_shape`` broadcasts to ``interior``'s dimensionality).
+    ``partition=`` starts the run on an uneven box-granular ownership
+    (cuts in cells): it defines its own mesh shape and padded per-device
+    interior, so it overrides ``interior``/``mesh_shape``.
     """
-    geom = domain if domain is not None else dict(
-        cell_size=cell_size, interior=interior, mesh_shape=mesh_shape,
-        cap=cap, boundary=boundary)
+    if partition is not None:
+        if domain is not None:
+            raise ValueError("pass either domain= or partition=, not both")
+        geom = Domain(
+            cell_size=cell_size, interior=partition.max_widths,
+            mesh_shape=partition.mesh_shape, cap=cap, boundary=boundary,
+            partition=partition)
+    else:
+        geom = domain if domain is not None else dict(
+            cell_size=cell_size, interior=interior, mesh_shape=mesh_shape,
+            cap=cap, boundary=boundary)
     return Simulation(
         geom, behaviors, mesh=mesh, delta=delta, dt=dt,
         rebalance=rebalance, checkpoint=checkpoint,

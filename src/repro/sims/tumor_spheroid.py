@@ -108,10 +108,16 @@ def behavior(radius=2.0, repulsion=4.0, adhesion=0.4) -> Behavior:
     return compose(mech, growth)
 
 
-def init(sim, n_agents: int, seed: int = 0):
+def init(sim, n_agents: int, seed: int = 0, center_frac=None):
+    """Seed the spheroid ball.  ``center_frac`` places its center at the
+    given per-axis fraction of the domain (default: the middle); an
+    off-center seed is the canonical uneven-ownership demo — an equal
+    split strands most devices with near-empty blocks."""
     rng = np.random.default_rng(seed)
     size = sim.geom.domain_size
-    center = tuple(s / 2 for s in size)
+    if center_frac is None:
+        center_frac = (0.5,) * sim.geom.ndim
+    center = tuple(s * f for s, f in zip(size, center_frac))
     pos = ball_positions(rng, n_agents, center, min(size) / 8)
     attrs = {
         "diameter": np.full((n_agents,), 0.8, np.float32),
@@ -135,19 +141,21 @@ def spheroid_diameter(state) -> float:
 
 def simulation(n_agents=40, seed=0, mesh=None, mesh_shape=(1, 1, 1),
                interior=(6, 6, 6), delta=None, rebalance=None,
-               sweep_backend="auto") -> Simulation:
+               sweep_backend="auto", center_frac=None,
+               cap=32) -> Simulation:
     sim = make_sim(behavior(), interior=interior, mesh_shape=mesh_shape,
-                   cap=32, delta=delta, mesh=mesh, rebalance=rebalance,
+                   cap=cap, delta=delta, mesh=mesh, rebalance=rebalance,
                    sweep_backend=sweep_backend)
-    return init(sim, n_agents, seed)
+    return init(sim, n_agents, seed, center_frac=center_frac)
 
 
 def run(n_agents=40, steps=15, seed=0, mesh=None, mesh_shape=(1, 1, 1),
         interior=(6, 6, 6), delta=None, rebalance=None,
-        sweep_backend="auto"):
+        sweep_backend="auto", center_frac=None, cap=32):
     sim = simulation(n_agents=n_agents, seed=seed, mesh=mesh,
                      mesh_shape=mesh_shape, interior=interior, delta=delta,
-                     rebalance=rebalance, sweep_backend=sweep_backend)
+                     rebalance=rebalance, sweep_backend=sweep_backend,
+                     center_frac=center_frac, cap=cap)
     d0 = spheroid_diameter(sim.state)
     sim.run(steps, collect=lambda s: (total_agents(s), spheroid_diameter(s)))
     return sim.state, {"diam_initial": d0, "series": sim.series["collect"]}

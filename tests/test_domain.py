@@ -267,14 +267,15 @@ def test_3d_sweep_tiled_matches_reference(boundary):
                                        err_msg=k)
 
 
-def test_3d_pallas_fallback_rule():
-    # auto falls back to tiled for ndim == 3 (the kernel factory is 2-D)
-    assert resolve_sweep_backend("auto", ndim=3) == "tiled"
+def test_3d_pallas_backend_resolution():
+    # the kernel factory takes 3-D blocks since the uneven-ownership PR:
+    # auto resolves identically in 2-D and 3-D (pallas on TPU, tiled
+    # elsewhere) and explicit backends pass through unchanged
     assert resolve_sweep_backend("reference", ndim=3) == "reference"
-    with pytest.raises(ValueError, match="2-D"):
-        resolve_sweep_backend("pallas", ndim=3)
+    assert resolve_sweep_backend("pallas", ndim=3) == "pallas"
     if jax.default_backend() != "tpu":
         assert resolve_sweep_backend("auto", ndim=2) == "tiled"
+        assert resolve_sweep_backend("auto", ndim=3) == "tiled"
 
 
 @pytest.mark.parametrize("delta", [False, True])

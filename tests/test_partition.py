@@ -1,0 +1,540 @@
+"""Uneven ownership tests: box-granular RCB partitions with padded
+per-device grids and masked halo exchange.
+
+Covers the `Partition` spec + `Domain` plumbing, the rectilinear planner
+and the `choose_mesh_shape` deprecation shim, partition-aware histograms /
+flatten, and — property-style, in subprocesses with XLA placeholder
+devices — bit-exact parity of sharded stepping on arbitrary randomized
+valid partitions against the local single-device oracle (toroidal axes and
+spawn paths included), the delta closed-loop refs invariant across a
+mid-run re-cut, the facade's `Rebalance(ownership="rcb")` path, and the
+elastic partition round-trip.
+"""
+
+import os
+import subprocess
+import sys
+import textwrap
+import warnings
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    AgentSchema, Behavior, Domain, Engine, Partition, Simulation,
+    total_agents,
+)
+from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
+from repro.core.load_balance import (
+    choose_mesh_shape,
+    choose_partition,
+    equal_split_loads,
+    imbalance,
+    partition_loads,
+    plan_rectilinear,
+)
+from repro.core.reshard import flatten_state, occupancy_histogram
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 4, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    p = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+# ---------------------------------------------------------------------------
+# Partition spec + Domain plumbing
+# ---------------------------------------------------------------------------
+
+def test_partition_construction_and_derived():
+    p = Partition(cuts=((0, 3, 16), (0, 7, 12)))
+    assert p.ndim == 2
+    assert p.mesh_shape == (2, 2)
+    assert p.global_cells == (16, 12)
+    assert p.widths == ((3, 13), (7, 5))
+    assert p.max_widths == (13, 7)
+    assert not p.is_equal
+    assert p.scale(2).cuts == ((0, 6, 32), (0, 14, 24))
+    # padded allocation 13*7 per device * 4 devices over 16*12 owned cells
+    assert p.pad_fraction() == pytest.approx(4 * 13 * 7 / (16 * 12) - 1)
+
+    eq = Partition.equal((16, 12), (2, 2))
+    assert eq.is_equal and eq.widths == ((8, 8), (6, 6))
+    assert Partition.from_widths(((3, 13), (7, 5))) == p
+    assert hash(Partition(cuts=((0, 3, 16), (0, 7, 12)))) == hash(p)
+
+
+def test_partition_validation():
+    with pytest.raises(ValueError, match="strictly increasing"):
+        Partition(cuts=((0, 5, 5, 16), (0, 12)))
+    with pytest.raises(ValueError, match="start at 0"):
+        Partition(cuts=((1, 16), (0, 12)))
+    with pytest.raises(ValueError, match="2-D and 3-D"):
+        Partition(cuts=((0, 16),))
+    with pytest.raises(ValueError, match="does not divide"):
+        Partition.equal((16, 12), (3, 2))
+
+
+def test_domain_carries_partition_and_normalizes_equal():
+    part = Partition(cuts=((0, 3, 16), (0, 12)))
+    d = Domain(cell_size=2.0, interior=(13, 12), mesh_shape=(2, 1),
+               cap=16, partition=part)
+    assert d.uneven
+    assert d.global_cells == (16, 12)
+    assert d.domain_size == (32.0, 24.0)
+    # an equal Partition IS the legacy geometry: it normalizes away so
+    # hashes/compiled-cache keys match the pre-Partition Domain bit-exactly
+    deq = Domain(cell_size=2.0, interior=(8, 12), mesh_shape=(2, 1), cap=16,
+                 partition=Partition.equal((16, 12), (2, 1)))
+    dplain = Domain(cell_size=2.0, interior=(8, 12), mesh_shape=(2, 1),
+                    cap=16)
+    assert deq == dplain and hash(deq) == hash(dplain) and not deq.uneven
+
+    # repartition: same global cells, padded interior, normalizing
+    d2 = dplain.repartition(part)
+    assert d2 == d
+    assert d2.with_mesh_shape((2, 1)) == dplain    # drops the partition
+    assert d2.repartition(Partition.equal((16, 12), (2, 1))) == dplain
+
+    with pytest.raises(ValueError, match="does not match"):
+        Domain(cell_size=2.0, interior=(13, 12), mesh_shape=(4, 1),
+               cap=16, partition=part)
+    with pytest.raises(ValueError, match="max slab widths"):
+        Domain(cell_size=2.0, interior=(16, 12), mesh_shape=(2, 1),
+               cap=16, partition=part)
+    with pytest.raises(ValueError, match="covers"):
+        dplain.repartition(Partition(cuts=((0, 3, 14), (0, 12))))
+
+
+def test_device_origin_and_owned_widths_uneven():
+    part = Partition(cuts=((0, 3, 16), (0, 7, 12)))
+    d = Domain(cell_size=2.0, interior=(13, 7), mesh_shape=(2, 2), cap=16,
+               partition=part)
+    o = d.device_origin((jnp.int32(1), jnp.int32(0)))
+    np.testing.assert_allclose(np.asarray(o), [6.0, 0.0])
+    w = d.owned_widths((jnp.int32(1), jnp.int32(1)))
+    assert [int(v) for v in w] == [13, 5]
+    # equal domains report no owned widths: the legacy static-index paths
+    assert Domain(cell_size=2.0, interior=(8, 8)).owned_widths(
+        (jnp.int32(0), jnp.int32(0))) is None
+
+
+# ---------------------------------------------------------------------------
+# Planner: rectilinear cuts + deprecation shim
+# ---------------------------------------------------------------------------
+
+def _clustered_hist(seed=0, n=600):
+    rng = np.random.default_rng(seed)
+    c = np.asarray([(8.0, 8.0), (24.0, 24.0)])[rng.integers(0, 2, n)]
+    pos = np.clip(c + rng.normal(0, 3.0, (n, 2)), 0.5, 31.5)
+    hist, _, _ = np.histogram2d(pos[:, 0], pos[:, 1], bins=(16, 16),
+                                range=((0, 32), (0, 32)))
+    return hist
+
+
+def test_plan_rectilinear_beats_equal_on_clustered_density():
+    hist = _clustered_hist()
+    eq = imbalance(equal_split_loads(hist, (2, 2)))
+    part = plan_rectilinear(hist, (2, 2))
+    assert part.mesh_shape == (2, 2)
+    assert part.global_cells == hist.shape
+    un = imbalance(partition_loads(hist, part))
+    assert un < eq
+    # loads account for every box exactly once
+    assert partition_loads(hist, part).sum() == pytest.approx(hist.sum())
+
+
+def test_choose_partition_scans_factorizations_and_ownership_modes():
+    hist = _clustered_hist()
+    eq = choose_partition(hist, 4, ownership="equal")
+    un = choose_partition(hist, 4, ownership="rcb")
+    assert eq.partition.is_equal
+    assert un.imbalance <= eq.imbalance + 1e-12
+    with pytest.raises(ValueError, match="unknown ownership"):
+        choose_partition(hist, 4, ownership="diffusive")
+    # uneven cuts don't need divisibility: 5 devices over 16x16 boxes
+    un5 = choose_partition(hist, 5, ownership="rcb")
+    assert np.prod(un5.mesh_shape) == 5
+
+
+def test_choose_mesh_shape_shim_warns_and_matches_partition_path():
+    """GridGeom-precedent deprecation shim: same selection, plus a
+    DeprecationWarning from the legacy signature."""
+    hist = _clustered_hist()
+    with pytest.warns(DeprecationWarning, match="choose_mesh_shape"):
+        legacy = choose_mesh_shape(hist, 4)
+    assert legacy == choose_partition(hist, 4,
+                                      ownership="equal").mesh_shape
+    # the historical tie-break and scan order: every divisor factorization
+    # (incl. non-powers of two) of a 3-D histogram
+    hist3 = np.random.default_rng(1).random((4, 4, 6))
+    with pytest.warns(DeprecationWarning):
+        legacy3 = choose_mesh_shape(hist3, 6)
+    assert np.prod(legacy3) == 6
+    assert legacy3 == choose_partition(hist3, 6,
+                                       ownership="equal").mesh_shape
+    # no divisor factorization divides the grid -> the historical error
+    with pytest.raises(ValueError, match="factorization"), \
+            warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        choose_mesh_shape(np.ones((5, 7)), 4)
+
+
+def test_plan_reshard_survives_equal_planner_failure():
+    """A box grid with no equal-split factorization (7x7 boxes, 4 devices)
+    must still produce the realizable uneven plan — the equal planner's
+    ValueError may not abort planning (code-review regression)."""
+    from repro.core.reshard import plan_reshard
+
+    part = Partition.from_widths(((3, 4), (3, 4)))
+    geom = Domain(cell_size=2.0, interior=(4, 4), mesh_shape=(2, 2),
+                  cap=16, partition=part)
+    hist = np.random.default_rng(0).random((7, 7)) + 0.1
+    plan = plan_reshard(hist, geom)
+    assert plan.partition is not None
+    assert plan.imbalance == float("inf")     # no equal plan exists
+    assert np.prod(plan.partition.mesh_shape) == 4
+    # nothing realizable at all -> the historical error still surfaces
+    with pytest.raises(ValueError, match="factorization"):
+        plan_reshard(np.ones((1, 3)), Domain(
+            cell_size=2.0, interior=(1, 3), mesh_shape=(1, 1), cap=16),
+            n_devices=5)
+
+
+def test_domain_rejects_box_misaligned_partition():
+    """Cut positions must lie on partitioning-box boundaries: fail where
+    the partition is supplied, not mid-run in the first rebalance check
+    (code-review regression)."""
+    part = Partition.from_widths(((3, 5), (4, 4)))
+    with pytest.raises(ValueError, match="aligned to"):
+        Domain(cell_size=1.0, interior=(5, 4), mesh_shape=(2, 2),
+               box_factor=2, partition=part)
+    # aligned cuts construct fine with the same box_factor
+    ok = Partition.from_widths(((2, 6), (4, 4)))
+    d = Domain(cell_size=1.0, interior=(6, 4), mesh_shape=(2, 2),
+               box_factor=2, partition=ok)
+    assert d.box_grid == (4, 4)
+
+
+# ---------------------------------------------------------------------------
+# Histograms / flatten respect cut positions (host-side, no device mesh)
+# ---------------------------------------------------------------------------
+
+MECH_SCHEMA = AgentSchema.create({
+    "diameter": ((), jnp.float32),
+    "ctype": ((), jnp.int32),
+})
+
+
+def _mech_behavior():
+    return Behavior(
+        schema=MECH_SCHEMA, pair_fn=soft_repulsion_adhesion,
+        pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+        radius=2.0, params={"repulsion": 2.0, "adhesion": 0.4,
+                            "same_type_only": 1.0, "max_step": 0.5})
+
+
+def test_uneven_histogram_and_flatten_respect_cuts():
+    part = Partition(cuts=((0, 3, 16), (0, 7, 12)))
+    geom = Domain(cell_size=2.0, interior=(13, 7), mesh_shape=(2, 2),
+                  cap=32, partition=part)
+    eng = Engine(geom=geom, behavior=_mech_behavior(), dt=0.1)
+    rng = np.random.default_rng(0)
+    n = 400
+    pos = rng.uniform(0.5, [31.5, 23.5], (n, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": rng.integers(0, 2, n).astype(np.int32)}
+    state = eng.init_state(pos, attrs, seed=0)
+
+    hist = occupancy_histogram(geom, state)
+    assert hist.shape == geom.box_grid
+    assert hist.sum() == n
+    # the histogram is the true global cell occupancy: padding cells of the
+    # uneven blocks must not shift any counts
+    want, _ = np.histogramdd(pos, bins=geom.global_cells,
+                             range=[(0, 32), (0, 24)])
+    np.testing.assert_array_equal(hist, want)
+
+    flat = flatten_state(geom, state)
+    assert flat.positions.shape == (n, 2)
+    order = np.lexsort(flat.positions.T)
+    np.testing.assert_allclose(flat.positions[order],
+                               pos[np.lexsort(pos.T)], atol=0)
+    gids = (np.asarray(flat.attrs["gid_rank"], np.int64) << 32) | \
+        np.asarray(flat.attrs["gid_count"], np.int64)
+    assert len(np.unique(gids)) == n
+
+
+# ---------------------------------------------------------------------------
+# Property-style: arbitrary valid partitions bit-exact vs the local oracle
+# ---------------------------------------------------------------------------
+
+# Deterministic behavior for cross-partition bit-exactness: the pair
+# accumulator is a neighbor count (order-independent float sum of exact
+# small integers) and the drift/spawn are deterministic functions of it, so
+# every partition of the same global domain must produce bit-identical
+# trajectories — floats and all.
+DET_COMMON = """
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import AgentSchema, Behavior, Domain, Engine, Partition, total_agents
+from repro.launch.mesh import make_abm_mesh
+
+schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                             "ctype": ((), jnp.int32)})
+
+def count_pair(ai, aj, disp, dist2, params):
+    return {"cnt": jnp.ones_like(dist2)}
+
+def det_update(attrs, valid, acc, key, params, dt):
+    new = dict(attrs)
+    # per-step displacement stays under one NSG cell (cell_size 2.0), the
+    # engine's one-device-hop migration contract — the same bound every
+    # bundled sim enforces via max_step (docs/domains.md)
+    step = jnp.asarray([1.25, -0.75], jnp.float32) * (
+        1.0 + 0.0625 * jnp.minimum(acc["cnt"], 8.0)[..., None])
+    new["pos"] = attrs["pos"] + jnp.where(valid[..., None], step, 0.0)
+    spawn = valid & (acc["cnt"] == 3.0) & (attrs["ctype"] == 1)
+    child = dict(new)
+    # the child's total displacement from the parent's old cell must also
+    # stay under one cell (1.875 + 0.1 < 2.0), same one-hop contract
+    child["pos"] = new["pos"] + jnp.asarray([0.1, 0.05], jnp.float32)
+    child["ctype"] = jnp.zeros_like(attrs["ctype"])   # children never spawn
+    return new, valid, spawn, child
+
+beh = Behavior(schema=schema, pair_fn=count_pair, pair_attrs=("ctype",),
+               update_fn=det_update, radius=2.0, params={}, can_spawn=True)
+
+GX, GY = 16, 12
+BOUNDARY = ("toroidal", "closed")
+rng = np.random.default_rng(11)
+n = 220
+pos = rng.uniform(0.5, [2 * GX - 0.5, 2 * GY - 0.5], (n, 2)).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, n).astype(np.int32)}
+
+def fingerprint(state):
+    v = np.asarray(state.soa.valid).ravel()
+    p = np.asarray(state.soa.attrs["pos"]).reshape(-1, 2)[v]
+    c = np.asarray(state.soa.attrs["ctype"]).ravel()[v]
+    d = np.asarray(state.soa.attrs["diameter"]).ravel()[v]
+    o = np.lexsort((d, c, p[:, 1], p[:, 0]))
+    return p[o], c[o], d[o]
+"""
+
+
+def test_random_partitions_bit_exact_with_local_oracle():
+    """Property-style: randomized valid partitions (both mesh orientations,
+    uneven cuts on both axes, toroidal x / closed y, deterministic spawn)
+    step bit-exactly like the single-device oracle."""
+    out = run_sub(DET_COMMON + """
+geom1 = Domain(cell_size=2.0, interior=(GX, GY), cap=48, boundary=BOUNDARY)
+eng1 = Engine(geom=geom1, behavior=beh, dt=1.0)
+s1 = eng1.init_state(pos, attrs, seed=0)
+_, s1, _ = eng1.drive(s1, 10)
+want = fingerprint(s1)
+assert total_agents(s1) > n       # the spawn path fired
+
+prng = np.random.default_rng(5)
+def random_cuts(total, parts):
+    inner = np.sort(prng.choice(np.arange(1, total), parts - 1,
+                                replace=False))
+    return (0,) + tuple(int(v) for v in inner) + (total,)
+
+cases = []
+for trial in range(2):
+    cases.append(Partition(cuts=(random_cuts(GX, 2), random_cuts(GY, 2))))
+cases.append(Partition(cuts=(random_cuts(GX, 4), (0, GY))))
+
+for part in cases:
+    geom = Domain(cell_size=2.0, interior=part.max_widths,
+                  mesh_shape=part.mesh_shape, cap=48, boundary=BOUNDARY,
+                  partition=part)
+    assert geom.uneven and geom.global_cells == (GX, GY), part.cuts
+    eng = Engine(geom=geom, behavior=beh, dt=1.0)
+    s = eng.init_state(pos, attrs, seed=0)
+    _, s, _ = eng.drive(s, 10, mesh=make_abm_mesh(part.mesh_shape))
+    assert int(s.dropped.sum()) == 0, part.cuts
+    got = fingerprint(s)
+    for a, b in zip(got, want):
+        np.testing.assert_array_equal(a, b, err_msg=str(part.cuts))
+    print("OK", part.cuts)
+print("DONE", len(cases))
+""")
+    assert "DONE 3" in out
+
+
+def test_uneven_delta_refs_closed_loop_across_recut():
+    """Masked halo delta references: the per-directed-edge closed-loop
+    invariant (my xp_out == my +x neighbor's xm_in) holds on an uneven
+    partition under arbitrary full/delta mixes, and again after a mid-run
+    re-cut onto a DIFFERENT partition (refs reset -> forced full refresh
+    closes the loop on the new cuts)."""
+    out = run_sub("""
+import numpy as np, jax, jax.numpy as jnp
+from repro.core import AgentSchema, Behavior, DeltaConfig, Domain, Engine, Partition, total_agents
+from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
+from repro.core.reshard import reshard_state
+from repro.launch.mesh import make_abm_mesh
+
+schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                             "ctype": ((), jnp.int32)})
+beh = Behavior(schema=schema, pair_fn=soft_repulsion_adhesion,
+               pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+               radius=2.0, params={"repulsion": 2.0, "adhesion": 0.4,
+                                   "same_type_only": 1.0, "max_step": 0.5})
+rng = np.random.default_rng(0)
+n = 240
+pos = rng.uniform(0.5, [31.5, 15.5], size=(n, 2)).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, n).astype(np.int32)}
+
+def assert_closed_loop(state, mx):
+    refs = state.refs
+    for i in range(mx - 1):
+        for field in refs["xp_out"]:
+            np.testing.assert_array_equal(
+                np.asarray(refs["xp_out"][field])[i, 0],
+                np.asarray(refs["xm_in"][field])[i + 1, 0],
+                err_msg=f"xp@{i} {field}")
+            np.testing.assert_array_equal(
+                np.asarray(refs["xm_out"][field])[i + 1, 0],
+                np.asarray(refs["xp_in"][field])[i, 0],
+                err_msg=f"xm@{i} {field}")
+
+cfg = DeltaConfig(enabled=True, qdtype=jnp.int16, refresh_interval=6)
+part = Partition(cuts=((0, 5, 16), (0, 8)))
+geom = Domain(cell_size=2.0, interior=(11, 8), mesh_shape=(2, 1), cap=24,
+              partition=part)
+eng = Engine(geom=geom, behavior=beh, delta_cfg=cfg, dt=0.1)
+state = eng.init_state(pos, attrs, seed=0)
+step = eng.make_sharded_step(make_abm_mesh((2, 1)))
+
+sched = np.random.default_rng(7)
+for full in [True] + list(sched.random(11) < 0.3):
+    state = step(state, full_halo=bool(full))
+    assert_closed_loop(state, 2)
+assert total_agents(state) == n
+
+# mid-run re-cut onto different uneven cuts (still 2 devices)
+part2 = Partition(cuts=((0, 11, 16), (0, 8)))
+eng2, state2 = reshard_state(eng, state, partition=part2)
+assert eng2.geom.uneven and eng2.geom.partition == part2
+assert eng2.geom.interior == (11, 8)
+step2 = eng2.make_sharded_step(make_abm_mesh((2, 1)))
+state2 = step2(state2, full_halo=True)     # refs reset -> full closes loop
+assert_closed_loop(state2, 2)
+for full in [False, False, True, False]:
+    state2 = step2(state2, full_halo=full)
+    assert_closed_loop(state2, 2)
+assert total_agents(state2) == n
+print("OK")
+""", devices=2)
+    assert "OK" in out
+
+
+# ---------------------------------------------------------------------------
+# Equal-split pinning: Partition.equal runs bit-exact with the legacy engine
+# ---------------------------------------------------------------------------
+
+def _sim_cases():
+    from repro.sims import (cell_clustering, cell_proliferation,
+                            epidemiology, oncology)
+    return {
+        "cell_clustering": (cell_clustering, 2),
+        "cell_proliferation": (cell_proliferation, 2),
+        "epidemiology": (epidemiology, 2),
+        "oncology": (oncology, 2),
+        "tumor_spheroid": (None, 3),
+    }
+
+
+@pytest.mark.parametrize("name", sorted(_sim_cases()))
+def test_equal_partition_bit_exact_with_legacy_engine(name):
+    """`Partition.equal` is the pre-PR engine: every bundled 2-D sim plus
+    the 3-D spheroid runs bit-identically whether the geometry is built
+    plain or through an (equal) Partition — the normalized Domains share
+    hash and compiled-cache keys, so this also pins zero re-tracing."""
+    from repro.sims.common import make_sim
+
+    if name == "tumor_spheroid":
+        from repro.sims import tumor_spheroid as mod
+        kw = dict(interior=(4, 4, 4), mesh_shape=(1, 1, 1), cap=32)
+        init = lambda sim: mod.init(sim, 30, seed=3)
+    else:
+        mod = _sim_cases()[name][0]
+        kw = dict(interior=(6, 6), mesh_shape=(1, 1), cap=32)
+        if name == "epidemiology":
+            init = lambda sim: mod.init(sim, 60, 6, seed=3)
+        else:
+            init = lambda sim: mod.init(sim, 60, seed=3)
+    beh = mod.behavior()
+
+    def final(partition):
+        sim = make_sim(beh, partition=partition, **(
+            {k: v for k, v in kw.items()
+             if partition is None or k == "cap"}))
+        init(sim)
+        sim.run(4)
+        return sim.state
+
+    eq = Partition.equal(kw["interior"], kw["mesh_shape"])
+    s1 = final(None)
+    s2 = final(eq)
+    np.testing.assert_array_equal(np.asarray(s1.soa.valid),
+                                  np.asarray(s2.soa.valid))
+    for k in s1.soa.attrs:
+        np.testing.assert_array_equal(np.asarray(s1.soa.attrs[k]),
+                                      np.asarray(s2.soa.attrs[k]),
+                                      err_msg=k)
+    np.testing.assert_array_equal(np.asarray(s1.key), np.asarray(s2.key))
+
+
+# ---------------------------------------------------------------------------
+# The facade path: Rebalance(ownership="rcb") end to end
+# ---------------------------------------------------------------------------
+
+def test_facade_rcb_rebalance_lands_uneven_and_conserves():
+    out = run_sub("""
+import numpy as np
+from repro.core import Rebalance, Simulation
+from repro.core.reshard import current_imbalance
+from repro.sims import cell_clustering
+
+sim = Simulation(dict(interior=(8, 8), mesh_shape=(2, 2), cap=64),
+                 cell_clustering.behavior(adhesion=0.3), dt=0.1,
+                 rebalance=Rebalance(every=4, threshold=0.3,
+                                     ownership="rcb"))
+rng = np.random.default_rng(0)
+n = 500
+centers = np.asarray([(8.0, 8.0), (24.0, 24.0)])
+pos = np.clip(centers[rng.integers(0, 2, n)] + rng.normal(0, 3.0, (n, 2)),
+              0.5, 31.5).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, n).astype(np.int32)}
+sim.init(pos, attrs, seed=0)
+before = current_imbalance(sim.geom, sim.state)
+sim.run(10)
+applied = [r for r in sim.rebalancer.history if r["applied"]]
+assert applied, sim.rebalancer.history
+assert sim.engine.geom.uneven, "rcb rebalance should land uneven here"
+after = current_imbalance(sim.geom, sim.state)
+assert sim.n_agents() == n
+assert int(np.asarray(sim.state.dropped).sum()) == 0
+assert after < before / 2, (before, after)
+rec = applied[0]
+assert rec["partition_imbalance"] <= rec["rcb_bound"] * 1.1 + 1e-9
+# the facade swapped engine/mesh/state consistently: keep running
+sim.run(4)
+assert sim.n_agents() == n
+print("OK", before, "->", after, sim.engine.geom.partition.widths)
+""")
+    assert "OK" in out

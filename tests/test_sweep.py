@@ -152,6 +152,50 @@ def test_composed_spawning_stack_end_to_end(backend):
     np.testing.assert_allclose(sort(got), sort(want), atol=1e-4)
 
 
+@pytest.mark.parametrize("boundary", ["closed", "toroidal"])
+def test_3d_pallas_matches_tiled_oracle(boundary):
+    """The kernel factory on a 3-D Domain (27-offset stencil, INTERPRET
+    mode on CPU) against the tiled oracle: count accumulators exact, float
+    accumulators to kernel tolerance; the explicit 2-D path is covered
+    bit-for-bit by the parametrized parity tests above."""
+    from repro.sims import tumor_spheroid
+
+    beh = tumor_spheroid.behavior()       # composed stack, count acc
+    geom = Domain(cell_size=2.0, interior=(3, 4, 5), mesh_shape=(1, 1, 1),
+                  cap=12, boundary=boundary)
+    eng = Engine(geom=geom, behavior=beh, dt=0.1)
+    rng = np.random.default_rng(7)
+    n = 150
+    size = geom.domain_size
+    pos = rng.uniform([0.5] * 3, [s - 0.5 for s in size], (n, 3)
+                      ).astype(np.float32)
+    attrs = {"diameter": rng.uniform(0.6, 1.4, n).astype(np.float32),
+             "ctype": np.ones((n,), np.int32),
+             "nutrient": rng.uniform(0.0, 1.0, n).astype(np.float32)}
+    state = eng.init_state(pos, attrs, seed=0)
+
+    want = run_sweep(eng, state, "tiled")
+    got = run_sweep(eng, state, "pallas")
+    assert set(got) == set(want)
+    counts = [k for k in want if k.endswith("crowd")]
+    assert counts
+    for k in counts:
+        np.testing.assert_array_equal(np.asarray(got[k]),
+                                      np.asarray(want[k]), err_msg=k)
+    assert_acc_close(got, want, atol=1e-5)
+
+
+def test_resolve_backend_3d_no_longer_falls_back():
+    """The kernel factory now takes 3-D blocks: explicit 'pallas' is legal
+    on 3-D domains, and 'auto' resolves identically for 2-D and 3-D (pallas
+    on TPU, tiled elsewhere)."""
+    assert resolve_sweep_backend("pallas", ndim=3) == "pallas"
+    assert resolve_sweep_backend("auto", ndim=3) == \
+        resolve_sweep_backend("auto", ndim=2)
+    if jax.default_backend() != "tpu":
+        assert resolve_sweep_backend("auto", ndim=3) == "tiled"
+
+
 def test_resolve_backend_and_interpret_auto():
     from repro.kernels import ops
 
