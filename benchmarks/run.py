@@ -574,8 +574,63 @@ def bench_roofline():
              f"dominant={r['dominant']};frac={r['roofline_fraction']:.4f}")
 
 
+# ---------------------------------------------------------------------------
+# simcheck: construction-time audit cost, zero per-step cost
+# ---------------------------------------------------------------------------
+
+def bench_simcheck():
+    """Cost of the static contract gate and the full validate() audit.
+    Both run at construction / on demand only — the contract the row pins
+    is that the *per-step* cost of a gated simulation is zero (the gate
+    adds no tracing, no callbacks, nothing to the compiled step)."""
+    import numpy as np
+
+    from repro.analysis import check_engine
+    from repro.core import Engine, Domain, Simulation
+    from repro.sims import cell_clustering
+
+    beh = cell_clustering.behavior()
+    geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+                  cap=24)
+    rng = np.random.default_rng(0)
+    n = 400
+    lx, ly = geom.domain_size
+    pos = rng.uniform(0.5, lx - 0.5, (n, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": rng.integers(0, 2, n).astype(np.int32)}
+
+    eng = Engine(geom=geom, behavior=beh, dt=0.1)
+    t_gate = timeit(lambda: check_engine(eng), n=20, warmup=2)
+
+    sim = Simulation(dict(interior=(8, 8), cap=24), beh, dt=0.1)
+    sim.init(pos, attrs, seed=0)
+    t_validate = timeit(lambda: sim.validate(), n=3, warmup=1)
+
+    steps = 30
+
+    def per_step(check):
+        e = Engine(geom=geom, behavior=beh, dt=0.1, check=check)
+        s0 = e.init_state(pos, attrs, seed=0)
+        step = e.make_local_step()
+
+        def run():
+            _, s, _ = e.drive(s0, steps, step_fn=step)
+            jax.block_until_ready(s.soa.attrs["pos"])
+        return timeit(run, n=3, warmup=1) / steps
+
+    t_off = per_step("off")
+    t_gated = per_step("error")
+
+    emit("simcheck_contract_gate", t_gate, "construction_time_only")
+    emit("simcheck_validate_ms", t_validate / 1e3,
+         "full_audit=contracts+jaxpr+lint_on_demand_only")
+    emit("simcheck_step_overhead", t_gated - t_off,
+         f"per_step_cost_gated_vs_off={t_gated/t_off - 1:+.2%}_target_0")
+
+
 BENCHES = {
     "serialization": bench_serialization,
+    "simcheck": bench_simcheck,
     "delta": bench_delta,
     "sweep": bench_sweep,
     "sweep_3d": bench_sweep_3d,

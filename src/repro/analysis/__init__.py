@@ -1,0 +1,71 @@
+"""repro.analysis — simcheck: static contract checker, jaxpr auditor,
+and repo lint for distributed-correctness hazards.
+
+Three passes over one diagnostic currency (:class:`Diagnostic` /
+:class:`Report`):
+
+* :mod:`repro.analysis.contracts` — static contracts on a geometry +
+  behavior stack (stencil soundness, one-hop migration, aura sufficiency,
+  codec headroom, partition validity).
+* :mod:`repro.analysis.jaxpr_audit` — trace the step runners with
+  ``jax.make_jaxpr`` and audit the equations (ppermute permutation
+  validity, host syncs, dtype drift, int8 overflow, cache-key stability).
+* :mod:`repro.analysis.lint` — AST lint over source files and behavior
+  pair/update functions (Python branches on traced values, ``.item()``,
+  host numpy, mutable defaults, dead imports).
+
+Run everything via ``python -m repro.launch.simcheck`` or
+``Simulation.validate()``.  See ``docs/contracts.md`` for the catalogue.
+"""
+
+from repro.analysis.diagnostics import (  # noqa: F401
+    SEVERITIES,
+    Diagnostic,
+    Report,
+    with_context,
+)
+from repro.analysis.contracts import (  # noqa: F401
+    ContractError,
+    DisplacementBound,
+    check_contracts,
+    check_engine,
+    displacement_bound,
+    enforce,
+    min_slab_width_cells,
+)
+from repro.analysis.jaxpr_audit import (  # noqa: F401
+    audit_engine,
+    audit_fn,
+    audit_jaxpr,
+    trace_step,
+)
+from repro.analysis.lint import (  # noqa: F401
+    lint_behavior,
+    lint_behaviors,
+    lint_hot_fn,
+    lint_paths,
+    lint_source,
+)
+
+__all__ = [
+    "SEVERITIES",
+    "Diagnostic",
+    "Report",
+    "with_context",
+    "ContractError",
+    "DisplacementBound",
+    "check_contracts",
+    "check_engine",
+    "displacement_bound",
+    "enforce",
+    "min_slab_width_cells",
+    "audit_engine",
+    "audit_fn",
+    "audit_jaxpr",
+    "trace_step",
+    "lint_behavior",
+    "lint_behaviors",
+    "lint_hot_fn",
+    "lint_paths",
+    "lint_source",
+]

@@ -1,0 +1,387 @@
+"""Static contract checker: Domain x Partition x behavior-stack invariants.
+
+The engine's distributed correctness rests on contracts the code documents
+but (before this module) never enforced:
+
+* **stencil-soundness** — every ``Behavior.radius`` must be <= the Domain's
+  ``cell_size``: the ``3**ndim`` neighborhood sweep only visits adjacent
+  cells, so a larger radius silently drops interacting pairs.
+* **aura-sufficiency** — on a multi-device mesh the same bound guarantees
+  the one-cell aura ring holds every *remote* neighbor a pair kernel may
+  read; past it, remote pairs vanish entirely (worse than the local miss).
+* **one-hop-migration** — migration is a single ring exchange per axis per
+  step: an agent may cross at most into the *adjacent* device's slab.  The
+  binding bound is per-axis: per-step displacement must stay under
+  ``min_slab_width_cells(axis) * cell_size`` for every axis the device
+  mesh shards (crossing two cuts in one step requires traversing an entire
+  intermediate slab).  Narrow RCB slabs tighten it — the hazard from
+  docs/load_balancing.md.
+* **codec-headroom** — with a *fixed* delta-codec scale, the representable
+  per-step delta is ``scale * qmax``; a worst-case displacement past it
+  clips silently at the int8/int16 rail (core.delta counts the overflow at
+  runtime; this contract rejects configurations that make it inevitable).
+* **partition-validity** — geometry sanity: positive cell size, partition
+  cut coverage, padded-grid memory overhead, device availability.
+
+Displacement bounds are derived statically from behavior parameters, per
+leaf behavior and summed across a composed stack:
+
+* ``Behavior.max_displacement`` — an explicitly declared per-step bound
+  (wins over inference; the escape hatch for custom update functions).
+* ``params["max_step"]`` — a hard norm clamp (the
+  :func:`repro.core.behaviors.displacement_update` convention).
+* ``params["sigma"]`` — a per-step, per-component Gaussian scale; bounded
+  at the 4-sigma quantile (probabilistic, so violations are *warnings*).
+* ``params["div_offset"]`` — a spawning behavior's Gaussian child offset,
+  also bounded at 4 sigma.
+
+A spawning behavior with no declared offset, or an update with none of the
+recognized parameters, makes the bound *unverifiable*: the checker emits an
+info diagnostic instead of guessing.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+import jax.numpy as jnp
+
+from repro.analysis.diagnostics import Diagnostic
+
+CONTRACT_STENCIL = "stencil-soundness"
+CONTRACT_AURA = "aura-sufficiency"
+CONTRACT_ONE_HOP = "one-hop-migration"
+CONTRACT_HEADROOM = "codec-headroom"
+CONTRACT_PARTITION = "partition-validity"
+
+# severity ordering for displacement-bound kinds
+_KIND_RANK = {"hard": 0, "stochastic": 1, "unknown": 2}
+
+# Gaussian tail quantile used to bound stochastic per-step displacements.
+SIGMA_QUANTILE = 4.0
+
+
+@dataclasses.dataclass(frozen=True)
+class DisplacementBound:
+    """Worst-case per-step, per-component displacement of a behavior stack.
+
+    ``kind``: "hard" (provable clamp), "stochastic" (a ``SIGMA_QUANTILE``
+    tail bound), or "unknown" (at least one term is unverifiable — ``value``
+    then only sums the known terms).
+    """
+
+    value: float
+    kind: str
+    detail: str
+
+
+def _leaf_bound(behavior) -> DisplacementBound:
+    declared = getattr(behavior, "max_displacement", None)
+    if declared is not None:
+        return DisplacementBound(float(declared), "hard",
+                                 "declared max_displacement")
+    params = behavior.params
+    terms: List[Tuple[float, str, str]] = []  # (value, kind, label)
+    if "max_step" in params:
+        terms.append((float(params["max_step"]), "hard", "max_step"))
+    if "sigma" in params:
+        v = SIGMA_QUANTILE * float(params["sigma"])
+        terms.append((v, "stochastic",
+                      f"{SIGMA_QUANTILE:g}*sigma"))
+    unknown = []
+    if behavior.can_spawn:
+        if "div_offset" in params:
+            v = SIGMA_QUANTILE * float(params["div_offset"])
+            terms.append((v, "stochastic",
+                          f"{SIGMA_QUANTILE:g}*div_offset"))
+        else:
+            unknown.append("spawn offset not declared "
+                           "(no div_offset param)")
+    if not terms and not unknown:
+        unknown.append("no recognized displacement params "
+                       "(max_step / sigma / div_offset)")
+    value = sum(v for v, _, _ in terms)
+    detail = " + ".join(f"{lbl}={v:g}" for v, _, lbl in terms) or "0"
+    if unknown:
+        return DisplacementBound(value, "unknown",
+                                 detail + "; " + "; ".join(unknown))
+    kind = max((k for _, k, _ in terms), key=_KIND_RANK.__getitem__)
+    return DisplacementBound(value, kind, detail)
+
+
+def displacement_bound(behavior, dt: float = 1.0) -> DisplacementBound:
+    """Worst-case per-step displacement of a (possibly composed) behavior.
+
+    Composed stacks sum their children's bounds (updates chain within one
+    step, so displacements add); the overall kind is the weakest child
+    kind.  ``dt`` is accepted for symmetry with the engine signature — the
+    recognized parameters are all per-step quantities (``max_step`` is a
+    norm clamp; ``sigma``/``div_offset`` scale per-step Gaussian draws).
+    """
+    children = tuple(getattr(behavior, "children", ()) or ())
+    if not children:
+        return _leaf_bound(behavior)
+    bounds = [displacement_bound(c, dt) for c in children]
+    value = sum(b.value for b in bounds)
+    kind = max((b.kind for b in bounds), key=_KIND_RANK.__getitem__)
+    detail = " + ".join(f"b{i}({b.detail})" for i, b in enumerate(bounds))
+    return DisplacementBound(value, kind, detail)
+
+
+def leaf_behaviors(behavior, path: str = "behavior"):
+    """Yield ``(path, leaf)`` for every leaf of a composed behavior stack."""
+    children = tuple(getattr(behavior, "children", ()) or ())
+    if not children:
+        yield path, behavior
+        return
+    for i, child in enumerate(children):
+        yield from leaf_behaviors(child, f"{path}.b{i}")
+
+
+def min_slab_width_cells(geom, axis: int) -> int:
+    """Narrowest owned slab along ``axis``, in cells."""
+    if geom.partition is not None:
+        return min(geom.partition.widths[axis])
+    return geom.interior[axis]
+
+
+def _behavior_label(behavior, path: str) -> str:
+    fn = getattr(behavior, "update_fn", None)
+    name = getattr(fn, "__name__", None)
+    return f"{path} ({name})" if name else path
+
+
+# ---------------------------------------------------------------------------
+# The contract checks
+# ---------------------------------------------------------------------------
+
+def check_stencil(geom, behavior) -> List[Diagnostic]:
+    """radius <= cell_size per leaf behavior, plus the multi-device aura
+    framing of the same bound."""
+    out = []
+    sharded = geom.n_devices > 1
+    for path, leaf in leaf_behaviors(behavior):
+        r = float(leaf.radius)
+        if r > float(geom.cell_size):
+            loc = _behavior_label(leaf, path)
+            out.append(Diagnostic(
+                severity="error", contract=CONTRACT_STENCIL,
+                message=(f"interaction radius {r:g} exceeds cell_size "
+                         f"{geom.cell_size:g}: the {3 ** geom.ndim}-cell "
+                         "neighborhood sweep only sees adjacent cells, so "
+                         "pairs between non-adjacent cells are silently "
+                         "dropped"),
+                hint=(f"raise cell_size to >= {r:g} (one cell must cover "
+                      "the interaction radius) or reduce the behavior's "
+                      "radius"),
+                location=loc))
+            if sharded:
+                out.append(Diagnostic(
+                    severity="error", contract=CONTRACT_AURA,
+                    message=(f"radius {r:g} does not fit the one-cell aura "
+                             f"ring ({geom.cell_size:g} world units): "
+                             "remote neighbors beyond the ring are never "
+                             "exchanged, so cross-device pairs past "
+                             "cell_size are invisible"),
+                    hint=("the aura ring is one cell wide by construction; "
+                          f"raise cell_size to >= {r:g}"),
+                    location=loc))
+    return out
+
+
+def check_one_hop(geom, behavior, dt: float = 1.0) -> List[Diagnostic]:
+    """Per-step displacement vs the narrowest owned slab, per sharded axis."""
+    out = []
+    constrained = [a for a in range(geom.ndim) if geom.mesh_shape[a] > 1]
+    if not constrained:
+        return out
+    bound = displacement_bound(behavior, dt)
+    if bound.kind == "unknown":
+        out.append(Diagnostic(
+            severity="info", contract=CONTRACT_ONE_HOP,
+            message=("per-step displacement bound is unverifiable "
+                     f"({bound.detail}); the one-hop migration contract "
+                     "cannot be checked statically"),
+            hint=("declare Behavior(max_displacement=...) with the "
+                  "worst-case per-step displacement, or carry max_step / "
+                  "sigma / div_offset in params"),
+            location=_behavior_label(behavior, "behavior")))
+        return out
+    severity = "error" if bound.kind == "hard" else "warning"
+    for a in constrained:
+        width = min_slab_width_cells(geom, a)
+        limit = width * float(geom.cell_size)
+        if bound.value >= limit:
+            what = ("hard displacement bound" if bound.kind == "hard" else
+                    f"{SIGMA_QUANTILE:g}-sigma displacement bound")
+            out.append(Diagnostic(
+                severity=severity, contract=CONTRACT_ONE_HOP,
+                message=(f"axis {a}: {what} {bound.value:g} "
+                         f"({bound.detail}) reaches the narrowest owned "
+                         f"slab ({width} cells = {limit:g} world units); "
+                         "an agent crossing a whole slab in one step "
+                         "skips the intermediate device, lands in the "
+                         "receiver's migration ring, and is destroyed by "
+                         "the next aura rebuild"),
+                hint=("reduce the per-step displacement (max_step / sigma "
+                      "/ dt), widen the narrowest partition slab, or use "
+                      f"fewer devices along axis {a}"),
+                location=_behavior_label(behavior, "behavior")))
+    return out
+
+
+def check_codec_headroom(geom, behavior, delta_cfg,
+                         dt: float = 1.0) -> List[Diagnostic]:
+    """Fixed quantization scale vs the worst-case per-step delta."""
+    out = []
+    if delta_cfg is None or not delta_cfg.enabled:
+        return out
+    scale = getattr(delta_cfg, "scale", None)
+    if scale is None:
+        return out  # adaptive per-slab scale: clipping impossible
+    qmax = float(jnp.iinfo(delta_cfg.qdtype).max)
+    representable = float(scale) * qmax
+    bound = displacement_bound(behavior, dt)
+    if bound.kind == "unknown":
+        out.append(Diagnostic(
+            severity="info", contract=CONTRACT_HEADROOM,
+            message=(f"fixed delta scale {scale:g} (representable delta "
+                     f"{representable:g}) cannot be checked: per-step "
+                     f"displacement bound is unverifiable ({bound.detail})"),
+            hint="declare Behavior(max_displacement=...)",
+            location="delta_cfg"))
+        return out
+    if bound.value <= 0:
+        return out
+    headroom = representable / bound.value
+    if headroom < 1.0:
+        out.append(Diagnostic(
+            severity="error", contract=CONTRACT_HEADROOM,
+            message=(f"fixed delta scale {scale:g} represents at most "
+                     f"+/-{representable:g} per step, but the worst-case "
+                     f"per-step displacement is {bound.value:g} "
+                     f"({bound.detail}): headroom {headroom:.2f} < 1.0, "
+                     "the int"
+                     f"{jnp.iinfo(delta_cfg.qdtype).bits} encode will "
+                     "clip deltas silently"),
+            hint=(f"raise scale to >= {bound.value / qmax:g}, or drop "
+                  "scale=None to use the adaptive per-slab scale"),
+            location="delta_cfg"))
+    elif headroom < 1.5:
+        out.append(Diagnostic(
+            severity="warning", contract=CONTRACT_HEADROOM,
+            message=(f"fixed delta scale {scale:g}: headroom "
+                     f"{headroom:.2f} over the worst-case per-step "
+                     f"displacement {bound.value:g} leaves little margin "
+                     "before the quantizer clips"),
+            hint=f"consider scale >= {1.5 * bound.value / qmax:g}",
+            location="delta_cfg"))
+    return out
+
+
+def check_partition(geom) -> List[Diagnostic]:
+    """Geometry / partition sanity."""
+    out = []
+    if float(geom.cell_size) <= 0:
+        out.append(Diagnostic(
+            severity="error", contract=CONTRACT_PARTITION,
+            message=f"cell_size {geom.cell_size!r} must be positive",
+            hint="set cell_size to at least the max interaction radius",
+            location="geom"))
+        return out
+    part = geom.partition
+    if part is not None:
+        for a, cuts in enumerate(part.cuts):
+            if cuts[-1] != geom.global_cells[a]:
+                out.append(Diagnostic(
+                    severity="error", contract=CONTRACT_PARTITION,
+                    message=(f"axis {a} cuts {cuts} end at {cuts[-1]} but "
+                             f"the global grid has "
+                             f"{geom.global_cells[a]} cells"),
+                    hint="partition cuts must cover the global cell grid",
+                    location="geom.partition"))
+        pad = part.pad_fraction()
+        if pad > 1.0:
+            out.append(Diagnostic(
+                severity="info", contract=CONTRACT_PARTITION,
+                message=(f"padded per-device grids allocate "
+                         f"{pad:.0%} more cells than are owned "
+                         "(docs/load_balancing.md memory model)"),
+                hint=("prefer cuts with less width spread, or a larger "
+                      "box_factor"),
+                location="geom.partition"))
+    n_dev = geom.n_devices
+    if n_dev > 1:
+        import jax
+        have = len(jax.devices())
+        if have < n_dev:
+            out.append(Diagnostic(
+                severity="info", contract=CONTRACT_PARTITION,
+                message=(f"geometry spans {n_dev} devices but this host "
+                         f"exposes {have}; running it here needs "
+                         "XLA_FLAGS=--xla_force_host_platform_device_"
+                         f"count={n_dev}"),
+                hint="static checks still apply; only execution needs "
+                     "the devices",
+                location="geom"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Entry points
+# ---------------------------------------------------------------------------
+
+def check_contracts(geom, behavior, delta_cfg=None,
+                    dt: float = 1.0) -> List[Diagnostic]:
+    """Run every static contract over a (geom, behavior, delta) triple."""
+    out: List[Diagnostic] = []
+    out.extend(check_partition(geom))
+    out.extend(check_stencil(geom, behavior))
+    out.extend(check_one_hop(geom, behavior, dt))
+    out.extend(check_codec_headroom(geom, behavior, delta_cfg, dt))
+    return out
+
+
+def check_engine(engine) -> List[Diagnostic]:
+    """Contract pass over an :class:`repro.core.Engine` (duck-typed)."""
+    return check_contracts(engine.geom, engine.behavior,
+                           engine.delta_cfg, engine.dt)
+
+
+class ContractError(ValueError):
+    """Raised by :func:`enforce` when error-severity contracts fail.
+
+    Carries the offending diagnostics in ``self.diagnostics``.
+    """
+
+    def __init__(self, diagnostics):
+        self.diagnostics = list(diagnostics)
+        lines = [d.format() for d in self.diagnostics]
+        super().__init__(
+            "simulation contracts violated "
+            "(pass check=\"warn\" or check=\"off\" to bypass):\n"
+            + "\n".join(lines))
+
+
+def enforce(engine, mode: str = "error") -> List[Diagnostic]:
+    """Construction-time gate: raise (or warn) on error-severity findings.
+
+    Only *definite* hazards gate construction — warnings and infos are
+    surfaced through ``Simulation.validate()`` / the simcheck CLI, never
+    here, so probabilistic bounds cannot break existing runs.
+    """
+    if mode not in ("off", "warn", "error"):
+        raise ValueError(
+            f"check mode {mode!r} not in ('off', 'warn', 'error')")
+    if mode == "off":
+        return []
+    errors = [d for d in check_engine(engine) if d.severity == "error"]
+    if not errors:
+        return []
+    if mode == "error":
+        raise ContractError(errors)
+    import warnings
+    for d in errors:
+        warnings.warn(f"simcheck contract: {d.format()}", stacklevel=3)
+    return errors

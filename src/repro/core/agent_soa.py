@@ -20,7 +20,6 @@ paper's ``<rank, counter>`` scheme as two int32 columns.
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Any, Callable, Dict, Mapping, Tuple
 
 import jax

@@ -52,6 +52,16 @@ class Behavior:
     acc_spec: Dict[str, Tuple[Tuple[int, ...], object]] = dataclasses.field(
         default_factory=dict
     )
+    # Declared worst-case per-step displacement (world units at dt=1) for
+    # the one-hop migration contract (analysis.contracts).  When None the
+    # checker infers a bound from recognized params (max_step, sigma,
+    # div_offset); declare it for custom kinematics the inference can't
+    # see.  Purely advisory metadata — the engine never reads it.
+    max_displacement: Optional[float] = None
+    # Sub-behaviors this one was composed from (empty for leaves).  The
+    # contract checker and hot-path lint walk this to analyze leaf kernels
+    # instead of the synthesized compose() wrappers.
+    children: Tuple["Behavior", ...] = ()
 
     # Behavior.stack(a, b, ...) — alias of compose(); bound as a class
     # attribute after compose() is defined below (not a dataclass field).
@@ -158,7 +168,7 @@ def compose(*behaviors: Behavior) -> Behavior:
     return Behavior(
         schema=schema, pair_fn=pair, pair_attrs=pair_attrs,
         update_fn=update, radius=radius, params=params,
-        can_spawn=can_spawn, acc_spec=acc_spec)
+        can_spawn=can_spawn, acc_spec=acc_spec, children=behs)
 
 
 Behavior.stack = staticmethod(compose)

@@ -45,6 +45,13 @@ class DeltaConfig:
     enabled: bool = True
     qdtype: Any = jnp.int8        # int8 or int16 quantized delta payload
     refresh_interval: int = 16    # full f32 send every R iterations
+    # Fixed quantization scale (units per quantum).  None (default) derives
+    # the scale per slab from max |delta| — never clips, costs one f32 on
+    # the wire per slab.  A fixed scale drops that f32 and makes the
+    # codec-headroom contract statically checkable, but *can* saturate at
+    # the qdtype range; encode_delta counts those clipped elements so the
+    # exchange can fall back to a full refresh.
+    scale: Any = None
 
 
 def _is_float(a: Array) -> bool:
@@ -60,24 +67,38 @@ def decode_full(payload: Slab) -> Tuple[Slab, Slab]:
     return payload, payload
 
 
-def encode_delta(slab: Slab, ref: Slab, cfg: DeltaConfig) -> Tuple[Slab, Slab]:
+def encode_delta(
+    slab: Slab, ref: Slab, cfg: DeltaConfig
+) -> Tuple[Slab, Slab, Array]:
     """Quantized-delta encode float attrs; pass-through the rest.
 
-    Returns (payload, new_reference). new_reference equals the receiver-side
-    reconstruction (closed loop).
+    Returns (payload, new_reference, overflow_count).  new_reference equals
+    the receiver-side reconstruction (closed loop).  overflow_count is an
+    int32 scalar: how many elements saturated the quantization range
+    *before* clipping.  With the default adaptive scale it is always 0 (the
+    scale is derived from max |delta|); with a fixed ``cfg.scale`` a fast
+    transient can exceed ``scale * qmax`` and the clipped reconstruction is
+    silently wrong unless the caller reacts (the aura exchange falls back
+    to a full refresh on the next segment boundary).
     """
     qinfo = jnp.iinfo(cfg.qdtype)
     qmax = jnp.float32(qinfo.max)
     payload: Slab = {}
     new_ref: Slab = {}
+    overflow = jnp.int32(0)
     for name, x in slab.items():
         r = ref[name]
         if _is_float(x):
             delta = (x - r).astype(jnp.float32)
-            scale = jnp.maximum(jnp.max(jnp.abs(delta)), 1e-30) / qmax
-            q = jnp.clip(jnp.round(delta / scale), qinfo.min, qinfo.max).astype(
-                cfg.qdtype
+            if cfg.scale is None:
+                scale = jnp.maximum(jnp.max(jnp.abs(delta)), 1e-30) / qmax
+            else:
+                scale = jnp.float32(cfg.scale)
+            qf = jnp.round(delta / scale)
+            overflow = overflow + jnp.sum(
+                (qf > qinfo.max) | (qf < qinfo.min), dtype=jnp.int32
             )
+            q = jnp.clip(qf, qinfo.min, qinfo.max).astype(cfg.qdtype)
             payload[name] = q
             payload[name + "/scale"] = scale.astype(jnp.float32)
             new_ref[name] = (r.astype(jnp.float32) + q.astype(jnp.float32) * scale
@@ -85,7 +106,7 @@ def encode_delta(slab: Slab, ref: Slab, cfg: DeltaConfig) -> Tuple[Slab, Slab]:
         else:
             payload[name] = x
             new_ref[name] = x
-    return payload, new_ref
+    return payload, new_ref, overflow
 
 
 def decode_delta(payload: Slab, ref: Slab, cfg: DeltaConfig) -> Tuple[Slab, Slab]:

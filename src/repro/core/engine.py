@@ -26,7 +26,6 @@ import numpy as np
 
 from repro.core.agent_soa import (
     AgentSoA,
-    AgentSchema,
     GID_COUNT,
     GID_RANK,
     POS,
@@ -75,6 +74,7 @@ class SimState:
     gid_counter: Array            # mesh_shape int32
     dropped: Array                # mesh_shape int32 cumulative overflow drops
     halo_bytes: Array             # mesh_shape int32 wire bytes of last aura update
+    codec_overflow: Array         # mesh_shape int32 cumulative clipped deltas
 
     def tree_flatten(self):
         ref_keys = tuple(sorted(self.refs))
@@ -84,19 +84,20 @@ class SimState:
         )
         ref_fields = tuple(tuple(sorted(self.refs[k])) for k in ref_keys)
         children = (self.soa, ref_children, self.it, self.key,
-                    self.gid_counter, self.dropped, self.halo_bytes)
+                    self.gid_counter, self.dropped, self.halo_bytes,
+                    self.codec_overflow)
         return children, (ref_keys, ref_fields)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         ref_keys, ref_fields = aux
-        soa, ref_children, it, key, gidc, dropped, hbytes = children
+        soa, ref_children, it, key, gidc, dropped, hbytes, coflow = children
         refs = {
             k: dict(zip(fields, vals))
             for k, fields, vals in zip(ref_keys, ref_fields, ref_children)
         }
         return cls(soa=soa, refs=refs, it=it, key=key, gid_counter=gidc,
-                   dropped=dropped, halo_bytes=hbytes)
+                   dropped=dropped, halo_bytes=hbytes, codec_overflow=coflow)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -115,6 +116,17 @@ class Engine:
     # Pallas kernel on TPU (2-D domains; 3-D always tiles);
     # "reference" | "tiled" | "pallas" force one.
     sweep_backend: str = "auto"
+    # Construction-time contract gate (analysis.contracts.enforce):
+    # "off" (default — the Simulation facade owns checking, and keeping
+    # internally-built engines identical preserves compiled-step cache
+    # hits), "warn" (emit a warning per error-severity finding), or
+    # "error" (raise ContractError).
+    check: str = "off"
+
+    def __post_init__(self):
+        if self.check != "off":
+            from repro.analysis.contracts import enforce
+            enforce(self, mode=self.check)
 
     # ------------------------------------------------------------------
     # Initialization (host side, numpy-friendly)
@@ -291,6 +303,7 @@ class Engine:
             gid_counter=jnp.asarray(counters),
             dropped=jnp.zeros(mesh, jnp.int32),
             halo_bytes=jnp.zeros(mesh, jnp.int32),
+            codec_overflow=jnp.zeros(mesh, jnp.int32),
         )
 
     # ------------------------------------------------------------------
@@ -322,13 +335,15 @@ class Engine:
         key = state.key[idx0]
         gidc = state.gid_counter[idx0]
         dropped = state.dropped[idx0]
+        coflow = state.codec_overflow[idx0]
 
         # 1. Aura update (rebuilt from scratch each iteration, §2.2.1).
         soa = clear_ring(soa) if owned is None \
             else mask_unowned(soa, geom, owned)
-        soa, refs, hbytes = halo_exchange(
+        soa, refs, hbytes, oflow = halo_exchange(
             geom, soa, comm, refs, self.delta_cfg, full_halo, owned
         )
+        coflow = coflow + oflow
 
         # 2. Local interaction (backend-dispatched fused sweep).
         acc = sweep_accumulate(
@@ -403,6 +418,7 @@ class Engine:
             gid_counter=_bcast(gidc, mesh),
             dropped=_bcast(dropped, mesh),
             halo_bytes=_bcast(hbytes, mesh),
+            codec_overflow=_bcast(coflow, mesh),
         )
 
     def _migrate(self, soa: AgentSoA, comm: Comm, origin: Array,
@@ -603,6 +619,13 @@ class Engine:
                                     threshold=self.imbalance_threshold)
         r = max(int(self.delta_cfg.refresh_interval), 1)
         force_full = False
+        # Fixed-scale delta codec can clip (adaptive scale never does):
+        # watch the accumulated overflow counter at every host control
+        # point and force a full refresh whenever any device clipped, so
+        # a saturated delta corrupts at most one segment of auras.
+        track_clip = (self.delta_cfg.enabled
+                      and self.delta_cfg.scale is not None)
+        clip_mark = codec_overflow_count(state) if track_clip else 0
 
         if step_fn is None and mesh is None:
             # No step function and no explicit mesh: derive the mesh from
@@ -633,6 +656,11 @@ class Engine:
                     or (i % r == 0)
                 state = seg_fn(state, nxt - i, full_first=full)
                 force_full = False
+                if track_clip:
+                    cnt = codec_overflow_count(state)
+                    if cnt > clip_mark:
+                        force_full = True
+                        clip_mark = cnt
                 i = nxt
             return eng, state, []
 
@@ -649,6 +677,11 @@ class Engine:
             full = force_full or (not self.delta_cfg.enabled) or (i % r == 0)
             state = step_fn(state, full_halo=full)
             force_full = False
+            if track_clip:
+                cnt = codec_overflow_count(state)
+                if cnt > clip_mark:
+                    force_full = True
+                    clip_mark = cnt
             if collect is not None:
                 series.append(collect(state))
         return eng, state, series
@@ -774,3 +807,10 @@ def warn_if_stale_engine(old: "Engine", new: "Engine",
 
 def total_agents(state: SimState) -> int:
     return int(jnp.sum(state.soa.valid))
+
+
+def codec_overflow_count(state: SimState) -> int:
+    """Largest per-device cumulative clipped-delta count (host-side read;
+    each device counts only its own sends, so the max — not the sum — is
+    the monotone 'did anyone clip since the mark' signal)."""
+    return int(jnp.max(state.codec_overflow))

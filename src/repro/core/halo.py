@@ -178,7 +178,8 @@ DIRS = dirs_for(2)
 
 def _codec_send(slab, ref, cfg: DeltaConfig, full: bool):
     if not cfg.enabled or full:
-        return encode_full(slab)
+        payload, new_ref = encode_full(slab)
+        return payload, new_ref, jnp.int32(0)
     return encode_delta(slab, ref, cfg)
 
 
@@ -196,10 +197,15 @@ def halo_exchange(
     cfg: DeltaConfig,
     full: bool,
     owned=None,
-) -> Tuple[AgentSoA, Dict[str, Slab], Array]:
+) -> Tuple[AgentSoA, Dict[str, Slab], Array, Array]:
     """Rebuild the aura ring from neighbor devices' boundary cells.
 
-    Returns (soa with ring filled, updated delta references, wire bytes).
+    Returns (soa with ring filled, updated delta references, wire bytes,
+    codec overflow count).  The overflow count is the number of elements
+    this device's sends saturated at the quantization range this exchange
+    (always 0 under the adaptive scale; see :func:`encode_delta`) — the
+    engine accumulates it so the driver can force a full refresh for
+    segments that clipped.
 
     ``refs`` carries, for each directed edge d in ``dirs_for(ndim)``,
     ``d + "_out"`` (what I last sent that way, receiver-reconstructed) and
@@ -220,12 +226,15 @@ def halo_exchange(
     shape = geom.local_shape
     new_refs = dict(refs)
     nbytes = 0
+    overflow = jnp.int32(0)
 
     def _exchange(soa, axis, src_index, dst_index, direction, out_key, in_key):
-        nonlocal nbytes, new_refs
+        nonlocal nbytes, new_refs, overflow
         slab = take_slab(soa, axis, src_index)
-        payload, ref_out = _codec_send(slab, new_refs[out_key], cfg, full)
+        payload, ref_out, oflow = _codec_send(
+            slab, new_refs[out_key], cfg, full)
         new_refs[out_key] = ref_out
+        overflow = overflow + oflow
         nbytes_local = payload_bytes(payload)
         recv = comm.shift(payload, axis, direction)
         recon, ref_in = _codec_recv(recv, new_refs[in_key], cfg, full)
@@ -247,7 +256,7 @@ def halo_exchange(
         nbytes += b
         soa, b = _exchange(soa, axis, 1, hi_dst, -1, c + "m_out", c + "p_in")
         nbytes += b
-    return soa, new_refs, jnp.int32(nbytes)
+    return soa, new_refs, jnp.int32(nbytes), overflow
 
 
 def init_refs(geom: Domain, soa: AgentSoA) -> Dict[str, Slab]:

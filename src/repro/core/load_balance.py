@@ -37,7 +37,7 @@ from __future__ import annotations
 
 import dataclasses
 import warnings
-from typing import List, Optional, Tuple
+from typing import Optional, Tuple
 
 import numpy as np
 

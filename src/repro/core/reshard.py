@@ -50,7 +50,7 @@ from typing import Callable, Dict, List, Optional, Tuple
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.agent_soa import GID_COUNT, GID_RANK, POS
+from repro.core.agent_soa import POS
 from repro.core.domain import Domain, Partition
 from repro.core.engine import Engine, SimState
 from repro.core.load_balance import (

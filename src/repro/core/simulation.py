@@ -38,7 +38,12 @@ import numpy as np
 from repro.core.behaviors import Behavior, compose
 from repro.core.delta import DeltaConfig
 from repro.core.domain import Domain
-from repro.core.engine import Engine, SimState, total_agents
+from repro.core.engine import (
+    Engine,
+    SimState,
+    codec_overflow_count,
+    total_agents,
+)
 from repro.core.operations import Operation, checkpoint_op
 from repro.core.reshard import Rebalancer, estimate_device_runtimes
 
@@ -114,6 +119,13 @@ class Simulation:
         (``"auto" | "reference" | "tiled" | "pallas"``, see
         docs/performance.md); ``"auto"`` picks the tiled XLA sweep on
         CPU/GPU and the Pallas kernel on TPU.
+      check: construction-time contract gate (docs/contracts.md).
+        ``"error"`` (default) raises :class:`repro.analysis.ContractError`
+        on any error-severity finding — e.g. a ``Behavior.radius`` larger
+        than ``cell_size``, which would silently drop interacting pairs;
+        ``"warn"`` demotes those to warnings; ``"off"`` skips the gate.
+        ``sim.validate()`` runs the full simcheck suite (contracts +
+        jaxpr audit + hot-path lint) on demand.
     """
 
     def __init__(self, geom: Union[Domain, Dict[str, Any]],
@@ -122,7 +134,8 @@ class Simulation:
                  dt: float = 1.0,
                  rebalance: Union[Rebalance, int, None] = None,
                  checkpoint: Union[Checkpoint, str, None] = None,
-                 sweep_backend: str = "auto"):
+                 sweep_backend: str = "auto",
+                 check: str = "error"):
         if isinstance(geom, dict):
             geom = Domain(**{**_GEOM_DEFAULTS, **geom})
         if isinstance(behaviors, Behavior):
@@ -130,10 +143,17 @@ class Simulation:
         else:
             behs = tuple(behaviors)
             behavior = behs[0] if len(behs) == 1 else compose(*behs)
+        # The engine is built ungated (check="off") and the facade runs the
+        # gate itself: internally-built engines stay structurally identical
+        # to pre-gate ones, so the module-level compiled-step caches keyed
+        # on the engine value never split.
         self.engine: Engine = Engine(
             geom=geom, behavior=behavior,
             delta_cfg=delta or DeltaConfig(enabled=False), dt=dt,
             sweep_backend=sweep_backend)
+        self._check = check
+        from repro.analysis.contracts import enforce
+        enforce(self.engine, mode=check)
         self.state: Optional[SimState] = None
         self.series: Dict[str, List[Any]] = {}
         self._mesh = mesh
@@ -198,6 +218,29 @@ class Simulation:
     def n_agents(self) -> int:
         return total_agents(self.state)
 
+    def validate(self, *, jaxpr: bool = True):
+        """Full simcheck suite over this simulation: static contracts
+        (stencil soundness, one-hop migration, aura sufficiency, codec
+        headroom, partition validity), hot-path lint of every leaf
+        behavior function, and — unless ``jaxpr=False`` — a jaxpr audit of
+        the traced step runner (ppermute permutation validity, host syncs,
+        dtype drift, cache-key stability).  Returns a
+        :class:`repro.analysis.Report`; see docs/contracts.md for the
+        catalogue.  Purely static — runs no simulation steps and costs
+        nothing on the hot path."""
+        from repro.analysis import (
+            Report,
+            check_engine,
+            lint_behavior,
+        )
+        rep = Report()
+        rep.extend(check_engine(self.engine))
+        rep.extend(lint_behavior(self.behavior))
+        if jaxpr:
+            from repro.analysis import audit_engine
+            rep.extend(audit_engine(self.engine))
+        return rep
+
     # ------------------------------------------------------------------
     # Setup
     # ------------------------------------------------------------------
@@ -261,6 +304,11 @@ class Simulation:
             self._step_fn = self._make_step() if self._step_fn else None
             self._seg_fn = None
             self._force_full = True
+            # a narrower uneven slab can invalidate the one-hop contract
+            # mid-run: re-gate the swapped-in geometry at the caller's mode
+            if self._check != "off":
+                from repro.analysis.contracts import enforce
+                enforce(self.engine, mode=self._check)
 
     def _fused_span(self, tick: int, remaining: int, ops) -> int:
         """Longest segment starting at ``tick`` with no host-side control
@@ -319,6 +367,11 @@ class Simulation:
         delta = self.engine.delta_cfg
         refresh = max(int(delta.refresh_interval), 1)
         rb = self.rebalancer
+        # Fixed-scale delta codec clip fallback (see Engine.drive): when
+        # any device's cumulative clipped-delta count grows, the clipped
+        # reconstruction is stale — force the next aura exchange full.
+        track_clip = delta.enabled and delta.scale is not None
+        clip_mark = codec_overflow_count(self.state) if track_clip else 0
 
         done = 0
         while done < int(steps):
@@ -345,6 +398,11 @@ class Simulation:
             if sample:
                 jax.block_until_ready(self.state.soa.valid)
                 self._last_step_s = time.perf_counter() - t0
+            if track_clip:
+                cnt = codec_overflow_count(self.state)
+                if cnt > clip_mark:
+                    self._force_full = True
+                    clip_mark = cnt
             for t in range(tick, tick + n):
                 for op in ops:
                     if not op.pre and op.due(t):
@@ -380,6 +438,7 @@ class Simulation:
                 rebalance: Union[Rebalance, int, None] = None,
                 checkpoint: Union[Checkpoint, str, None] = None,
                 ownership: Optional[str] = None,
+                check: str = "error",
                 ) -> "Simulation":
         """Elastic restore: rebuild a facade from a logical checkpoint onto
         the current (possibly different) device count.  ``ownership``
@@ -393,5 +452,6 @@ class Simulation:
             ckpt_dir, behaviors, n_devices=n_devices, delta_cfg=delta,
             dt=dt, ownership=ownership)
         sim = cls(engine.geom, behaviors, delta=delta or engine.delta_cfg,
-                  dt=engine.dt, rebalance=rebalance, checkpoint=checkpoint)
+                  dt=engine.dt, rebalance=rebalance, checkpoint=checkpoint,
+                  check=check)
         return sim.with_state(engine, state)

@@ -23,7 +23,6 @@ import os
 import pathlib
 import shutil
 import threading
-import time
 from typing import Any, Dict, Optional, Tuple
 
 import jax

@@ -18,7 +18,6 @@ histogram before re-initializing device state.
 
 from __future__ import annotations
 
-import math
 from typing import Optional, Tuple
 
 import jax

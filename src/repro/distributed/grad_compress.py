@@ -23,7 +23,6 @@ Two layers:
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, Optional, Tuple
 
 import jax

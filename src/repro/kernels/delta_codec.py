@@ -9,20 +9,22 @@ slabs streams HBM->VMEM->HBM without intermediate f32 materialization.
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _encode_kernel(x_ref, ref_ref, scale_ref, q_ref):
+def _encode_kernel(x_ref, ref_ref, scale_ref, q_ref, oflow_ref):
     x = x_ref[...].astype(jnp.float32)
     r = ref_ref[...].astype(jnp.float32)
     s = scale_ref[0]
-    d = (x - r) / s
-    q_ref[...] = jnp.clip(jnp.round(d), -127.0, 127.0).astype(jnp.int8)
+    d = jnp.round((x - r) / s)
+    # Count saturating elements before clipping: silent ±127 clipping is a
+    # correctness hazard (the receiver reconstructs a stale value) that the
+    # caller must be able to observe and react to (full-refresh fallback).
+    oflow_ref[0] = jnp.sum((jnp.abs(d) > 127.0).astype(jnp.int32))
+    q_ref[...] = jnp.clip(d, -127.0, 127.0).astype(jnp.int8)
 
 
 def _decode_kernel(q_ref, ref_ref, scale_ref, x_ref):
@@ -41,23 +43,36 @@ def _blocked(n: int, block: int) -> int:
 
 def delta_encode_kernel(x, ref, scale, *, block: int = 1024,
                         interpret: bool = True):
-    """x, ref: (N, L) f32; scale: () f32 -> q (N, L) int8."""
+    """x, ref: (N, L) f32; scale: () f32 ->
+    (q (N, L) int8, overflow () int32).
+
+    ``overflow`` counts elements whose quantized delta saturated at ±127
+    (each is reconstructed with error > scale/2 on the receiver) — zero
+    when the caller derives ``scale`` from max |delta|."""
     n, l = x.shape
     bn = _blocked(n, block)
+    grid = n // bn
     scale_arr = jnp.asarray(scale, jnp.float32).reshape(1)
-    return pl.pallas_call(
+    q, oflow = pl.pallas_call(
         _encode_kernel,
-        grid=(n // bn,),
+        grid=(grid,),
         in_specs=[
             pl.BlockSpec((bn, l), lambda i: (i, 0)),
             pl.BlockSpec((bn, l), lambda i: (i, 0)),
             pl.BlockSpec((1,), lambda i: (0,),
                          memory_space=pltpu.SMEM),
         ],
-        out_specs=pl.BlockSpec((bn, l), lambda i: (i, 0)),
-        out_shape=jax.ShapeDtypeStruct((n, l), jnp.int8),
+        out_specs=[
+            pl.BlockSpec((bn, l), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, l), jnp.int8),
+            jax.ShapeDtypeStruct((grid,), jnp.int32),
+        ],
         interpret=interpret,
     )(x, ref, scale_arr)
+    return q, jnp.sum(oflow)
 
 
 def delta_decode_kernel(q, ref, scale, *, block: int = 1024,

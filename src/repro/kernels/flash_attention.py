@@ -10,7 +10,6 @@ same kernel compiles to the systolic pipeline.
 from __future__ import annotations
 
 import functools
-import math
 
 import jax
 import jax.numpy as jnp

@@ -89,11 +89,25 @@ def neighborhood_pair_sweep(
 
 @jax.jit
 def delta_encode(x, ref):
-    """(N, L) f32 slab -> (q int8, scale f32)."""
+    """(N, L) f32 slab -> (q int8, scale f32).  The adaptive scale is
+    derived from max |delta|, so quantization never saturates (the
+    kernel's overflow count is identically zero and discarded here)."""
     scale = jnp.maximum(jnp.max(jnp.abs(x - ref)), 1e-30) / 127.0
-    q = delta_codec.delta_encode_kernel(x, ref, scale,
-                                        interpret=use_interpret())
+    q, _ = delta_codec.delta_encode_kernel(x, ref, scale,
+                                           interpret=use_interpret())
     return q, scale
+
+
+@jax.jit
+def delta_encode_fixed(x, ref, scale):
+    """(N, L) f32 slab at a caller-fixed scale -> (q int8, overflow int32).
+
+    A fixed scale drops the per-slab f32 from the wire but can clip:
+    ``overflow`` counts elements that saturated at ±127 so the caller can
+    fall back to a full refresh (see docs/contracts.md, codec-headroom)."""
+    q, oflow = delta_codec.delta_encode_kernel(x, ref, scale,
+                                               interpret=use_interpret())
+    return q, oflow
 
 
 @jax.jit

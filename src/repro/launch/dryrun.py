@@ -24,7 +24,7 @@ import traceback
 
 import jax
 
-from repro.configs.base import get, names
+from repro.configs.base import get
 from repro.launch.mesh import make_production_mesh
 from repro.launch.specs import SHAPES, cells, input_specs, skip_reason
 from repro.roofline import Roofline, analyze_hlo, model_flops_for_cell

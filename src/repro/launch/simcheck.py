@@ -1,0 +1,168 @@
+"""simcheck — static distributed-correctness audit of simulations + repo.
+
+    PYTHONPATH=src python -m repro.launch.simcheck --sim tumor_spheroid --strict
+    PYTHONPATH=src python -m repro.launch.simcheck --sim all --lint --strict
+    PYTHONPATH=src python -m repro.launch.simcheck --lint src/repro --format json
+
+Three passes (docs/contracts.md catalogues every contract):
+
+* **contracts** — stencil soundness, one-hop migration, aura sufficiency,
+  codec headroom, partition validity, over each sim's geometry + behavior
+  stack — including *virtual* multi-device variants (an equal split and an
+  uneven RCB cut of the same global domain), so a sim that only ships a
+  single-device default still gets its distributed contracts checked
+  without any devices present.
+* **jaxpr audit** — the step body traced with ``jax.make_jaxpr`` under the
+  mesh axis environment: ppermute permutation validity, host-sync
+  primitives, dtype drift, int8 arithmetic, cache-key stability.
+* **lint** — AST checks over source files and behavior hot functions.
+
+Exit code 0 when clean; 1 on any error (or, with ``--strict``, warning).
+Everything here is static — no simulation steps run, no devices needed.
+"""
+
+from __future__ import annotations
+
+import argparse
+import dataclasses
+import importlib
+import pathlib
+import sys
+from typing import List, Optional, Sequence, Tuple
+
+from repro.analysis import (
+    ContractError,
+    Report,
+    audit_engine,
+    check_engine,
+    lint_behavior,
+    lint_paths,
+    with_context,
+)
+
+SIMS = ["cell_clustering", "cell_proliferation", "epidemiology",
+        "oncology", "sir_mechanics", "tumor_spheroid"]
+
+
+def virtual_variants(engine) -> List[Tuple[str, object]]:
+    """Multi-device variants of a single-device engine's geometry — an
+    equal split and an uneven RCB-style cut over the same global domain.
+
+    The static checks and ``make_jaxpr`` tracing need no devices, so the
+    distributed contracts of a sim are checked on any host, exactly as
+    they would bind on a real mesh."""
+    geom = engine.geom
+    if geom.n_devices > 1 or geom.partition is not None:
+        return []  # already distributed: the base engine covers it
+    out: List[Tuple[str, object]] = []
+    g = geom.global_cells
+    mesh2 = tuple(2 if gc >= 2 and gc % 2 == 0 else 1 for gc in g)
+    if any(m > 1 for m in mesh2):
+        label = "mesh=" + "x".join(str(m) for m in mesh2)
+        out.append((label, dataclasses.replace(
+            engine, geom=geom.with_mesh_shape(mesh2))))
+    # Uneven two-slab cut per axis with enough cells: the narrower slab
+    # tightens the one-hop bound the way a real RCB plan would.
+    widths = []
+    for gc in g:
+        if gc >= 4:
+            lo = gc // 2 - 1
+            widths.append((lo, gc - lo))
+        elif gc >= 3:
+            widths.append((1, gc - 1))
+        else:
+            widths.append((gc,))
+    from repro.core import Partition
+    part = Partition.from_widths(widths)
+    if any(len(w) > 1 for w in widths) and not part.is_equal:
+        out.append(("rcb=" + "/".join(
+            "+".join(str(v) for v in w) for w in widths),
+            dataclasses.replace(engine, geom=geom.repartition(part))))
+    return out
+
+
+def check_simulation(sim, *, jaxpr: bool = True,
+                     variants: bool = True) -> Report:
+    """Full simcheck over a built :class:`repro.core.Simulation`: the base
+    engine plus (optionally) its virtual distributed variants."""
+    rep = Report()
+    rep.extend(check_engine(sim.engine))
+    rep.extend(lint_behavior(sim.behavior))
+    if jaxpr:
+        rep.extend(audit_engine(sim.engine))
+    if variants:
+        for label, eng in virtual_variants(sim.engine):
+            diags = check_engine(eng)
+            if jaxpr:
+                diags = diags + audit_engine(eng)
+            rep.extend(with_context(diags, label))
+    return rep
+
+
+def check_sim_module(name: str, *, jaxpr: bool = True,
+                     variants: bool = True) -> Report:
+    """Build ``repro.sims.<name>.simulation()`` and simcheck it.  A
+    construction-time :class:`ContractError` (the facade's own gate)
+    becomes the report's findings instead of a stack trace."""
+    mod = importlib.import_module(f"repro.sims.{name}")
+    try:
+        sim = mod.simulation()
+    except ContractError as e:
+        rep = Report()
+        rep.extend(with_context(e.diagnostics, f"sims.{name}"))
+        return rep
+    rep = check_simulation(sim, jaxpr=jaxpr, variants=variants)
+    rep.diagnostics = with_context(rep.diagnostics, f"sims.{name}")
+    return rep
+
+
+def _default_lint_root() -> str:
+    import repro
+    return str(pathlib.Path(repro.__file__).parent)
+
+
+def main(argv: Optional[Sequence[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.launch.simcheck",
+        description="static contract checker, jaxpr auditor, and repo "
+                    "lint (docs/contracts.md)")
+    ap.add_argument("--sim", action="append", default=[],
+                    choices=SIMS + ["all"], metavar="SIM",
+                    help="sim to check (repeatable; 'all' checks every "
+                         f"shipped sim: {', '.join(SIMS)})")
+    ap.add_argument("--lint", nargs="*", metavar="PATH",
+                    help="lint source paths (flag alone lints the "
+                         "installed repro package)")
+    ap.add_argument("--strict", action="store_true",
+                    help="warnings also fail (errors always do)")
+    ap.add_argument("--format", default="text", choices=["text", "json"])
+    ap.add_argument("--no-jaxpr", action="store_true",
+                    help="skip the make_jaxpr step audit (faster)")
+    ap.add_argument("--no-variants", action="store_true",
+                    help="skip the virtual multi-device variants")
+    args = ap.parse_args(argv)
+
+    sims = list(args.sim)
+    if "all" in sims:
+        sims = SIMS
+    if not sims and args.lint is None:
+        # bare invocation: audit everything
+        sims = SIMS
+        args.lint = []
+
+    rep = Report()
+    if args.lint is not None:
+        paths = list(args.lint) or [_default_lint_root()]
+        rep.extend(lint_paths(paths))
+    for name in sims:
+        rep.extend(check_sim_module(
+            name, jaxpr=not args.no_jaxpr,
+            variants=not args.no_variants))
+
+    out = rep.format_json() if args.format == "json" else rep.format_text()
+    print(out)
+    return rep.exit_code(strict=args.strict)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -13,14 +13,12 @@ Skip rules (recorded per DESIGN.md §Shape-skips):
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Dict, Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import ArchConfig, get
-from repro.data.pipeline import SyntheticLM
 from repro.distributed.sharding import spec_for
 from repro.models.model import Model, build_model
 from repro.models.params import abstract as abstract_params

@@ -9,7 +9,7 @@ ShapeDtypeStructs for the allocation-free dry-run path.
 from __future__ import annotations
 
 import dataclasses
-from typing import Callable, Optional, Sequence, Tuple
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp

@@ -37,6 +37,7 @@ def make_sim(
     rebalance: Union[Rebalance, int, None] = None,
     checkpoint=None,
     sweep_backend: str = "auto",
+    check: str = "error",
 ) -> Simulation:
     """Facade builder with the sims' historical geometry defaults.
 
@@ -61,7 +62,7 @@ def make_sim(
     return Simulation(
         geom, behaviors, mesh=mesh, delta=delta, dt=dt,
         rebalance=rebalance, checkpoint=checkpoint,
-        sweep_backend=sweep_backend)
+        sweep_backend=sweep_backend, check=check)
 
 
 def init_agents(sim, positions: np.ndarray, attrs, seed: int = 0):

@@ -1,0 +1,611 @@
+"""simcheck acceptance tests: contract checker, jaxpr auditor, hot-path
+lint, the construction gate, and the runtime clip fallback.
+
+The five hazards the simcheck PR must catch (each silently corrupted a run
+before):
+
+1. ``Behavior.radius > cell_size``          -> ``stencil-soundness`` error
+2. per-step displacement >= min slab width  -> ``one-hop-migration`` error
+3. fixed delta scale with < 1.0 headroom    -> ``codec-headroom`` error
+4. non-permutation ``ppermute`` edge list   -> ``collective-matching`` error
+5. ``.item()`` / Python ``if`` in a hot fn  -> ``hot-host-sync`` /
+   ``hot-python-branch`` error (lint) and a converted
+   ConcretizationTypeError (jaxpr audit)
+
+plus property tests pinning the checker against brute force: the stencil
+check accepts iff the actual neighborhood sweep drops no interacting pair,
+and the one-hop check flags iff a numpy slab-crossing search finds a
+two-cut hop.
+"""
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from hypothesis_compat import given, settings, st
+
+from repro.analysis import (
+    ContractError,
+    Report,
+    audit_engine,
+    audit_fn,
+    check_contracts,
+    check_engine,
+    displacement_bound,
+    enforce,
+    lint_behavior,
+    lint_hot_fn,
+    lint_source,
+    min_slab_width_cells,
+)
+from repro.analysis.contracts import (
+    CONTRACT_AURA,
+    CONTRACT_HEADROOM,
+    CONTRACT_ONE_HOP,
+    CONTRACT_PARTITION,
+    CONTRACT_STENCIL,
+)
+from repro.analysis.jaxpr_audit import (
+    CONTRACT_COLLECTIVE,
+    CONTRACT_HOST_SYNC,
+)
+from repro.analysis.lint import (
+    CONTRACT_HOT_BRANCH,
+    CONTRACT_HOT_NUMPY,
+    CONTRACT_HOT_SYNC,
+    CONTRACT_MUTABLE_DEFAULT,
+    CONTRACT_SHADOWED_IMPORT,
+    CONTRACT_UNUSED_IMPORT,
+)
+from repro.core import (
+    AgentSchema, Behavior, DeltaConfig, Domain, Engine, Partition,
+    Simulation,
+)
+from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
+from repro.core.delta import encode_delta
+from repro.core.engine import codec_overflow_count
+from repro.core.neighbors import sweep_accumulate
+
+SCHEMA = AgentSchema.create({"diameter": ((), jnp.float32),
+                             "ctype": ((), jnp.int32)})
+
+
+def mech_behavior(radius=2.0, max_step=0.5, **extra):
+    params = {"repulsion": 2.0, "adhesion": 0.4, "same_type_only": 1.0,
+              "max_step": max_step}
+    params.update(extra)
+    return Behavior(schema=SCHEMA, pair_fn=soft_repulsion_adhesion,
+                    pair_attrs=("diameter", "ctype"),
+                    update_fn=displacement_update, radius=radius,
+                    params=params)
+
+
+def contracts_of(diags):
+    return {d.contract for d in diags}
+
+
+# ---------------------------------------------------------------------------
+# 1. stencil-soundness: radius vs cell_size
+# ---------------------------------------------------------------------------
+
+def test_radius_over_cell_size_is_stencil_error():
+    geom = Domain(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1), cap=8)
+    diags = check_contracts(geom, mech_behavior(radius=3.0))
+    errs = [d for d in diags if d.severity == "error"]
+    assert contracts_of(errs) == {CONTRACT_STENCIL}
+    # radius == cell_size is the documented boundary: legal
+    assert not check_contracts(geom, mech_behavior(radius=2.0))
+
+
+def test_sharded_radius_violation_adds_aura_error():
+    geom = Domain(cell_size=2.0, interior=(6, 6), mesh_shape=(2, 1), cap=8)
+    diags = check_contracts(geom, mech_behavior(radius=2.5))
+    errs = contracts_of(d for d in diags if d.severity == "error")
+    assert CONTRACT_STENCIL in errs and CONTRACT_AURA in errs
+
+
+def test_composed_stack_reports_offending_leaf():
+    from repro.core import compose
+    bad = mech_behavior(radius=5.0)
+    comp = compose(mech_behavior(radius=2.0), bad)
+    geom = Domain(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1), cap=8)
+    diags = [d for d in check_contracts(geom, comp)
+             if d.contract == CONTRACT_STENCIL]
+    assert len(diags) == 1 and "b1" in diags[0].location
+
+
+def test_simulation_gate_rejects_radius_over_cell_size():
+    geom = dict(cell_size=2.0, interior=(6, 6), cap=8)
+    with pytest.raises(ContractError) as e:
+        Simulation(geom, mech_behavior(radius=3.0), dt=0.1)
+    assert CONTRACT_STENCIL in {d.contract for d in e.value.diagnostics}
+    # escape hatches
+    with pytest.warns(UserWarning, match="simcheck contract"):
+        Simulation(geom, mech_behavior(radius=3.0), dt=0.1, check="warn")
+    Simulation(geom, mech_behavior(radius=3.0), dt=0.1, check="off")
+    with pytest.raises(ValueError, match="check mode"):
+        Simulation(geom, mech_behavior(radius=3.0), dt=0.1, check="loose")
+
+
+def test_engine_check_field_gates_construction():
+    geom = Domain(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1), cap=8)
+    Engine(geom=geom, behavior=mech_behavior(radius=3.0))  # default: off
+    with pytest.raises(ContractError):
+        Engine(geom=geom, behavior=mech_behavior(radius=3.0), check="error")
+
+
+def test_make_sim_gate_and_escape_hatch():
+    from repro.sims.common import make_sim
+    with pytest.raises(ContractError):
+        make_sim(mech_behavior(radius=3.0), cell_size=2.0, interior=(6, 6))
+    with pytest.warns(UserWarning, match="simcheck contract"):
+        make_sim(mech_behavior(radius=3.0), cell_size=2.0, interior=(6, 6),
+                 check="warn")
+
+
+# ---------------------------------------------------------------------------
+# 2. one-hop-migration: displacement vs narrowest slab
+# ---------------------------------------------------------------------------
+
+def test_one_hop_hard_bound_error_and_clean_pass():
+    geom = Domain(cell_size=2.0, interior=(4, 4), mesh_shape=(2, 1), cap=8)
+    # limit = 4 cells * 2.0 = 8.0 world units on the sharded axis
+    bad = check_contracts(geom, mech_behavior(max_step=8.0))
+    hop = [d for d in bad if d.contract == CONTRACT_ONE_HOP]
+    assert len(hop) == 1 and hop[0].severity == "error"
+    assert "axis 0" in hop[0].message
+    ok = check_contracts(geom, mech_behavior(max_step=7.5))
+    assert CONTRACT_ONE_HOP not in contracts_of(ok)
+
+
+def test_one_hop_unsharded_axes_unconstrained():
+    geom = Domain(cell_size=2.0, interior=(4, 4), mesh_shape=(1, 1), cap=8)
+    assert not check_contracts(geom, mech_behavior(max_step=50.0))
+
+
+def test_one_hop_stochastic_bound_is_warning():
+    geom = Domain(cell_size=2.0, interior=(4, 4), mesh_shape=(2, 1), cap=8)
+    beh = Behavior(schema=SCHEMA, pair_fn=soft_repulsion_adhesion,
+                   pair_attrs=("diameter", "ctype"),
+                   update_fn=displacement_update, radius=2.0,
+                   params={"sigma": 2.5})   # 4*sigma = 10 >= 8
+    hop = [d for d in check_contracts(geom, beh)
+           if d.contract == CONTRACT_ONE_HOP]
+    assert len(hop) == 1 and hop[0].severity == "warning"
+
+
+def test_one_hop_unverifiable_bound_is_info():
+    geom = Domain(cell_size=2.0, interior=(4, 4), mesh_shape=(2, 1), cap=8)
+    beh = Behavior(schema=SCHEMA, pair_fn=soft_repulsion_adhesion,
+                   pair_attrs=("diameter", "ctype"),
+                   update_fn=displacement_update, radius=2.0, params={})
+    hop = [d for d in check_contracts(geom, beh)
+           if d.contract == CONTRACT_ONE_HOP]
+    assert len(hop) == 1 and hop[0].severity == "info"
+    assert displacement_bound(beh).kind == "unknown"
+
+
+def test_declared_max_displacement_overrides_inference():
+    geom = Domain(cell_size=2.0, interior=(4, 4), mesh_shape=(2, 1), cap=8)
+    beh = dataclasses.replace(mech_behavior(max_step=50.0),
+                              max_displacement=0.5)
+    assert displacement_bound(beh).kind == "hard"
+    assert displacement_bound(beh).value == 0.5
+    assert CONTRACT_ONE_HOP not in contracts_of(check_contracts(geom, beh))
+
+
+def test_rcb_narrow_slab_tightens_one_hop_bound():
+    base = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1), cap=8)
+    geom = base.repartition(Partition.from_widths(((2, 6), (8,))))
+    assert min_slab_width_cells(geom, 0) == 2      # limit 4.0 world units
+    beh = mech_behavior(max_step=5.0)              # legal on the 4+4 split
+    equal = base.with_mesh_shape((2, 1))
+    assert CONTRACT_ONE_HOP not in contracts_of(check_contracts(equal, beh))
+    hop = [d for d in check_contracts(geom, beh)
+           if d.contract == CONTRACT_ONE_HOP]
+    assert len(hop) == 1 and hop[0].severity == "error"
+
+
+# ---------------------------------------------------------------------------
+# 3. codec-headroom: fixed quantization scale vs worst-case delta
+# ---------------------------------------------------------------------------
+
+def test_codec_headroom_fixed_scale_too_small_is_error():
+    geom = Domain(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1), cap=8)
+    beh = mech_behavior(max_step=0.5)
+    bad = DeltaConfig(enabled=True, qdtype=jnp.int8, scale=1e-3)
+    diags = [d for d in check_contracts(geom, beh, bad)
+             if d.contract == CONTRACT_HEADROOM]
+    assert len(diags) == 1 and diags[0].severity == "error"
+    # representable 127e-3 = 0.127 < 0.5
+    assert "0.127" in diags[0].message
+
+
+def test_codec_headroom_warning_band_and_clean():
+    geom = Domain(cell_size=2.0, interior=(6, 6), mesh_shape=(1, 1), cap=8)
+    beh = mech_behavior(max_step=0.5)
+    tight = DeltaConfig(enabled=True, qdtype=jnp.int8, scale=0.005)
+    diags = [d for d in check_contracts(geom, beh, tight)
+             if d.contract == CONTRACT_HEADROOM]
+    assert len(diags) == 1 and diags[0].severity == "warning"  # 1.27x
+    roomy = DeltaConfig(enabled=True, qdtype=jnp.int8, scale=0.01)
+    assert CONTRACT_HEADROOM not in contracts_of(
+        check_contracts(geom, beh, roomy))                     # 2.54x
+    adaptive = DeltaConfig(enabled=True, qdtype=jnp.int8)      # scale=None
+    assert CONTRACT_HEADROOM not in contracts_of(
+        check_contracts(geom, beh, adaptive))
+
+
+# ---------------------------------------------------------------------------
+# partition-validity
+# ---------------------------------------------------------------------------
+
+def test_partition_validity_cell_size_and_cut_coverage():
+    geom = Domain(cell_size=-1.0, interior=(4, 4), mesh_shape=(1, 1), cap=8)
+    diags = check_contracts(geom, mech_behavior())
+    errs = [d for d in diags if d.severity == "error"]
+    assert CONTRACT_PARTITION in contracts_of(errs)
+    assert any("must be positive" in d.message for d in errs)
+
+
+# ---------------------------------------------------------------------------
+# 4. jaxpr audit: planted bad ppermute
+# ---------------------------------------------------------------------------
+
+def test_audit_fn_flags_duplicate_source_ppermute():
+    x = jnp.zeros((4,), jnp.float32)
+    bad = lambda v: jax.lax.ppermute(v, "sx", [(0, 1), (0, 0)])  # noqa: E731
+    diags = audit_fn(bad, x, axis_env=(("sx", 2),), context="planted")
+    hits = [d for d in diags if d.contract == CONTRACT_COLLECTIVE]
+    assert len(hits) == 1 and hits[0].severity == "error"
+    assert "duplicate sources" in hits[0].message
+
+
+def test_audit_fn_flags_out_of_range_and_dead_axis():
+    x = jnp.zeros((4,), jnp.float32)
+    oor = lambda v: jax.lax.ppermute(v, "sx", [(0, 3)])          # noqa: E731
+    diags = audit_fn(oor, x, axis_env=(("sx", 2),))
+    assert any(d.contract == CONTRACT_COLLECTIVE
+               and "outside [0, 2)" in d.message for d in diags)
+    # a dead axis name is rejected by jax at trace time; audit_fn converts
+    # the NameError into the collective-matching finding it is
+    dead = lambda v: jax.lax.ppermute(v, "zz", [(0, 1)])         # noqa: E731
+    diags = audit_fn(dead, x, axis_env=(("sx", 2),))
+    assert any(d.contract == CONTRACT_COLLECTIVE
+               and "zz" in d.message for d in diags)
+    # and the jaxpr walker itself flags an axis the live mesh doesn't have
+    # (a step traced under one axis env but audited against another)
+    from repro.analysis import audit_jaxpr
+    closed = jax.make_jaxpr(dead, axis_env=[("zz", 2)])(x)
+    diags = audit_jaxpr(closed, {"sx": 2}, context="mismatch")
+    assert any(d.contract == CONTRACT_COLLECTIVE
+               and "'zz'" in d.message for d in diags)
+
+
+def test_audit_fn_accepts_partial_ring_permutation():
+    x = jnp.zeros((4,), jnp.float32)
+    # open-chain halo shift: 0->1, 1->2 (no wrap) — partial is legal
+    ok = lambda v: jax.lax.ppermute(v, "sx", [(0, 1), (1, 2)])   # noqa: E731
+    assert not audit_fn(ok, x, axis_env=(("sx", 3),))
+
+
+# ---------------------------------------------------------------------------
+# 5. hidden host sync: .item() / Python branch in a hot function
+# ---------------------------------------------------------------------------
+
+def _item_update(attrs, valid, acc, key, params, dt):
+    drift = attrs["diameter"].sum().item()   # traced -> host escape
+    new = dict(attrs)
+    new["diameter"] = attrs["diameter"] + drift
+    return new, valid, jnp.zeros_like(valid), None
+
+
+def test_lint_flags_planted_item_in_update_fn():
+    beh = dataclasses.replace(mech_behavior(), update_fn=_item_update)
+    diags = lint_behavior(beh)
+    hits = [d for d in diags if d.contract == CONTRACT_HOT_SYNC]
+    assert hits and all(d.severity == "error" for d in hits)
+    assert any("update_fn" in d.location
+               and "test_analysis.py" in d.location for d in hits)
+
+
+def test_jaxpr_audit_converts_item_to_diagnostic():
+    f = lambda v: v * v.sum().item()                             # noqa: E731
+    diags = audit_fn(f, jnp.ones((3,), jnp.float32), context="planted")
+    assert [d.contract for d in diags] == [CONTRACT_HOST_SYNC]
+    assert diags[0].severity == "error"
+
+
+def test_lint_flags_python_branch_on_traced_value():
+    def branchy(attrs, valid, acc, key, params, dt):
+        if valid.sum() > 0:   # tracer branch
+            return attrs, valid, jnp.zeros_like(valid), None
+        return attrs, valid, valid, None
+
+    diags = lint_hot_fn(branchy, label="branchy")
+    assert any(d.contract == CONTRACT_HOT_BRANCH
+               and d.severity == "error" for d in diags)
+
+
+def test_lint_allows_static_branches_and_none_checks():
+    def fine(attrs, valid, acc, key, params, dt):
+        if params["mode"] > 0:     # params are static
+            scale = 2.0
+        else:
+            scale = 1.0
+        if acc is None:            # None-checks are shape-static
+            return attrs, valid, jnp.zeros_like(valid), None
+        new = dict(attrs)
+        new["diameter"] = attrs["diameter"] * scale
+        return new, valid, jnp.zeros_like(valid), None
+
+    assert not lint_hot_fn(fine, label="fine")
+
+
+def test_lint_flags_numpy_in_hot_fn():
+    def uses_np(attrs, valid, acc, key, params, dt):
+        new = dict(attrs)
+        new["diameter"] = attrs["diameter"] + np.float32(1.0)
+        return new, valid, jnp.zeros_like(valid), None
+
+    diags = lint_hot_fn(uses_np, label="uses_np")
+    assert any(d.contract == CONTRACT_HOT_NUMPY for d in diags)
+
+
+# ---------------------------------------------------------------------------
+# module lint
+# ---------------------------------------------------------------------------
+
+def test_lint_source_unused_import_and_noqa():
+    src = "import os\nimport sys  # noqa\nprint(1)\n"
+    diags = lint_source(src, "mod.py")
+    assert [d.contract for d in diags] == [CONTRACT_UNUSED_IMPORT]
+    assert "os" in diags[0].message
+
+
+def test_lint_source_mutable_default_and_shadow():
+    src = ("import json\n"
+           "def f(x, acc=[]):\n"
+           "    acc.append(x)\n"
+           "    return acc\n"
+           "json = 'oops'\n")
+    got = contracts_of(lint_source(src, "mod.py"))
+    assert CONTRACT_MUTABLE_DEFAULT in got
+    assert CONTRACT_SHADOWED_IMPORT in got
+
+
+def test_lint_source_subscript_store_is_not_a_shadow():
+    src = ("import os\n"
+           "os.environ['XLA_FLAGS'] = 'x'\n")
+    assert not lint_source(src, "mod.py")
+
+
+# ---------------------------------------------------------------------------
+# jaxpr audit of real engines + the simcheck CLI
+# ---------------------------------------------------------------------------
+
+def test_audit_engine_clean_on_healthy_sharded_engine():
+    geom = Domain(cell_size=2.0, interior=(4, 4), mesh_shape=(2, 2), cap=8,
+                  boundary="toroidal")
+    eng = Engine(geom=geom, behavior=mech_behavior())
+    diags = audit_engine(eng)
+    assert not [d for d in diags if d.severity != "info"]
+
+
+def test_audit_engine_flags_item_behavior():
+    geom = Domain(cell_size=2.0, interior=(4, 4), mesh_shape=(1, 1), cap=8)
+    beh = dataclasses.replace(mech_behavior(), update_fn=_item_update)
+    eng = Engine(geom=geom, behavior=beh)
+    diags = audit_engine(eng)
+    assert any(d.contract == CONTRACT_HOST_SYNC
+               and d.severity == "error" for d in diags)
+
+
+def test_simulation_validate_returns_clean_report():
+    sim = Simulation(dict(interior=(6, 6), cap=12), mech_behavior(),
+                     dt=0.1)
+    rep = sim.validate()
+    assert isinstance(rep, Report)
+    assert rep.exit_code(strict=True) == 0
+
+
+def test_simcheck_cli_shipped_sims_pass_strict(capsys):
+    from repro.launch.simcheck import main
+    assert main(["--sim", "tumor_spheroid", "--strict"]) == 0
+    assert main(["--sim", "epidemiology", "--strict",
+                 "--format", "json"]) == 0
+    out = capsys.readouterr().out
+    assert '"diagnostics"' in out
+
+
+def test_simcheck_cli_lint_failure_exit_code(tmp_path, capsys):
+    bad = tmp_path / "bad.py"
+    bad.write_text("import os\n\n\ndef f(x=[]):\n    return x\n")
+    from repro.launch.simcheck import main
+    # unused-import / mutable-default are warnings: clean exit by default,
+    # failure under --strict
+    assert main(["--lint", str(bad)]) == 0
+    assert main(["--lint", str(bad), "--strict"]) == 1
+
+
+def test_simcheck_virtual_variants_cover_uneven_cuts():
+    from repro.launch.simcheck import virtual_variants
+    geom = Domain(cell_size=2.0, interior=(10, 10), mesh_shape=(1, 1),
+                  cap=12)
+    eng = Engine(geom=geom, behavior=mech_behavior())
+    labels = [lbl for lbl, _ in virtual_variants(eng)]
+    assert any(lbl.startswith("mesh=") for lbl in labels)
+    assert any(lbl.startswith("rcb=") for lbl in labels)
+    # distributed engines are their own coverage
+    sharded = Engine(geom=geom.with_mesh_shape((2, 1)),
+                     behavior=mech_behavior())
+    assert virtual_variants(sharded) == []
+
+
+# ---------------------------------------------------------------------------
+# runtime fallback: fixed-scale delta clipping forces a full refresh
+# ---------------------------------------------------------------------------
+
+def test_encode_delta_fixed_scale_counts_overflow():
+    cfg = DeltaConfig(enabled=True, qdtype=jnp.int8, scale=0.01)
+    ref = {"pos": jnp.zeros((8, 2), jnp.float32)}
+    x = {"pos": ref["pos"] + 10.0}           # q = 1000 >> 127
+    payload, _, oflow = encode_delta(x, ref, cfg)
+    assert int(oflow) == 16
+    small = {"pos": ref["pos"] + 0.5}        # q = 50, in range
+    _, _, oflow = encode_delta(small, ref, cfg)
+    assert int(oflow) == 0
+
+
+def test_drive_forces_full_refresh_after_clip():
+    """A clipping fixed-scale codec must trip the full-refresh fallback at
+    the next host control point — the step after a clipped delta exchange
+    re-sends full auras instead of stacking reconstruction error."""
+    geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+                  cap=24, boundary="toroidal")
+    cfg = DeltaConfig(enabled=True, qdtype=jnp.int8, refresh_interval=4,
+                      scale=1e-7)            # every nonzero delta clips
+    eng = Engine(geom=geom, behavior=mech_behavior(), delta_cfg=cfg, dt=0.1)
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0.5, 15.5, (250, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((250,), 1.2, np.float32),
+             "ctype": rng.integers(0, 2, 250).astype(np.int32)}
+    state = eng.init_state(pos, attrs, seed=0)
+
+    inner = eng.make_local_step()
+    fulls = []
+
+    def spy(s, full_halo):
+        fulls.append(bool(full_halo))
+        return inner(s, full_halo=full_halo)
+
+    _, state, _ = eng.drive(state, 6, step_fn=spy)
+    assert int(codec_overflow_count(state)) > 0
+    # schedule alone would be [T, F, F, F, T, F]; the fallback turns every
+    # step after a clipped delta exchange into a full refresh
+    assert fulls[0] is True and fulls[1] is False
+    assert fulls[2] is True
+
+
+def test_drive_no_fallback_with_adaptive_scale():
+    geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+                  cap=24, boundary="toroidal")
+    cfg = DeltaConfig(enabled=True, qdtype=jnp.int8, refresh_interval=4)
+    eng = Engine(geom=geom, behavior=mech_behavior(), delta_cfg=cfg, dt=0.1)
+    rng = np.random.default_rng(0)
+    pos = rng.uniform(0.5, 15.5, (250, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((250,), 1.2, np.float32),
+             "ctype": rng.integers(0, 2, 250).astype(np.int32)}
+    state = eng.init_state(pos, attrs, seed=0)
+    inner = eng.make_local_step()
+    fulls = []
+
+    def spy(s, full_halo):
+        fulls.append(bool(full_halo))
+        return inner(s, full_halo=full_halo)
+
+    _, state, _ = eng.drive(state, 6, step_fn=spy)
+    assert int(codec_overflow_count(state)) == 0
+    assert fulls == [True, False, False, False, True, False]
+
+
+# ---------------------------------------------------------------------------
+# property: stencil checker vs the actual neighborhood sweep
+# ---------------------------------------------------------------------------
+
+def _count_behavior(radius):
+    def count_pairs(ai, aj, disp, dist2, params):
+        return {"nbr": jnp.ones_like(dist2)}
+
+    def idle(attrs, valid, acc, key, params, dt):
+        return dict(attrs), valid, jnp.zeros_like(valid), None
+
+    return Behavior(schema=AgentSchema.create(
+                        {"diameter": ((), jnp.float32)}),
+                    pair_fn=count_pairs, pair_attrs=("diameter",),
+                    update_fn=idle, radius=radius,
+                    params={"max_step": 0.0})
+
+
+def _sweep_pair_count(geom, beh, pos):
+    eng = Engine(geom=geom, behavior=beh)
+    attrs = {"diameter": np.ones((len(pos),), np.float32)}
+    state = eng.init_state(pos, attrs, seed=0)
+    acc = sweep_accumulate(geom, state.soa, beh.pair_fn, beh.pair_attrs,
+                           beh.radius, beh.params)
+    return float(jnp.sum(acc["nbr"]))
+
+
+def _brute_pair_count(pos, radius):
+    p = pos.astype(np.float32)
+    d = p[None, :, :] - p[:, None, :]
+    dist2 = (d * d).sum(-1)                  # f32, same ops as the sweep
+    inr = dist2 <= np.float32(radius * radius)
+    return float(inr.sum() - len(p))         # drop self pairs
+
+
+@given(cell_size=st.sampled_from([1.0, 1.5, 2.0, 3.0]),
+       ratio=st.floats(0.3, 2.0),
+       seed=st.integers(0, 2**31 - 1))
+@settings(max_examples=10, deadline=None)
+def test_stencil_checker_accepts_iff_sweep_drops_no_pair(cell_size, ratio,
+                                                         seed):
+    if abs(ratio - 1.0) < 0.05:
+        ratio = 1.2                          # skirt the exact boundary
+    radius = cell_size * ratio
+    geom = Domain(cell_size=cell_size, interior=(6, 6), mesh_shape=(1, 1),
+                  cap=24, boundary="closed")
+    beh = _count_behavior(radius)
+    flagged = CONTRACT_STENCIL in contracts_of(check_contracts(geom, beh))
+    assert flagged == (ratio > 1.0)
+
+    if not flagged:
+        # accepted -> the sweep finds exactly the brute-force pair set
+        rng = np.random.default_rng(seed)
+        lo, hi = 0.1 * cell_size, 6 * cell_size - 0.1 * cell_size
+        pos = rng.uniform(lo, hi, (40, 2)).astype(np.float32)
+        assert _sweep_pair_count(geom, beh, pos) \
+            == _brute_pair_count(pos, radius)
+    else:
+        # rejected -> a witness pair inside the radius but two cells apart
+        # is silently dropped by the 9-cell sweep
+        eps = cell_size * min(0.02, (ratio - 1.0) / 4.0)
+        y = 3.0 * cell_size
+        pos = np.array([[cell_size - eps, y],
+                        [2.0 * cell_size + eps, y]], np.float32)
+        assert _brute_pair_count(pos, radius) == 2.0
+        assert _sweep_pair_count(geom, beh, pos) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# property: one-hop checker vs numpy slab-crossing brute force
+# ---------------------------------------------------------------------------
+
+@given(widths=st.lists(st.integers(1, 6), min_size=2, max_size=4),
+       quarter=st.integers(1, 40))
+@settings(max_examples=25, deadline=None)
+def test_one_hop_checker_matches_bruteforce_slab_crossing(widths, quarter):
+    d = quarter * 0.25 + 0.125   # never ties with an integer slab width
+    L = sum(widths)
+    base = Domain(cell_size=1.0, interior=(L, 4), mesh_shape=(1, 1),
+                  cap=4, boundary="toroidal")
+    geom = base.repartition(Partition.from_widths((tuple(widths), (4,))))
+    beh = _count_behavior(1.0)
+    beh = dataclasses.replace(beh, params={"max_step": d})
+    flagged = CONTRACT_ONE_HOP in contracts_of(
+        check_contracts(geom, beh))
+
+    # brute force: does any start position cross >= 2 slab boundaries when
+    # displaced by d on the ring?  (crossing two cuts = skipping a device)
+    cuts = np.cumsum(widths).astype(np.float64)
+    periods = int(d // L) + 2
+    bounds = np.sort(np.concatenate(
+        [cuts + m * L for m in range(periods)]))
+    xs = np.arange(0.0, L, 1 / 16.0) + 1 / 32.0
+    crossed = (np.searchsorted(bounds, xs + d, side="right")
+               - np.searchsorted(bounds, xs, side="right"))
+    violation = bool((crossed >= 2).any())
+    assert flagged == violation

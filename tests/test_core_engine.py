@@ -148,7 +148,8 @@ def test_delta_closed_loop_refs_stay_in_sync(seed, amp, qdtype):
            "flag": jnp.zeros((16,), jnp.int32)}
     x = {"pos": ref["pos"] + jax.random.normal(k2, (16, 4)) * amp * 0.01,
          "flag": jnp.ones((16,), jnp.int32)}
-    payload, ref_sender = encode_delta(x, ref, cfg)
+    payload, ref_sender, oflow = encode_delta(x, ref, cfg)
+    assert int(oflow) == 0  # adaptive scale never saturates
     recon, ref_receiver = decode_delta(payload, ref, cfg)
     for k in ref_sender:
         np.testing.assert_array_equal(np.asarray(ref_sender[k]),
@@ -167,7 +168,7 @@ def test_delta_payload_bytes_reduction():
     cfg8 = DC(enabled=True, qdtype=jnp.int8)
     ref = {"pos": jnp.zeros((64, 4), jnp.float32)}
     x = {"pos": jnp.ones((64, 4), jnp.float32)}
-    p8, _ = encode_delta(x, ref, cfg8)
+    p8, _, _ = encode_delta(x, ref, cfg8)
     full_bytes = payload_bytes(x)
     assert payload_bytes(p8) <= full_bytes // 4 + 8  # + scale scalar
 

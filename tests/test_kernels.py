@@ -142,3 +142,31 @@ def test_delta_codec_wire_bytes():
     x = jnp.ones((128, 16), jnp.float32)
     q, scale = ops.delta_encode(x, jnp.zeros_like(x))
     assert q.nbytes * 4 == x.nbytes
+
+
+def test_delta_encode_kernel_counts_saturating_elements():
+    """Fixed-scale encode reports exactly how many deltas clipped at the
+    int8 rail; the adaptive-scale wrapper always reports zero."""
+    ref_slab = jnp.zeros((64, 4), jnp.float32)
+    x = ref_slab.at[:3, 0].set(10.0).at[5, 1].set(-9.0)
+    # scale 0.05 -> |q| = 200 and 180: 4 elements saturate
+    from repro.kernels import delta_codec
+    q, oflow = delta_codec.delta_encode_kernel(
+        x, ref_slab, 0.05, interpret=True)
+    assert int(oflow) == 4
+    assert int(jnp.max(q)) == 127 and int(jnp.min(q)) == -127
+    # exact-covering scale: nothing clips
+    _, oflow = delta_codec.delta_encode_kernel(
+        x, ref_slab, 10.0 / 127.0, interpret=True)
+    assert int(oflow) == 0
+
+
+def test_delta_encode_fixed_overflow_and_adaptive_zero():
+    ref_slab = jnp.zeros((32, 8), jnp.float32)
+    x = ref_slab + 1.0
+    q, oflow = ops.delta_encode_fixed(x, ref_slab, 1e-3)  # q = 1000
+    assert int(oflow) == x.size
+    assert int(jnp.max(q)) == 127
+    q, scale = ops.delta_encode(x, ref_slab)              # adaptive
+    out = ops.delta_decode(q, ref_slab, scale)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-5)

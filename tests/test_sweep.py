@@ -287,6 +287,50 @@ def _inputs(n=250, seed=0, domain=16.0):
 
 
 # ---------------------------------------------------------------------------
+# stencil soundness: radius > cell_size is rejected, not silently wrong
+# ---------------------------------------------------------------------------
+
+def test_radius_over_cell_size_rejected_and_pins_the_silent_failure():
+    """Before the simcheck gate, ``radius > cell_size`` built fine and the
+    3**ndim sweep silently dropped every pair between non-adjacent cells.
+    The facade now rejects it at construction; ``check="off"`` keeps the
+    escape hatch and this test pins the miss the gate is protecting
+    against: the identical two-agent configuration interacts when the cell
+    covers the radius and is invisible when it doesn't."""
+    from repro.analysis import ContractError
+    from repro.core import Simulation
+
+    beh = Behavior(
+        schema=AgentSchema.create({"diameter": ((), jnp.float32),
+                                   "ctype": ((), jnp.int32)}),
+        pair_fn=soft_repulsion_adhesion, pair_attrs=("diameter", "ctype"),
+        update_fn=displacement_update, radius=3.0,
+        params={"repulsion": 2.0, "adhesion": 0.4, "same_type_only": 0.0,
+                "max_step": 0.5})
+
+    with pytest.raises(ContractError, match="stencil-soundness"):
+        Simulation(dict(cell_size=2.0, interior=(6, 6), cap=8), beh, dt=0.1)
+
+    # two agents 2.2 apart (< radius 3): cells (0, *) and (2, *) under
+    # cell_size=2.0 -- non-adjacent, so the sweep never pairs them
+    pos = np.array([[1.9, 6.0], [4.1, 6.0]], np.float32)
+
+    def total_force(cell_size, interior):
+        geom = Domain(cell_size=cell_size, interior=interior,
+                      mesh_shape=(1, 1), cap=8)
+        eng = Engine(geom=geom, behavior=beh, dt=0.1)   # check defaults off
+        attrs = {"diameter": np.full((2,), 1.0, np.float32),
+                 "ctype": np.zeros((2,), np.int32)}
+        state = eng.init_state(pos, attrs, seed=0)
+        acc = sweep_accumulate(geom, state.soa, beh.pair_fn, beh.pair_attrs,
+                               beh.radius, beh.params)
+        return float(jnp.sum(jnp.abs(acc["force"])))
+
+    assert total_force(cell_size=4.0, interior=(3, 3)) > 0.0  # honest cell
+    assert total_force(cell_size=2.0, interior=(6, 6)) == 0.0  # dropped
+
+
+# ---------------------------------------------------------------------------
 # one-pass migration invariants
 # ---------------------------------------------------------------------------
 
