@@ -628,9 +628,72 @@ def bench_simcheck():
          f"per_step_cost_gated_vs_off={t_gated/t_off - 1:+.2%}_target_0")
 
 
+def bench_resilience():
+    """Cost of the resilience stack (docs/resilience.md): the fused guard
+    set's per-step overhead (budget: <= 5%) and the replay debt of a
+    checkpoint-rollback recovery at the bench's cadence."""
+    import tempfile
+
+    import numpy as np
+
+    from repro.core import Engine, Domain
+    from repro.core.guards import GuardConfig
+    from repro.distributed.chaos import Fault, FaultPlan
+    from repro.launch.supervise import Supervised, Supervisor
+    from repro.sims import cell_clustering
+    from repro.sims.common import make_sim
+
+    beh = cell_clustering.behavior()
+    geom = Domain(cell_size=2.0, interior=(16, 16), mesh_shape=(1, 1),
+                  cap=24)
+    rng = np.random.default_rng(0)
+    n = 900
+    lx, ly = geom.domain_size
+    pos = rng.uniform(0.5, lx - 0.5, (n, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": rng.integers(0, 2, n).astype(np.int32)}
+
+    steps = 30
+
+    def per_step(guards):
+        e = Engine(geom=geom, behavior=beh, dt=0.1,
+                   guards=GuardConfig(policy=guards))
+        s0 = e.init_state(pos, attrs, seed=0)
+        step = e.make_local_step()
+
+        def run():
+            _, s, _ = e.drive(s0, steps, step_fn=step)
+            jax.block_until_ready(s.soa.attrs["pos"])
+        return timeit(run, n=3, warmup=1) / steps
+
+    t_off = per_step("off")
+    t_guarded = per_step("error")
+    emit("guard_overhead_per_step", t_guarded - t_off,
+         f"guarded_vs_off={t_guarded/t_off - 1:+.2%}_budget_5%")
+
+    # recovery: NaN burst mid-chunk -> guard trip -> rollback -> replay
+    every, fault_at, total = 10, 14, 30
+    with tempfile.TemporaryDirectory() as ck:
+        sim = make_sim(beh, interior=(16, 16), cap=24, dt=0.1,
+                       guards="error")
+        sim.init(pos, attrs, seed=0)
+        plan = FaultPlan((Fault(step=fault_at, kind="nan_attrs",
+                                frac=0.05),), seed=7)
+        sv = Supervisor(sim, Supervised(dir=ck, every=every, keep=3),
+                        fault_plan=plan)
+        t0 = time.perf_counter()
+        sv.run(total)
+        wall = time.perf_counter() - t0
+        rec = sv.events("recovered")[0]
+    emit("recovery_time_steps", rec["replay_steps"],
+         f"replay_debt_steps_at_every={every}_"
+         f"supervised_{total}_steps_wall={wall:.2f}s")
+
+
 BENCHES = {
     "serialization": bench_serialization,
     "simcheck": bench_simcheck,
+    "resilience": bench_resilience,
     "delta": bench_delta,
     "sweep": bench_sweep,
     "sweep_3d": bench_sweep_3d,

@@ -29,8 +29,10 @@ from repro.analysis.contracts import (  # noqa: F401
     DisplacementBound,
     check_contracts,
     check_engine,
+    check_supervision,
     displacement_bound,
     enforce,
+    enforce_diagnostics,
     min_slab_width_cells,
 )
 from repro.analysis.jaxpr_audit import (  # noqa: F401
@@ -56,8 +58,10 @@ __all__ = [
     "DisplacementBound",
     "check_contracts",
     "check_engine",
+    "check_supervision",
     "displacement_bound",
     "enforce",
+    "enforce_diagnostics",
     "min_slab_width_cells",
     "audit_engine",
     "audit_fn",

@@ -54,6 +54,7 @@ CONTRACT_AURA = "aura-sufficiency"
 CONTRACT_ONE_HOP = "one-hop-migration"
 CONTRACT_HEADROOM = "codec-headroom"
 CONTRACT_PARTITION = "partition-validity"
+CONTRACT_SUPERVISION = "supervised-recovery"
 
 # severity ordering for displacement-bound kinds
 _KIND_RANK = {"hard": 0, "stochastic": 1, "unknown": 2}
@@ -326,6 +327,79 @@ def check_partition(geom) -> List[Diagnostic]:
                      "the devices",
                 location="geom"))
     return out
+
+
+def check_supervision(engine, supervised) -> List[Diagnostic]:
+    """Guard policy vs checkpoint cadence for a supervised run
+    (launch.supervise): rollback can only trigger on something *raising*.
+
+    With guards off, silent corruption (a NaN burst, a lost halo slab)
+    never raises, so the supervisor can only react to hard exceptions —
+    the checkpoints it writes may themselves capture corrupted state.
+    That combination defeats the recovery guarantee, hence an error.
+    """
+    out = []
+    policy = getattr(getattr(engine, "guards", None), "policy", "off")
+    if policy == "off":
+        out.append(Diagnostic(
+            severity="error", contract=CONTRACT_SUPERVISION,
+            message=("supervised run with guard policy 'off': silent "
+                     "corruption (NaN burst, lost or corrupted halo "
+                     "slab, conservation break) is never detected, so "
+                     "periodic checkpoints can capture corrupted state "
+                     "and rollback restores the corruption"),
+            hint=("construct the Simulation with guards=\"error\" (or a "
+                  "GuardConfig with policy=\"error\") so guard trips "
+                  "raise HealthError at the next host control point"),
+            location="supervised"))
+    elif policy == "warn":
+        out.append(Diagnostic(
+            severity="warning", contract=CONTRACT_SUPERVISION,
+            message=("supervised run with guard policy 'warn': trips are "
+                     "logged but never raise, so the supervisor only "
+                     "rolls back on hard exceptions (device loss, "
+                     "injected raises) — guard-detected corruption "
+                     "passes through into the next checkpoint"),
+            hint="use guards=\"error\" for rollback on guard trips",
+            location="supervised"))
+    keep = int(getattr(supervised, "keep", 0) or 0)
+    if keep < 2:
+        out.append(Diagnostic(
+            severity="warning", contract=CONTRACT_SUPERVISION,
+            message=(f"checkpoint retention keep={keep}: a single torn "
+                     "or corrupted write leaves no verified checkpoint "
+                     "to roll back to"),
+            hint="keep at least 2 checkpoints on a supervised run",
+            location="supervised"))
+    every = int(getattr(supervised, "every", 0) or 0)
+    if every < 1:
+        out.append(Diagnostic(
+            severity="error", contract=CONTRACT_SUPERVISION,
+            message=f"checkpoint cadence every={every} must be >= 1",
+            hint="set Supervised(every=N) with N >= 1",
+            location="supervised"))
+    return out
+
+
+def enforce_diagnostics(diagnostics: List[Diagnostic],
+                        mode: str = "error") -> List[Diagnostic]:
+    """Gate an arbitrary diagnostic list the way :func:`enforce` gates the
+    engine contracts: error-severity findings raise (``mode="error"``) or
+    warn (``mode="warn"``); warnings/infos never gate."""
+    if mode not in ("off", "warn", "error"):
+        raise ValueError(
+            f"check mode {mode!r} not in ('off', 'warn', 'error')")
+    if mode == "off":
+        return []
+    errors = [d for d in diagnostics if d.severity == "error"]
+    if not errors:
+        return []
+    if mode == "error":
+        raise ContractError(errors)
+    import warnings
+    for d in errors:
+        warnings.warn(f"simcheck contract: {d.format()}", stacklevel=3)
+    return errors
 
 
 # ---------------------------------------------------------------------------

@@ -191,6 +191,7 @@ def probe_state(engine):
     shard_map.  Never executed, only traced."""
     from repro.core.agent_soa import AgentSoA
     from repro.core.engine import SimState
+    from repro.core.guards import NUM_GUARDS
     from repro.core.halo import init_refs
 
     geom = engine.geom
@@ -204,7 +205,8 @@ def probe_state(engine):
     z = jnp.zeros(lead, jnp.int32)
     key = jnp.broadcast_to(jax.random.PRNGKey(0), lead + (2,))
     return SimState(soa=soa, refs=refs, it=z, key=key, gid_counter=z,
-                    dropped=z, halo_bytes=z, codec_overflow=z)
+                    dropped=z, halo_bytes=z, codec_overflow=z,
+                    health=jnp.zeros(lead + (NUM_GUARDS,), jnp.int32))
 
 
 def _comm_and_env(engine) -> Tuple[object, Tuple[Tuple[str, int], ...]]:

@@ -19,6 +19,9 @@ Public API:
   Engine / SimState        — distributed simulation engine (low-level)
   DeltaConfig              — delta-encoded aura exchange (paper §2.3)
   Rebalancer               — dynamic load balancing runtime (paper §2.4.5)
+  GuardConfig / HealthReport / HealthError
+                           — runtime health guards fused into the step
+                             (docs/resilience.md)
 """
 
 from repro.core import operations
@@ -28,13 +31,21 @@ from repro.core.delta import DeltaConfig
 from repro.core.domain import Domain, Partition
 from repro.core.engine import Engine, SimState, total_agents
 from repro.core.grid import GridGeom
+from repro.core.guards import (
+    GUARD_NAMES,
+    GuardConfig,
+    HealthError,
+    HealthReport,
+    health_counts,
+)
 from repro.core.reshard import Rebalancer
 from repro.core.simulation import Checkpoint, Rebalance, Simulation
 
 __all__ = [
     "AgentSchema", "AgentSoA", "GID_COUNT", "GID_RANK", "POS",
     "Behavior", "compose", "Checkpoint", "DeltaConfig", "Domain", "Engine",
+    "GUARD_NAMES", "GuardConfig", "HealthError", "HealthReport",
     "Partition", "SimState", "GridGeom", "Rebalance", "Rebalancer",
     "Simulation",
-    "operations", "total_agents",
+    "health_counts", "operations", "total_agents",
 ]

@@ -38,6 +38,7 @@ from repro.core.grid import (
     bin_agents,
     bin_agents_jit,
     clear_ring,
+    interior_mask,
     mask_unowned,
     owned_mask,
     ring_index,
@@ -50,6 +51,18 @@ from repro.core.halo import (
     init_refs,
     shard_map_compat,
     take_slab,
+)
+from repro.core.guards import (
+    GUARD_CONSERVATION,
+    GUARD_DOMAIN,
+    GUARD_NAN,
+    GUARD_SLAB,
+    NUM_GUARDS,
+    GuardConfig,
+    check_health,
+    health_counts,
+    nan_count,
+    residency_counts,
 )
 from repro.core.neighbors import sweep_accumulate
 
@@ -75,6 +88,8 @@ class SimState:
     dropped: Array                # mesh_shape int32 cumulative overflow drops
     halo_bytes: Array             # mesh_shape int32 wire bytes of last aura update
     codec_overflow: Array         # mesh_shape int32 cumulative clipped deltas
+    health: Array                 # mesh_shape + (NUM_GUARDS,) int32 cumulative
+                                  # guard counters (core.guards)
 
     def tree_flatten(self):
         ref_keys = tuple(sorted(self.refs))
@@ -85,19 +100,21 @@ class SimState:
         ref_fields = tuple(tuple(sorted(self.refs[k])) for k in ref_keys)
         children = (self.soa, ref_children, self.it, self.key,
                     self.gid_counter, self.dropped, self.halo_bytes,
-                    self.codec_overflow)
+                    self.codec_overflow, self.health)
         return children, (ref_keys, ref_fields)
 
     @classmethod
     def tree_unflatten(cls, aux, children):
         ref_keys, ref_fields = aux
-        soa, ref_children, it, key, gidc, dropped, hbytes, coflow = children
+        (soa, ref_children, it, key, gidc, dropped, hbytes, coflow,
+         health) = children
         refs = {
             k: dict(zip(fields, vals))
             for k, fields, vals in zip(ref_keys, ref_fields, ref_children)
         }
         return cls(soa=soa, refs=refs, it=it, key=key, gid_counter=gidc,
-                   dropped=dropped, halo_bytes=hbytes, codec_overflow=coflow)
+                   dropped=dropped, halo_bytes=hbytes, codec_overflow=coflow,
+                   health=health)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,6 +139,11 @@ class Engine:
     # hits), "warn" (emit a warning per error-severity finding), or
     # "error" (raise ContractError).
     check: str = "off"
+    # Runtime health guards (core.guards): invariants fused into the
+    # compiled step and accumulated into SimState.health.  The default
+    # GuardConfig(policy="off") compiles them out entirely, so unguarded
+    # engines trace byte-identical jaxprs to pre-guard builds.
+    guards: GuardConfig = GuardConfig()
 
     def __post_init__(self):
         if self.check != "off":
@@ -304,6 +326,7 @@ class Engine:
             dropped=jnp.zeros(mesh, jnp.int32),
             halo_bytes=jnp.zeros(mesh, jnp.int32),
             codec_overflow=jnp.zeros(mesh, jnp.int32),
+            health=jnp.zeros(mesh + (NUM_GUARDS,), jnp.int32),
         )
 
     # ------------------------------------------------------------------
@@ -336,6 +359,25 @@ class Engine:
         gidc = state.gid_counter[idx0]
         dropped = state.dropped[idx0]
         coflow = state.codec_overflow[idx0]
+        health = state.health[idx0]
+
+        # 0. Runtime health guards (core.guards): residency invariants are
+        # read at step entry — the previous step's migration settled, so a
+        # live owned agent outside the domain or its owned slab is
+        # corruption, not motion in flight.  `g` accumulates this step's
+        # trips and lands in the health word at repack.
+        gcfg = self.guards
+        if gcfg.enabled:
+            own_cells = owned_mask(geom, owned) if owned is not None \
+                else jnp.asarray(interior_mask(geom))
+            g = jnp.zeros((NUM_GUARDS,), jnp.int32)
+            if gcfg.domain or gcfg.slab:
+                dom_bad, slab_bad = residency_counts(
+                    geom, soa, origin, own_cells)
+                if gcfg.domain:
+                    g = g.at[GUARD_DOMAIN].add(dom_bad)
+                if gcfg.slab:
+                    g = g.at[GUARD_SLAB].add(slab_bad)
 
         # 1. Aura update (rebuilt from scratch each iteration, §2.2.1).
         soa = clear_ring(soa) if owned is None \
@@ -344,6 +386,12 @@ class Engine:
             geom, soa, comm, refs, self.delta_cfg, full_halo, owned
         )
         coflow = coflow + oflow
+
+        # NaN/Inf are checked right after the exchange: a corrupted halo
+        # receive is caught here, before the sweep spreads it into
+        # neighbors' accumulators.
+        if gcfg.enabled and gcfg.nan:
+            g = g.at[GUARD_NAN].add(nan_count(soa))
 
         # 2. Local interaction (backend-dispatched fused sweep).
         acc = sweep_accumulate(
@@ -397,12 +445,32 @@ class Engine:
             flat = {n: jnp.concatenate([flat[n], child[n]]) for n in flat}
             fvalid = jnp.concatenate([fvalid, sflat])
 
+        # Conservation pre-count: every live agent (spawns included) about
+        # to enter re-binning + migration, summed over the whole mesh.
+        if gcfg.enabled and gcfg.conservation:
+            pre_n = comm.sum_over_all_ranks(
+                jnp.sum(fvalid, dtype=jnp.int32))
+
         soa2, d1 = bin_agents(geom, flat, fvalid, origin, owned)
         dropped = dropped + d1
 
         # 5. Agent migration: dimension-ordered ring exchange over all axes.
         soa3, d2 = self._migrate(soa2, comm, origin, lsz, owned)
         dropped = dropped + d2
+
+        # Post-migration guard: the global ledger must balance up to the
+        # capacity drops this step reported.  (GID uniqueness is checked
+        # host-side in check_health — an XLA sort per step costs more
+        # than every other guard combined, and duplicates cannot
+        # self-heal, so control-point granularity loses nothing.)
+        if gcfg.enabled and gcfg.conservation:
+            live_owned = soa3.valid & own_cells[..., None]
+            post_n = comm.sum_over_all_ranks(
+                jnp.sum(live_owned, dtype=jnp.int32))
+            lost = comm.sum_over_all_ranks(
+                (d1 + d2).astype(jnp.int32))
+            g = g.at[GUARD_CONSERVATION].add(
+                jnp.abs(pre_n - post_n - lost))
 
         # 6. Repack per-device state.
         mesh = tuple(state.it.shape)
@@ -419,6 +487,7 @@ class Engine:
             dropped=_bcast(dropped, mesh),
             halo_bytes=_bcast(hbytes, mesh),
             codec_overflow=_bcast(coflow, mesh),
+            health=_bcast(health + g if gcfg.enabled else health, mesh),
         )
 
     def _migrate(self, soa: AgentSoA, comm: Comm, origin: Array,
@@ -590,7 +659,7 @@ class Engine:
         return seg
 
     def drive(self, state: SimState, n_steps: int, step_fn=None,
-              rebalancer=None, collect=None, mesh=None):
+              rebalancer=None, collect=None, mesh=None, fault_plan=None):
         """Low-level driver: delta refresh schedule + dynamic load balancing.
 
         Prefer :class:`repro.core.simulation.Simulation` — the facade owns
@@ -626,6 +695,14 @@ class Engine:
         track_clip = (self.delta_cfg.enabled
                       and self.delta_cfg.scale is not None)
         clip_mark = codec_overflow_count(state) if track_clip else 0
+        # Runtime health guards read at the same control points; the mark
+        # pattern mirrors the clip tracker (check_health handles counter
+        # resets from re-shards).  fault_plan (distributed.chaos) keys its
+        # faults on the absolute engine iteration, so segment boundaries
+        # must land on pending fault steps.
+        track_health = self.guards.enabled
+        hmark = health_counts(state) if track_health else None
+        it0 = int(jnp.max(state.it)) if fault_plan is not None else 0
 
         if step_fn is None and mesh is None:
             # No step function and no explicit mesh: derive the mesh from
@@ -646,12 +723,20 @@ class Engine:
                         mesh = _mesh_for(eng)
                         seg_fn = eng.make_segment_runner(mesh)
                         force_full = True
+                if fault_plan is not None:
+                    state, fired = fault_plan.fire(eng, state, it0 + i)
+                    if fired:
+                        force_full = True
                 nxt = n_steps
                 if rebalancer is not None and rebalancer.every > 0:
                     e = rebalancer.every
                     nxt = min(nxt, (i // e + 1) * e)
                 if eng.delta_cfg.enabled:
                     nxt = min(nxt, (i // r + 1) * r)
+                if fault_plan is not None:
+                    nf = fault_plan.next_step(after=it0 + i)
+                    if nf is not None:
+                        nxt = min(nxt, max(nf - it0, i + 1))
                 full = force_full or (not eng.delta_cfg.enabled) \
                     or (i % r == 0)
                 state = seg_fn(state, nxt - i, full_first=full)
@@ -661,6 +746,8 @@ class Engine:
                     if cnt > clip_mark:
                         force_full = True
                         clip_mark = cnt
+                if track_health:
+                    hmark, _ = check_health(eng.guards, state, hmark)
                 i = nxt
             return eng, state, []
 
@@ -674,6 +761,10 @@ class Engine:
                 if resharded:
                     step_fn = rebalancer.make_step(eng)
                     force_full = True
+            if fault_plan is not None:
+                state, fired = fault_plan.fire(eng, state, it0 + i)
+                if fired:
+                    force_full = True
             full = force_full or (not self.delta_cfg.enabled) or (i % r == 0)
             state = step_fn(state, full_halo=full)
             force_full = False
@@ -682,6 +773,8 @@ class Engine:
                 if cnt > clip_mark:
                     force_full = True
                     clip_mark = cnt
+            if track_health:
+                hmark, _ = check_health(eng.guards, state, hmark)
             if collect is not None:
                 series.append(collect(state))
         return eng, state, series

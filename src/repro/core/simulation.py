@@ -44,6 +44,8 @@ from repro.core.engine import (
     codec_overflow_count,
     total_agents,
 )
+from repro.core.guards import GuardConfig, as_guard_config, check_health, \
+    health_counts
 from repro.core.operations import Operation, checkpoint_op
 from repro.core.reshard import Rebalancer, estimate_device_runtimes
 
@@ -126,6 +128,13 @@ class Simulation:
         ``"warn"`` demotes those to warnings; ``"off"`` skips the gate.
         ``sim.validate()`` runs the full simcheck suite (contracts +
         jaxpr audit + hot-path lint) on demand.
+      guards: runtime health guards (docs/resilience.md): a
+        :class:`repro.core.guards.GuardConfig`, a policy-string shorthand
+        (``"warn"`` | ``"error"``), or None (off — the default compiles
+        the guards out entirely).  Guard counters are read at the same
+        host control points as the codec-overflow word; under
+        ``"error"`` a trip raises :class:`repro.core.guards.HealthError`,
+        which a supervised run (``run(supervised=...)``) rolls back on.
     """
 
     def __init__(self, geom: Union[Domain, Dict[str, Any]],
@@ -135,7 +144,8 @@ class Simulation:
                  rebalance: Union[Rebalance, int, None] = None,
                  checkpoint: Union[Checkpoint, str, None] = None,
                  sweep_backend: str = "auto",
-                 check: str = "error"):
+                 check: str = "error",
+                 guards: Union[GuardConfig, str, None] = None):
         if isinstance(geom, dict):
             geom = Domain(**{**_GEOM_DEFAULTS, **geom})
         if isinstance(behaviors, Behavior):
@@ -150,7 +160,8 @@ class Simulation:
         self.engine: Engine = Engine(
             geom=geom, behavior=behavior,
             delta_cfg=delta or DeltaConfig(enabled=False), dt=dt,
-            sweep_backend=sweep_backend)
+            sweep_backend=sweep_backend,
+            guards=as_guard_config(guards))
         self._check = check
         from repro.analysis.contracts import enforce
         enforce(self.engine, mode=check)
@@ -338,7 +349,8 @@ class Simulation:
 
     def run(self, steps: int,
             collect: Optional[Callable[[SimState], Any]] = None,
-            fused: bool = True) -> "Simulation":
+            fused: bool = True, fault_plan=None,
+            supervised=None) -> "Simulation":
         """Drive ``steps`` iterations: scheduled pre-ops (re-shard checks),
         the compiled step honoring the delta refresh schedule, scheduled
         post-ops (reducers, checkpoints).  ``collect(state)`` is a
@@ -351,10 +363,30 @@ class Simulation:
         the historical one-dispatch-per-step cadence.  ``fused=False``
         forces one dispatch per step (overhead benchmarks pin the
         dispatch cost with it).
+
+        ``fault_plan`` (distributed.chaos.FaultPlan) injects scheduled
+        faults at their absolute iterations; segments break at pending
+        fault steps.  ``supervised`` (a launch.supervise.Supervised
+        policy, or a checkpoint-directory shorthand) delegates the whole
+        run to the supervisor: periodic verified checkpoints, and
+        rollback-with-retry when a guard trips or the run raises —
+        see docs/resilience.md.
         """
         if self.state is None:
             raise RuntimeError("Simulation.run() before init(): call "
                                "sim.init(positions, attrs) first")
+        if supervised is not None:
+            from repro.launch.supervise import Supervised, Supervisor
+            if isinstance(supervised, str):
+                supervised = Supervised(dir=supervised)
+            if collect is not None:
+                raise ValueError(
+                    "collect= is not supported under supervised runs "
+                    "(a rollback would double-record); use scheduled "
+                    "ops via sim.every(...)")
+            Supervisor(self, supervised, fault_plan=fault_plan).run(
+                int(steps), fused=fused)
+            return self
         ops = list(self._ops)
         if collect is not None:
             ops.append(Operation(fn=lambda sim: collect(sim.state),
@@ -372,6 +404,13 @@ class Simulation:
         # reconstruction is stale — force the next aura exchange full.
         track_clip = delta.enabled and delta.scale is not None
         clip_mark = codec_overflow_count(self.state) if track_clip else 0
+        # Runtime health guards read at the same control points (the mark
+        # pattern handles counter resets across re-shards/restores); the
+        # check runs BEFORE post-ops so a scheduled checkpoint can never
+        # capture state a guard just flagged.
+        track_health = self.engine.guards.enabled
+        hmark = health_counts(self.state) if track_health else None
+        it0 = self.iteration if fault_plan is not None else 0
 
         done = 0
         while done < int(steps):
@@ -381,8 +420,17 @@ class Simulation:
                     self._run_op(op)
             if not per_step and self._seg_fn is None:
                 self._seg_fn = self._make_seg()   # a pre-op re-sharded
+            if fault_plan is not None:
+                self.state, fired = fault_plan.fire(
+                    self.engine, self.state, it0 + done)
+                if fired:
+                    self._force_full = True
             n = 1 if per_step else self._fused_span(
                 tick, int(steps) - done, ops)
+            if fault_plan is not None and not per_step:
+                nf = fault_plan.next_step(after=it0 + done)
+                if nf is not None:
+                    n = max(1, min(n, nf - (it0 + done)))
             full = (self._force_full or not delta.enabled
                     or tick % refresh == 0)
             self._force_full = False
@@ -403,6 +451,9 @@ class Simulation:
                 if cnt > clip_mark:
                     self._force_full = True
                     clip_mark = cnt
+            if track_health:
+                hmark, _ = check_health(self.engine.guards, self.state,
+                                        hmark)
             for t in range(tick, tick + n):
                 for op in ops:
                     if not op.pre and op.due(t):
@@ -432,6 +483,7 @@ class Simulation:
     @classmethod
     def restore(cls, ckpt_dir: str,
                 behaviors: Union[Behavior, Sequence[Behavior]], *,
+                step: Optional[int] = None,
                 n_devices: Optional[int] = None,
                 delta: Optional[DeltaConfig] = None,
                 dt: Optional[float] = None,
@@ -439,6 +491,7 @@ class Simulation:
                 checkpoint: Union[Checkpoint, str, None] = None,
                 ownership: Optional[str] = None,
                 check: str = "error",
+                guards: Union[GuardConfig, str, None] = None,
                 ) -> "Simulation":
         """Elastic restore: rebuild a facade from a logical checkpoint onto
         the current (possibly different) device count.  ``ownership``
@@ -449,9 +502,11 @@ class Simulation:
             behs = tuple(behaviors)
             behaviors = behs[0] if len(behs) == 1 else compose(*behs)
         engine, state, _ = elastic_restore_abm(
-            ckpt_dir, behaviors, n_devices=n_devices, delta_cfg=delta,
-            dt=dt, ownership=ownership)
+            ckpt_dir, behaviors, step=step, n_devices=n_devices,
+            delta_cfg=delta, dt=dt, ownership=ownership)
+        engine = dataclasses.replace(engine,
+                                     guards=as_guard_config(guards))
         sim = cls(engine.geom, behaviors, delta=delta or engine.delta_cfg,
                   dt=engine.dt, rebalance=rebalance, checkpoint=checkpoint,
-                  check=check)
+                  check=check, guards=guards)
         return sim.with_state(engine, state)

@@ -1,0 +1,231 @@
+"""Deterministic fault injection: make every recovery path a tested path.
+
+At the paper's scale (hundreds of servers, half a trillion agents) faults
+are routine; a recovery path that only runs when production breaks is an
+untested path.  This module injects the failure modes the resilience
+stack (core.guards + launch.supervise) must survive — on CPU, in tests,
+bit-reproducibly:
+
+* ``nan_attrs`` — NaN a seeded fraction of one attribute's live slots
+  (a diverging kernel, a bad reduction, bit rot in device memory).
+* ``halo_slab`` — NaN the live agents in one device's owned boundary
+  layer along an axis: exactly the slab the next aura exchange puts on
+  the wire, so the corruption propagates into a neighbor's received aura
+  (a corrupted transmission buffer).
+* ``device_loss`` — raise :class:`DeviceLost` from the driver's host
+  control point (a node dropping out mid-run); the supervisor restores
+  onto the surviving device count via ``elastic_restore_abm``.
+* ``torn_checkpoint`` — truncate the newest published checkpoint's first
+  array leaf after a save (a writer dying mid-write past the atomic
+  rename, or storage-level corruption); the hardened
+  ``checkpoint.restore`` must skip it.
+* ``raise`` — raise :class:`ChaosError` from the host control point (any
+  unhandled exception in the step pipeline).
+
+Faults live in a :class:`FaultPlan`: each fires **once**, at an absolute
+engine iteration, from the driver's host control points
+(``Engine.drive`` / ``Simulation.run`` break their fused segments at
+pending fault steps).  Fire-once matters for recovery semantics: after
+the supervisor rolls back *below* a fault's step, the replay must not
+re-corrupt — that is what makes a recovered run bit-exact with an
+uninterrupted run resumed from the same checkpoint.  All randomness
+derives from ``(plan.seed, fault index, step)``, never from global RNG
+state.  ``fault_plan=None`` everywhere is the zero-cost default: no
+extra syncs, no extra dispatches, identical compiled code.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import pathlib
+from typing import Optional, Set, Tuple
+
+import numpy as np
+
+FAULT_KINDS = ("nan_attrs", "halo_slab", "device_loss",
+               "torn_checkpoint", "raise")
+
+
+class ChaosError(RuntimeError):
+    """An injected generic failure (``kind="raise"``)."""
+
+
+class DeviceLost(RuntimeError):
+    """An injected device/node loss.  ``survivors`` is the device count
+    the run should degrade onto."""
+
+    def __init__(self, survivors: int, message: str = ""):
+        self.survivors = int(survivors)
+        super().__init__(
+            message or f"injected device loss: {survivors} device(s) "
+                       "survive")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault.
+
+    ``step`` is the absolute engine iteration the fault fires at (state
+    corruption lands *before* that step runs, so step ``step`` computes on
+    corrupted state).  ``frac`` (nan_attrs) is the fraction of live slots
+    to corrupt; ``attr`` the attribute to hit (default positions);
+    ``axis`` (halo_slab) the grid axis whose boundary layer is corrupted;
+    ``survivors`` (device_loss) the surviving device count (default: one
+    less than the run's).
+    """
+
+    step: int
+    kind: str
+    frac: float = 0.05
+    attr: str = "pos"
+    axis: int = 0
+    survivors: Optional[int] = None
+    note: str = ""
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"fault kind {self.kind!r} not in {FAULT_KINDS}")
+        if self.step < 0:
+            raise ValueError(f"fault step {self.step} must be >= 0")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A seeded, fire-once schedule of faults.
+
+    Drivers call :meth:`fire` at every host control point with the
+    absolute iteration about to run; checkpoint writers (the supervisor)
+    call :meth:`maybe_tear` after each save.  ``fired`` is mutable
+    bookkeeping — share one plan instance across a supervised run so a
+    fault never re-fires after rollback.
+    """
+
+    faults: Tuple[Fault, ...]
+    seed: int = 0
+
+    def __post_init__(self):
+        self.faults = tuple(self.faults)
+        self.fired: Set[int] = set()
+
+    # -- scheduling ------------------------------------------------------
+    def next_step(self, after: int) -> Optional[int]:
+        """Smallest unfired state/raise fault step strictly after
+        ``after`` (torn_checkpoint rides on saves, not on steps)."""
+        steps = [f.step for i, f in enumerate(self.faults)
+                 if i not in self.fired and f.kind != "torn_checkpoint"
+                 and f.step > after]
+        return min(steps) if steps else None
+
+    def _due(self, it: int):
+        return [(i, f) for i, f in enumerate(self.faults)
+                if i not in self.fired and f.kind != "torn_checkpoint"
+                and f.step == it]
+
+    # -- firing ----------------------------------------------------------
+    def fire(self, engine, state, it: int):
+        """Apply every unfired fault scheduled at iteration ``it``.
+
+        Returns ``(state, corrupted)``; raising faults (device_loss,
+        raise) propagate as exceptions *after* any state corruption at
+        the same step is applied and marked fired.
+        """
+        due = self._due(it)
+        if not due:
+            return state, False
+        corrupted = False
+        pending_raise = None
+        for idx, fault in due:
+            self.fired.add(idx)
+            if fault.kind == "raise":
+                pending_raise = pending_raise or ChaosError(
+                    f"injected failure at iteration {it}"
+                    + (f" ({fault.note})" if fault.note else ""))
+            elif fault.kind == "device_loss":
+                n = fault.survivors if fault.survivors is not None \
+                    else max(1, engine.geom.n_devices - 1)
+                pending_raise = pending_raise or DeviceLost(n)
+            else:
+                rng = np.random.default_rng([self.seed, idx, it])
+                state = _corrupt(engine, state, fault, rng)
+                corrupted = True
+        if pending_raise is not None:
+            raise pending_raise
+        return state, corrupted
+
+    def maybe_tear(self, ckpt_dir: str, it: int) -> Optional[str]:
+        """Tear the newest published checkpoint if a torn_checkpoint
+        fault is due (``fault.step <= it``).  Returns the torn path, or
+        None.  Stays armed until a checkpoint exists to tear."""
+        due = [(i, f) for i, f in enumerate(self.faults)
+               if i not in self.fired and f.kind == "torn_checkpoint"
+               and f.step <= it]
+        if not due:
+            return None
+        base = pathlib.Path(ckpt_dir)
+        steps = sorted(p for p in base.glob("step_*") if p.is_dir()) \
+            if base.exists() else []
+        if not steps:
+            return None
+        target = steps[-1]
+        leaves = sorted(target.glob("leaf_*.npy"))
+        victim = leaves[0] if leaves else (target / "manifest.json")
+        size = victim.stat().st_size
+        with open(victim, "r+b") as fh:
+            fh.truncate(max(size // 2, 1))
+        for i, _ in due:
+            self.fired.add(i)
+        return str(target)
+
+
+# ---------------------------------------------------------------------------
+# State corruption (host side: gather, poke, re-place)
+# ---------------------------------------------------------------------------
+
+def _corrupt(engine, state, fault: Fault, rng: np.random.Generator):
+    import jax.numpy as jnp
+
+    from repro.core.agent_soa import POS
+
+    soa = state.soa
+    valid = np.asarray(soa.valid)
+    if fault.kind == "nan_attrs":
+        name = POS if fault.attr in ("pos", POS) else fault.attr
+        arr = np.asarray(soa.attrs[name]).copy()
+        if not np.issubdtype(arr.dtype, np.floating):
+            raise ValueError(
+                f"nan_attrs targets float attrs; {name!r} is {arr.dtype}")
+        live = np.flatnonzero(valid.reshape(-1))
+        if live.size:
+            k = max(1, int(round(fault.frac * live.size)))
+            pick = rng.choice(live, size=min(k, live.size), replace=False)
+            flat = arr.reshape((valid.size,) + arr.shape[valid.ndim:])
+            flat[pick] = np.nan
+        new = arr
+    elif fault.kind == "halo_slab":
+        nd = engine.geom.ndim
+        if not 0 <= fault.axis < nd:
+            raise ValueError(
+                f"halo_slab axis {fault.axis} out of range for "
+                f"{nd}-D domain")
+        name = POS
+        arr = np.asarray(soa.attrs[name]).copy()
+        mesh = engine.geom.mesh_shape
+        # device axes are folded into the grid axes (shard_map blocks):
+        # valid has shape (mesh0*local0, mesh1*local1, ..., slots)
+        grid = valid.shape[:nd]
+        loc = tuple(g // m for g, m in zip(grid, mesh))
+        dev = tuple(int(rng.integers(m)) for m in mesh)
+        sl = tuple(
+            dev[a] * loc[a] + 1 if a == fault.axis  # first owned layer:
+            else slice(dev[a] * loc[a],             # the low-side send slab
+                       dev[a] * loc[a] + loc[a])
+            for a in range(nd))
+        layer = arr[sl]
+        layer[valid[sl]] = np.nan
+        arr[sl] = layer
+        new = arr
+    else:  # pragma: no cover - fire() routes only corrupting kinds here
+        raise ValueError(f"not a state-corrupting fault: {fault.kind}")
+    return dataclasses.replace(
+        state, soa=soa.replace(attrs={**soa.attrs, name: jnp.asarray(new)}))

@@ -23,10 +23,17 @@ import os
 import pathlib
 import shutil
 import threading
-from typing import Any, Dict, Optional, Tuple
+import warnings
+import zlib
+from typing import Any, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointCorrupt(RuntimeError):
+    """A checkpoint directory failed verification: missing or unparsable
+    manifest, unreadable array leaf, or a per-leaf checksum mismatch."""
 
 
 def _flatten_with_paths(tree):
@@ -61,7 +68,10 @@ def save(ckpt_dir: str, step: int, tree: Any,
         np.save(tmp / fname, arr)
         manifest["leaves"].append(
             {"key": key, "file": fname, "shape": list(arr.shape),
-             "dtype": dtype_name})
+             "dtype": dtype_name,
+             # per-leaf content checksum: restore verifies it so a torn
+             # write or storage-level corruption is detected, not loaded
+             "crc32": zlib.crc32(np.ascontiguousarray(arr).tobytes())})
     (tmp / "manifest.json").write_text(json.dumps(manifest))
     if final.exists():
         shutil.rmtree(final)
@@ -77,43 +87,106 @@ def _prune(base: pathlib.Path, keep: int):
         shutil.rmtree(p, ignore_errors=True)
 
 
+def _sweep_stale_tmp(base: pathlib.Path) -> List[str]:
+    """Remove ``.tmp_step_*_<pid>`` dirs whose writer process is dead — a
+    crashed writer's half-written temp dir otherwise lingers forever (the
+    atomic-rename protocol never publishes it, but it wastes storage and
+    confuses humans).  Temp dirs of live pids (a concurrent writer) are
+    left alone."""
+    removed = []
+    if not base.exists():
+        return removed
+    for p in base.glob(".tmp_step_*"):
+        if not p.is_dir():
+            continue
+        pid_s = p.name.rsplit("_", 1)[-1]
+        if not pid_s.isdigit():
+            continue
+        pid = int(pid_s)
+        alive = pid == os.getpid()
+        if not alive:
+            try:
+                os.kill(pid, 0)
+                alive = True
+            except ProcessLookupError:
+                alive = False
+            except PermissionError:  # exists, owned by someone else
+                alive = True
+            except OSError:
+                alive = False
+        if not alive:
+            shutil.rmtree(p, ignore_errors=True)
+            removed.append(str(p))
+    return removed
+
+
 class AsyncCheckpointer:
-    """Snapshot-to-host synchronously, write-to-disk on a worker thread."""
+    """Snapshot-to-host synchronously, write-to-disk on a worker thread.
+
+    A background write that fails does not vanish: the exception is
+    recorded and re-raised from the next :meth:`wait` or :meth:`save` —
+    otherwise a run could march on for hours believing it has checkpoints
+    it does not.  Construction sweeps stale temp dirs left by dead
+    writers (see :func:`_sweep_stale_tmp`).
+    """
 
     def __init__(self, ckpt_dir: str, keep: int = 3):
         self.ckpt_dir = ckpt_dir
         self.keep = keep
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         self.last_path: Optional[str] = None
+        self.swept = _sweep_stale_tmp(pathlib.Path(ckpt_dir))
 
     def save(self, step: int, tree: Any, extras: Optional[Dict] = None):
         self.wait()
         host_tree = jax.tree_util.tree_map(np.asarray, tree)  # snapshot
 
         def work():
-            self.last_path = save(self.ckpt_dir, step, host_tree,
-                                  extras, self.keep)
+            try:
+                self.last_path = save(self.ckpt_dir, step, host_tree,
+                                      extras, self.keep)
+            except BaseException as e:  # noqa: BLE001 - recorded, re-raised
+                self._error = e
 
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
 
-    def wait(self):
+    def save_abm(self, step: int, engine, state,
+                 extras: Optional[Dict] = None):
+        """Async variant of :func:`save_abm`: the mesh-independent logical
+        snapshot (flatten + histogram + host gather) runs synchronously —
+        it must see the state *now* — and only the disk write overlaps
+        with subsequent steps."""
+        self.wait()
+        tree, merged = _abm_snapshot(engine, state, extras)
+        host_tree = jax.tree_util.tree_map(np.asarray, tree)
+
+        def work():
+            try:
+                self.last_path = save(self.ckpt_dir, step, host_tree,
+                                      merged, self.keep)
+            except BaseException as e:  # noqa: BLE001 - recorded, re-raised
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> Optional[str]:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+        return self.last_path
 
 
-def save_abm(ckpt_dir: str, step: int, engine, state,
-             extras: Optional[Dict] = None, keep: int = 3) -> str:
-    """Checkpoint an ABM :class:`SimState` *logically*: the flattened live
-    agents plus the engine carry (iteration, spawn counters, RNG root) and
-    the occupancy histogram.
-
-    Storing the flattened form instead of the sharded SoA makes the
-    checkpoint mesh-independent — restore is a re-shard whose target mesh is
-    chosen from the stored histogram (elastic.elastic_restore_abm), so a
-    run can resume on any surviving device count.
-    """
+def _abm_snapshot(engine, state, extras: Optional[Dict] = None
+                  ) -> Tuple[Dict, Dict]:
+    """Build the logical (mesh-independent) checkpoint tree + extras for
+    an ABM state — shared by the sync :func:`save_abm` and the async
+    :meth:`AsyncCheckpointer.save_abm`."""
     from repro.core.reshard import flatten_state, occupancy_histogram
 
     flat = flatten_state(engine.geom, state)
@@ -148,19 +221,86 @@ def save_abm(ckpt_dir: str, step: int, engine, state,
                       if geom.uneven else None),
         "ownership": "rcb" if geom.uneven else "equal",
     }
-    return save(ckpt_dir, step, tree,
-                extras={"abm": abm_meta, **(extras or {})}, keep=keep)
+    return tree, {"abm": abm_meta, **(extras or {})}
+
+
+def save_abm(ckpt_dir: str, step: int, engine, state,
+             extras: Optional[Dict] = None, keep: int = 3) -> str:
+    """Checkpoint an ABM :class:`SimState` *logically*: the flattened live
+    agents plus the engine carry (iteration, spawn counters, RNG root) and
+    the occupancy histogram.
+
+    Storing the flattened form instead of the sharded SoA makes the
+    checkpoint mesh-independent — restore is a re-shard whose target mesh is
+    chosen from the stored histogram (elastic.elastic_restore_abm), so a
+    run can resume on any surviving device count.
+    """
+    tree, merged = _abm_snapshot(engine, state, extras)
+    return save(ckpt_dir, step, tree, extras=merged, keep=keep)
+
+
+def _step_dirs(base: pathlib.Path) -> List[pathlib.Path]:
+    out = []
+    for p in base.iterdir():
+        if not (p.is_dir() and p.name.startswith("step_")):
+            continue
+        suffix = p.name.split("_", 1)[1]
+        if suffix.isdigit():
+            out.append(p)
+    return sorted(out)
+
+
+def _load_verified(path: pathlib.Path) -> Tuple[Dict, List[np.ndarray]]:
+    """Load (manifest, arrays) from one checkpoint dir, verifying per-leaf
+    checksums when present.  Raises :class:`CheckpointCorrupt` on any
+    missing/unparsable manifest, unreadable leaf, or checksum mismatch."""
+    mpath = path / "manifest.json"
+    if not mpath.exists():
+        raise CheckpointCorrupt(f"{path}: missing manifest.json")
+    try:
+        manifest = json.loads(mpath.read_text())
+        leaves = manifest["leaves"]
+    except (ValueError, KeyError, TypeError) as e:
+        raise CheckpointCorrupt(
+            f"{path}: unparsable manifest.json ({e})") from e
+    arrays = []
+    for leaf in leaves:
+        try:
+            arr = np.load(path / leaf["file"])
+        except Exception as e:  # torn/truncated/missing .npy
+            raise CheckpointCorrupt(
+                f"{path}: unreadable leaf {leaf.get('file')} "
+                f"[{leaf.get('key')}] ({e})") from e
+        want = leaf.get("crc32")  # absent on legacy checkpoints
+        if want is not None:
+            got = zlib.crc32(np.ascontiguousarray(arr).tobytes())
+            if got != want:
+                raise CheckpointCorrupt(
+                    f"{path}: checksum mismatch on leaf "
+                    f"{leaf['file']} [{leaf.get('key')}] "
+                    f"(crc32 {got:#010x} != manifest {want:#010x})")
+        arrays.append(arr)
+    return manifest, arrays
 
 
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *plausibly usable* checkpoint step: dirs without a parsable
+    ``manifest.json`` are skipped with a warning (a torn write past the
+    atomic rename, or external corruption) instead of crashing the
+    restore path.  Content checksums are verified at :func:`restore`."""
     base = pathlib.Path(ckpt_dir)
     if not base.exists():
         return None
-    steps = sorted(p.name for p in base.iterdir()
-                   if p.is_dir() and p.name.startswith("step_"))
-    if not steps:
-        return None
-    return int(steps[-1].split("_")[1])
+    for p in reversed(_step_dirs(base)):
+        try:
+            json.loads((p / "manifest.json").read_text())
+        except (OSError, ValueError) as e:
+            warnings.warn(
+                f"skipping checkpoint {p.name} in {ckpt_dir}: "
+                f"missing/corrupt manifest.json ({e})", stacklevel=2)
+            continue
+        return int(p.name.split("_", 1)[1])
+    return None
 
 
 def restore(ckpt_dir: str, step: Optional[int] = None,
@@ -173,14 +313,32 @@ def restore(ckpt_dir: str, step: Optional[int] = None,
         rebuild the tree; if None, returns a flat {key: array} dict.
       shardings: optional matching pytree of NamedSharding for elastic
         placement on the current (possibly different-sized) mesh.
+
+    With ``step=None`` the newest checkpoint that passes full verification
+    (manifest parses, every leaf loads, checksums match) is used —
+    corrupt ones are skipped newest-to-oldest with a warning naming the
+    skipped dir.  An explicit ``step`` that fails verification raises
+    :class:`CheckpointCorrupt`.
     """
-    if step is None:
-        step = latest_step(ckpt_dir)
-        if step is None:
+    base = pathlib.Path(ckpt_dir)
+    if step is not None:
+        manifest, arrays = _load_verified(base / f"step_{step:010d}")
+    else:
+        if not base.exists():
             raise FileNotFoundError(f"no checkpoints in {ckpt_dir}")
-    path = pathlib.Path(ckpt_dir) / f"step_{step:010d}"
-    manifest = json.loads((path / "manifest.json").read_text())
-    arrays = [np.load(path / leaf["file"]) for leaf in manifest["leaves"]]
+        manifest = arrays = None
+        for path in reversed(_step_dirs(base)):
+            try:
+                manifest, arrays = _load_verified(path)
+                break
+            except CheckpointCorrupt as e:
+                warnings.warn(
+                    f"skipping corrupt checkpoint {path.name}: {e}",
+                    stacklevel=2)
+        if manifest is None:
+            raise FileNotFoundError(
+                f"no usable checkpoints in {ckpt_dir} (all candidates "
+                "failed verification)")
 
     if like is None:
         flat = {leaf["key"]: arr

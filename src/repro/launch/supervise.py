@@ -1,0 +1,188 @@
+"""Supervised runs: periodic verified checkpoints + automatic rollback.
+
+The supervisor turns the resilience primitives into one loop (the state
+machine below): runtime health guards (core.guards) detect corruption at
+host control points, checksummed async ABM checkpoints
+(distributed.checkpoint) bound the blast radius, and elastic restore
+(distributed.elastic) re-cuts the domain onto whatever device count
+survives.  Faults stop being run-enders and become a bounded replay.
+
+State machine::
+
+    RUN ──chunk ok──────────────► CHECKPOINT ──► RUN ...
+     │                                 (async, checksummed, pruned)
+     └─guard trip / exception──► RECOVER
+            │  retries exhausted ──► raise (give up, log says why)
+            └─ wait for in-flight save, optional backoff,
+               elastic restore from newest VERIFIED checkpoint
+               (skipping torn/corrupt ones), onto the surviving
+               device count, inheriting the run's ownership mode
+               ──► RUN (replay from the checkpoint; fire-once fault
+                    plans guarantee the replay is clean)
+
+Recovery guarantee (tested in tests/test_resilience.py): the replayed
+run is bit-exact with an uninterrupted run resumed from the same
+checkpoint — rollback resets the facade exactly the way
+``Simulation.restore`` would (fresh step functions, operation clock at
+zero, first aura exchange full), so the two runs execute identical step
+sequences.
+
+Every transition lands in ``Supervisor.log`` (a list of dicts) so tests
+and operators can assert on what actually happened.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Dict, List, Optional
+
+from repro.distributed import checkpoint as ckpt_lib
+from repro.distributed.chaos import DeviceLost
+
+
+@dataclasses.dataclass(frozen=True)
+class Supervised:
+    """Supervision policy for ``Simulation.run(supervised=...)``.
+
+    ``dir``/``every``/``keep`` set the checkpoint cadence and retention;
+    ``max_retries`` bounds consecutive failed recoveries (reset by any
+    chunk that completes); ``backoff_s`` is the base of an exponential
+    backoff between retries (0 disables sleeping — tests);
+    ``async_save`` overlaps checkpoint writes with the next chunk;
+    ``degrade`` allows restoring onto fewer devices after a device loss
+    (when False, a :class:`repro.distributed.chaos.DeviceLost` is
+    re-raised).
+    """
+
+    dir: str
+    every: int = 10
+    keep: int = 5
+    max_retries: int = 3
+    backoff_s: float = 0.0
+    async_save: bool = True
+    degrade: bool = True
+
+
+class Supervisor:
+    """Owns the RUN/CHECKPOINT/RECOVER loop around one
+    :class:`repro.core.Simulation`.
+
+    Construction gates the ``supervised-recovery`` contract
+    (analysis.contracts.check_supervision) at the simulation's ``check``
+    mode: supervising an unguarded run is an error — rollback would be
+    blind to silent corruption.
+    """
+
+    def __init__(self, sim, cfg: Supervised, fault_plan=None):
+        from repro.analysis.contracts import (
+            check_supervision,
+            enforce_diagnostics,
+        )
+        self.sim = sim
+        self.cfg = cfg
+        self.fault_plan = fault_plan
+        self.log: List[Dict] = []
+        enforce_diagnostics(check_supervision(sim.engine, cfg),
+                            mode=getattr(sim, "_check", "error"))
+        self.ckptr = ckpt_lib.AsyncCheckpointer(cfg.dir, keep=cfg.keep)
+        if self.ckptr.swept:
+            self._event("swept_stale_tmp", paths=list(self.ckptr.swept))
+
+    # ------------------------------------------------------------------
+    def _event(self, kind: str, **kw) -> None:
+        self.log.append({"kind": kind, "wall_time": time.time(), **kw})
+
+    def events(self, kind: str) -> List[Dict]:
+        return [e for e in self.log if e["kind"] == kind]
+
+    # ------------------------------------------------------------------
+    def _save(self) -> None:
+        sim = self.sim
+        it = sim.iteration
+        if self.cfg.async_save:
+            self.ckptr.save_abm(it, sim.engine, sim.state)
+        else:
+            ckpt_lib.save_abm(self.cfg.dir, it, sim.engine, sim.state,
+                              keep=self.cfg.keep)
+        self._event("checkpoint", step=it)
+        if self.fault_plan is not None:
+            # a torn-write fault needs bytes on disk before it can tear
+            self.ckptr.wait()
+            torn = self.fault_plan.maybe_tear(self.cfg.dir, it)
+            if torn:
+                self._event("torn_checkpoint", path=torn)
+
+    def _recover(self, err: BaseException, retry: int) -> None:
+        import jax
+
+        from repro.distributed.elastic import elastic_restore_abm
+
+        sim = self.sim
+        failed_at = sim.iteration
+        try:
+            self.ckptr.wait()  # surface an in-flight write failure too
+        except Exception as werr:  # noqa: BLE001 - logged, not fatal
+            self._event("checkpoint_write_failed", error=repr(werr))
+        survivors: Optional[int] = getattr(err, "survivors", None)
+        if survivors is not None and not self.cfg.degrade:
+            raise err
+        n = survivors if survivors is not None \
+            else min(sim.engine.geom.n_devices, len(jax.devices()))
+        if self.cfg.backoff_s > 0:
+            time.sleep(self.cfg.backoff_s * 2 ** (retry - 1))
+        engine0, state, step_ = elastic_restore_abm(
+            self.cfg.dir, sim.behavior, n_devices=n,
+            delta_cfg=sim.engine.delta_cfg, dt=sim.engine.dt,
+            ownership=None)  # None inherits the checkpointed mode
+        # keep the run's knobs (guards, sweep backend, rebalance policy):
+        # only the geometry comes from the re-cut restore plan
+        engine = dataclasses.replace(sim.engine, geom=engine0.geom)
+        sim.with_state(engine, state)
+        # reset the facade exactly like Simulation.restore: the operation
+        # clock restarts at zero, so the replay is bit-exact with an
+        # uninterrupted run resumed from this checkpoint
+        sim._ticks = 0
+        self._event(
+            "recovered", error=repr(err), error_type=type(err).__name__,
+            failed_at=failed_at, rolled_back_to=step_, devices=n,
+            retry=retry, replay_steps=failed_at - step_)
+
+    # ------------------------------------------------------------------
+    def run(self, steps: int, fused: bool = True):
+        """Supervise ``steps`` iterations; returns the simulation."""
+        sim = self.sim
+        cfg = self.cfg
+        target = sim.iteration + int(steps)
+        if ckpt_lib.latest_step(cfg.dir) is None:
+            self._save()  # a rollback target must exist before step one
+        retries = 0
+        while True:
+            it = sim.iteration
+            if it >= target:
+                break
+            chunk = min(cfg.every - (it % cfg.every), target - it)
+            try:
+                sim.run(chunk, fused=fused, fault_plan=self.fault_plan)
+            except (KeyboardInterrupt, SystemExit):
+                raise
+            except Exception as err:  # noqa: BLE001 - bounded retry below
+                retries += 1
+                self._event("fault", error=repr(err),
+                            error_type=type(err).__name__,
+                            iteration=sim.iteration, retry=retries)
+                if retries > cfg.max_retries:
+                    self._event("giving_up", retries=retries)
+                    raise
+                if isinstance(err, DeviceLost) and not cfg.degrade:
+                    self._event("giving_up", retries=retries,
+                                reason="degrade disabled")
+                    raise
+                self._recover(err, retries)
+            else:
+                retries = 0
+                if sim.iteration % cfg.every == 0 or sim.iteration >= target:
+                    self._save()
+        self.ckptr.wait()
+        self._event("completed", iteration=sim.iteration)
+        return sim

@@ -38,6 +38,7 @@ def make_sim(
     checkpoint=None,
     sweep_backend: str = "auto",
     check: str = "error",
+    guards=None,
 ) -> Simulation:
     """Facade builder with the sims' historical geometry defaults.
 
@@ -62,7 +63,7 @@ def make_sim(
     return Simulation(
         geom, behaviors, mesh=mesh, delta=delta, dt=dt,
         rebalance=rebalance, checkpoint=checkpoint,
-        sweep_backend=sweep_backend, check=check)
+        sweep_backend=sweep_backend, check=check, guards=guards)
 
 
 def init_agents(sim, positions: np.ndarray, attrs, seed: int = 0):

@@ -1,0 +1,530 @@
+"""Resilience stack tests: runtime health guards (core.guards),
+deterministic fault injection (distributed.chaos), checkpoint hardening
+(distributed.checkpoint), and supervised rollback recovery
+(launch.supervise).
+
+The recovery tests assert the headline guarantee: a fault injected at an
+arbitrary step is detected by a guard, the supervised run completes by
+rolling back to the last verified checkpoint, and the final state is
+bit-exact with an uninterrupted run resumed from that same checkpoint.
+Sharded variants (equal and rcb ownership, device loss) run in
+subprocesses because XLA placeholder devices must be configured before
+jax initializes.
+"""
+
+import dataclasses
+import json
+import os
+import pathlib
+import subprocess
+import sys
+import textwrap
+import zlib
+
+import numpy as np
+import pytest
+
+jnp = pytest.importorskip("jax.numpy")
+
+from repro.core import (  # noqa: E402
+    AgentSchema,
+    Behavior,
+    GuardConfig,
+    HealthError,
+    Simulation,
+    health_counts,
+)
+from repro.core.behaviors import (  # noqa: E402
+    displacement_update,
+    soft_repulsion_adhesion,
+)
+from repro.core.guards import (  # noqa: E402
+    GUARD_GID_DUP,
+    GUARD_NAN,
+    as_guard_config,
+)
+from repro.distributed import checkpoint as ckpt_lib  # noqa: E402
+from repro.distributed.chaos import (  # noqa: E402
+    ChaosError,
+    Fault,
+    FaultPlan,
+)
+from repro.launch.supervise import Supervised, Supervisor  # noqa: E402
+from repro.sims.common import make_sim  # noqa: E402
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 4, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    p = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+def _behavior():
+    schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                                 "ctype": ((), jnp.int32)})
+    return Behavior(
+        schema=schema, pair_fn=soft_repulsion_adhesion,
+        pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+        radius=2.0, params={"repulsion": 2.0, "adhesion": 0.4,
+                            "same_type_only": 1.0, "max_step": 0.5})
+
+
+def _init_data(n=300, seed=0):
+    rng = np.random.default_rng(seed)
+    pos = rng.uniform(0.5, 31.5, size=(n, 2)).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": rng.integers(0, 2, size=(n,)).astype(np.int32)}
+    return pos, attrs
+
+
+def _make_guarded(tmp_path=None, guards="error", **kw):
+    sim = make_sim(_behavior(), interior=(16, 16), cap=24, dt=0.5,
+                   guards=guards, **kw)
+    pos, attrs = _init_data()
+    sim.init(pos, attrs)
+    return sim
+
+
+def _state_key(state):
+    """Canonical (positions, gids) of live agents, gid-sorted — the
+    bit-exactness currency."""
+    v = np.asarray(state.soa.valid).ravel()
+    nd = np.asarray(state.soa.attrs["pos"]).shape[-1]
+    p = np.asarray(state.soa.attrs["pos"]).reshape(-1, nd)[v]
+    gr = np.asarray(state.soa.attrs["gid_rank"]).ravel()[v]
+    gc = np.asarray(state.soa.attrs["gid_count"]).ravel()[v]
+    o = np.lexsort((gc, gr))
+    return p[o], gr[o], gc[o]
+
+
+def _poke_nan(sim, count=1):
+    soa = sim.state.soa
+    p = np.asarray(soa.attrs["pos"]).copy()
+    v = np.asarray(soa.valid)
+    for idx in np.argwhere(v)[:count]:
+        p[tuple(idx)] = np.nan
+    sim.state = dataclasses.replace(
+        sim.state,
+        soa=soa.replace(attrs={**soa.attrs, "pos": jnp.asarray(p)}))
+
+
+# ---------------------------------------------------------------------------
+# Guard config + guard trips (local)
+# ---------------------------------------------------------------------------
+
+def test_guard_config_validation():
+    with pytest.raises(ValueError):
+        GuardConfig(policy="loud")
+    assert not GuardConfig().enabled
+    assert GuardConfig(policy="warn").enabled
+    assert as_guard_config(None) == GuardConfig()
+    assert as_guard_config("error").policy == "error"
+    with pytest.raises(TypeError):
+        as_guard_config(42)
+
+
+def test_healthy_run_no_trips_local():
+    sim = _make_guarded()
+    sim.run(20)
+    assert health_counts(sim.state).tolist() == [0, 0, 0, 0, 0]
+    assert sim.n_agents() == 300
+
+
+def test_nan_guard_raises_under_error_policy():
+    sim = _make_guarded()
+    sim.run(3)
+    _poke_nan(sim)
+    with pytest.raises(HealthError) as ei:
+        sim.run(2)
+    assert "nan_inf" in str(ei.value)
+    assert ei.value.report.new[GUARD_NAN] > 0
+
+
+def test_nan_guard_warns_under_warn_policy():
+    sim = _make_guarded(guards="warn")
+    sim.run(3)
+    _poke_nan(sim)
+    with pytest.warns(UserWarning, match="nan_inf"):
+        sim.run(2)
+    assert health_counts(sim.state)[GUARD_NAN] > 0
+
+
+def test_guards_off_by_default_sees_nothing():
+    sim = _make_guarded(guards=None)
+    _poke_nan(sim)
+    sim.run(2)  # no raise, no warning machinery
+    assert health_counts(sim.state).tolist() == [0, 0, 0, 0, 0]
+
+
+def test_gid_duplicate_guard():
+    sim = _make_guarded()
+    sim.run(2)
+    soa = sim.state.soa
+    v = np.asarray(soa.valid)
+    gr = np.asarray(soa.attrs["gid_rank"]).copy()
+    gc = np.asarray(soa.attrs["gid_count"]).copy()
+    a, b = np.argwhere(v)[:2]
+    gr[tuple(b)] = gr[tuple(a)]
+    gc[tuple(b)] = gc[tuple(a)]
+    sim.state = dataclasses.replace(
+        sim.state,
+        soa=soa.replace(attrs={**soa.attrs,
+                               "gid_rank": jnp.asarray(gr),
+                               "gid_count": jnp.asarray(gc)}))
+    with pytest.raises(HealthError) as ei:
+        sim.run(1)
+    assert ei.value.report.new[GUARD_GID_DUP] > 0
+
+
+def test_engine_drive_checks_health():
+    # guards surface through the low-level driver too, not only the facade
+    from repro.core.engine import Engine
+
+    sim = _make_guarded()
+    _poke_nan(sim)
+    eng: Engine = sim.engine
+    with pytest.raises(HealthError):
+        eng.drive(sim.state, 2)
+
+
+# ---------------------------------------------------------------------------
+# Fault plans (chaos)
+# ---------------------------------------------------------------------------
+
+def test_fault_plan_fire_once_and_determinism():
+    sim1 = _make_guarded(guards=None)
+    sim2 = _make_guarded(guards=None)
+    plan1 = FaultPlan((Fault(step=0, kind="nan_attrs", frac=0.1),), seed=7)
+    plan2 = FaultPlan((Fault(step=0, kind="nan_attrs", frac=0.1),), seed=7)
+    s1, fired1 = plan1.fire(sim1.engine, sim1.state, 0)
+    s2, _ = plan2.fire(sim2.engine, sim2.state, 0)
+    assert fired1
+    np.testing.assert_array_equal(np.asarray(s1.soa.attrs["pos"]),
+                                  np.asarray(s2.soa.attrs["pos"]))
+    # fire-once: the same step never corrupts twice
+    s1b, fired_again = plan1.fire(sim1.engine, s1, 0)
+    assert not fired_again and s1b is s1
+    assert plan1.next_step(after=0) is None
+
+
+def test_fault_plan_validation():
+    with pytest.raises(ValueError):
+        Fault(step=3, kind="meteor")
+    with pytest.raises(ValueError):
+        Fault(step=-1, kind="raise")
+    plan = FaultPlan((Fault(step=4, kind="raise"),
+                      Fault(step=9, kind="raise")), seed=0)
+    assert plan.next_step(after=0) == 4
+    assert plan.next_step(after=4) == 9
+
+
+def test_raise_fault_fires_from_run():
+    sim = _make_guarded(guards=None)
+    plan = FaultPlan((Fault(step=5, kind="raise"),))
+    with pytest.raises(ChaosError):
+        sim.run(10, fault_plan=plan)
+    assert sim.iteration == 5  # segment broke exactly at the fault step
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint hardening
+# ---------------------------------------------------------------------------
+
+def test_async_checkpointer_reraises_background_error(tmp_path):
+    blocker = tmp_path / "ckpts"
+    blocker.write_text("not a directory")
+    ck = ckpt_lib.AsyncCheckpointer(str(blocker))
+    ck.save(1, {"x": np.arange(4)})
+    with pytest.raises(FileExistsError):
+        ck.wait()
+    # the error is consumed: a later wait() is clean
+    assert ck.wait() is None
+
+
+def test_async_checkpointer_sweeps_stale_tmp(tmp_path):
+    stale = tmp_path / ".tmp_step_0000000003_999999999"
+    stale.mkdir(parents=True)
+    (stale / "leaf_00000.npy").write_bytes(b"junk")
+    live = tmp_path / f".tmp_step_0000000004_{os.getpid()}"
+    live.mkdir()
+    ck = ckpt_lib.AsyncCheckpointer(str(tmp_path))
+    assert not stale.exists()
+    assert live.exists()  # our own pid: a concurrent writer, left alone
+    assert str(stale) in ck.swept
+
+
+def test_latest_step_skips_manifestless_dir(tmp_path):
+    ckpt_lib.save(str(tmp_path), 5, {"x": np.arange(3)})
+    (tmp_path / "step_0000000009").mkdir()
+    with pytest.warns(UserWarning, match="step_0000000009"):
+        assert ckpt_lib.latest_step(str(tmp_path)) == 5
+
+
+def test_restore_skips_checksum_corrupt_checkpoint(tmp_path):
+    ckpt_lib.save(str(tmp_path), 5, {"x": np.arange(3)})
+    ckpt_lib.save(str(tmp_path), 10, {"x": np.arange(3) + 10})
+    # flip the newest checkpoint's payload without touching its manifest
+    np.save(tmp_path / "step_0000000010" / "leaf_00000.npy",
+            np.arange(3) + 99)
+    with pytest.warns(UserWarning, match="step_0000000010"):
+        step, flat, _ = ckpt_lib.restore(str(tmp_path))
+    assert step == 5
+    np.testing.assert_array_equal(flat["x"], np.arange(3))
+    with pytest.raises(ckpt_lib.CheckpointCorrupt, match="checksum"):
+        ckpt_lib.restore(str(tmp_path), step=10)
+
+
+def test_restore_skips_torn_leaf(tmp_path):
+    ckpt_lib.save(str(tmp_path), 5, {"x": np.arange(100)})
+    ckpt_lib.save(str(tmp_path), 10, {"x": np.arange(100)})
+    leaf = tmp_path / "step_0000000010" / "leaf_00000.npy"
+    with open(leaf, "r+b") as fh:
+        fh.truncate(leaf.stat().st_size // 2)
+    with pytest.warns(UserWarning, match="step_0000000010"):
+        step, _, _ = ckpt_lib.restore(str(tmp_path))
+    assert step == 5
+
+
+def test_restore_all_corrupt_raises(tmp_path):
+    ckpt_lib.save(str(tmp_path), 5, {"x": np.arange(3)})
+    (pathlib.Path(tmp_path) / "step_0000000005" / "manifest.json"
+     ).write_text("{broken")
+    with pytest.warns(UserWarning):
+        with pytest.raises(FileNotFoundError, match="no usable"):
+            ckpt_lib.restore(str(tmp_path))
+
+
+def test_save_manifest_carries_crc32(tmp_path):
+    ckpt_lib.save(str(tmp_path), 3, {"x": np.arange(7, dtype=np.int32)})
+    man = json.loads(
+        (tmp_path / "step_0000000003" / "manifest.json").read_text())
+    leaf = man["leaves"][0]
+    want = zlib.crc32(np.arange(7, dtype=np.int32).tobytes())
+    assert leaf["crc32"] == want
+
+
+# ---------------------------------------------------------------------------
+# Supervised recovery (local)
+# ---------------------------------------------------------------------------
+
+def test_supervision_contract_gates_unguarded_runs(tmp_path):
+    from repro.analysis import ContractError, check_supervision
+
+    sim = _make_guarded(guards=None)
+    with pytest.raises(ContractError, match="guard policy 'off'"):
+        sim.run(10, supervised=str(tmp_path / "ck"))
+    diags = check_supervision(sim.engine, Supervised(dir="x", keep=1))
+    contracts = {(d.severity, d.contract) for d in diags}
+    assert ("error", "supervised-recovery") in contracts
+    warn_sim = _make_guarded(guards="warn")
+    diags = check_supervision(warn_sim.engine, Supervised(dir="x", keep=1))
+    severities = [d.severity for d in diags]
+    assert severities.count("warning") == 2  # warn policy + keep < 2
+
+
+def test_supervised_nan_recovery_bit_exact_local(tmp_path):
+    ck = str(tmp_path / "ck")
+    sim = _make_guarded()
+    plan = FaultPlan((Fault(step=7, kind="nan_attrs", frac=0.1),), seed=42)
+    sv = Supervisor(sim, Supervised(dir=ck, every=5, keep=9),
+                    fault_plan=plan)
+    sv.run(12)
+    assert sim.iteration == 12
+    rec = sv.events("recovered")
+    assert len(rec) == 1 and rec[0]["rolled_back_to"] == 5
+    assert rec[0]["error_type"] == "HealthError"
+    assert sv.events("completed")
+
+    ctl = Simulation.restore(ck, _behavior(), step=5, guards="error")
+    ctl.run(12 - 5)
+    for a, b in zip(_state_key(sim.state), _state_key(ctl.state)):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_supervised_run_via_facade_kwarg(tmp_path):
+    ck = str(tmp_path / "ck")
+    sim = _make_guarded()
+    plan = FaultPlan((Fault(step=4, kind="raise"),))
+    sim.run(8, supervised=Supervised(dir=ck, every=4, keep=9),
+            fault_plan=plan)
+    assert sim.iteration == 8
+    assert ckpt_lib.latest_step(ck) == 8
+
+
+def test_supervised_torn_checkpoint_rolls_back_further(tmp_path):
+    ck = str(tmp_path / "ck")
+    sim = _make_guarded()
+    # tear the checkpoint written at step 10, then fail at 12: recovery
+    # must skip the torn newest checkpoint and roll back to step 5
+    plan = FaultPlan((Fault(step=10, kind="torn_checkpoint"),
+                      Fault(step=12, kind="raise")))
+    sv = Supervisor(sim, Supervised(dir=ck, every=5, keep=9),
+                    fault_plan=plan)
+    with pytest.warns(UserWarning, match="skipping corrupt checkpoint"):
+        sv.run(15)
+    assert sim.iteration == 15
+    assert sv.events("torn_checkpoint")
+    rec = sv.events("recovered")
+    assert len(rec) == 1 and rec[0]["rolled_back_to"] == 5
+
+
+def test_supervised_retry_exhaustion(tmp_path):
+    ck = str(tmp_path / "ck")
+    sim = _make_guarded()
+    # distinct steps inside one chunk: every replay from the step-5
+    # checkpoint trips a fresh fault until retries run out
+    plan = FaultPlan((Fault(step=6, kind="raise"),
+                      Fault(step=7, kind="raise"),
+                      Fault(step=8, kind="raise")))
+    sv = Supervisor(sim, Supervised(dir=ck, every=5, keep=9,
+                                    max_retries=2), fault_plan=plan)
+    with pytest.raises(ChaosError):
+        sv.run(12)
+    assert sv.events("giving_up")
+    assert len(sv.events("recovered")) == 2
+
+
+# ---------------------------------------------------------------------------
+# Supervised recovery (sharded; subprocesses)
+# ---------------------------------------------------------------------------
+
+SHARDED_COMMON = """
+import numpy as np, jax.numpy as jnp
+from repro.core import AgentSchema, Behavior, Simulation
+from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
+from repro.distributed.chaos import Fault, FaultPlan
+from repro.launch.supervise import Supervised, Supervisor
+from repro.sims.common import make_sim
+
+schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                             "ctype": ((), jnp.int32)})
+beh = Behavior(schema=schema, pair_fn=soft_repulsion_adhesion,
+               pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+               radius=2.0, params={"repulsion": 2.0, "adhesion": 0.4,
+                                   "same_type_only": 1.0, "max_step": 0.5})
+rng = np.random.default_rng(0)
+n = 300
+pos = rng.uniform(0.5, 31.5, size=(n, 2)).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, size=(n,)).astype(np.int32)}
+
+def state_key(state):
+    v = np.asarray(state.soa.valid).ravel()
+    p = np.asarray(state.soa.attrs["pos"]).reshape(-1, 2)[v]
+    gr = np.asarray(state.soa.attrs["gid_rank"]).ravel()[v]
+    gc = np.asarray(state.soa.attrs["gid_count"]).ravel()[v]
+    o = np.lexsort((gc, gr))
+    return p[o], gr[o], gc[o]
+
+def check_bitexact(sim, ck, rb, steps_after, n_devices=None):
+    ctl = Simulation.restore(ck, beh, step=rb, n_devices=n_devices,
+                             guards="error")
+    ctl.run(steps_after)
+    for a, b in zip(state_key(sim.state), state_key(ctl.state)):
+        np.testing.assert_array_equal(a, b)
+"""
+
+
+def test_sharded_halo_fault_recovery_bit_exact(tmp_path):
+    ck = str(tmp_path / "ck")
+    out = run_sub(SHARDED_COMMON + f"""
+sim = make_sim(beh, interior=(8, 16), mesh_shape=(2, 1), cap=24, dt=0.5,
+               guards="error")
+sim.init(pos, attrs)
+plan = FaultPlan((Fault(step=6, kind="halo_slab", axis=0),), seed=3)
+sv = Supervisor(sim, Supervised(dir={ck!r}, every=4, keep=9),
+                fault_plan=plan)
+sv.run(10)
+assert sim.iteration == 10, sim.iteration
+rec = sv.events("recovered")
+assert len(rec) == 1 and rec[0]["rolled_back_to"] == 4, rec
+assert rec[0]["error_type"] == "HealthError", rec
+check_bitexact(sim, {ck!r}, 4, 6)
+print("OK sharded halo-fault recovery")
+""", devices=2)
+    assert "OK sharded halo-fault recovery" in out
+
+
+def test_sharded_device_loss_degrades_and_recovers(tmp_path):
+    ck = str(tmp_path / "ck")
+    out = run_sub(SHARDED_COMMON + f"""
+sim = make_sim(beh, interior=(8, 8), mesh_shape=(2, 2), cap=24, dt=0.5,
+               guards="error")
+sim.init(pos, attrs)
+n0 = sim.n_agents()
+plan = FaultPlan((Fault(step=6, kind="device_loss", survivors=2),))
+sv = Supervisor(sim, Supervised(dir={ck!r}, every=4, keep=9),
+                fault_plan=plan)
+sv.run(10)
+assert sim.iteration == 10, sim.iteration
+assert sim.engine.geom.n_devices == 2, sim.engine.geom.mesh_shape
+assert sim.n_agents() == n0, (sim.n_agents(), n0)
+rec = sv.events("recovered")
+assert len(rec) == 1 and rec[0]["devices"] == 2, rec
+assert rec[0]["rolled_back_to"] == 4, rec
+import repro.core.guards as guards_mod
+assert guards_mod.health_counts(sim.state).tolist() == [0, 0, 0, 0, 0]
+check_bitexact(sim, {ck!r}, 4, 6, n_devices=2)
+print("OK device-loss recovery")
+""", devices=4)
+    assert "OK device-loss recovery" in out
+
+
+def test_sharded_rcb_ownership_inherited_through_recovery(tmp_path):
+    ck = str(tmp_path / "ck")
+    out = run_sub(SHARDED_COMMON + f"""
+from repro.core import Partition
+part = Partition(cuts=((0, 6, 16), (0, 9, 16)))
+sim = make_sim(beh, partition=part, cap=64, dt=0.5, guards="error")
+# skewed density (3/4 of agents in one corner cluster): every RCB re-plan
+# along the recovery path cuts genuinely unevenly, so the inherited
+# ownership mode never normalizes back to an equal split
+pick = rng.random(n) < 0.75
+pos = np.where(pick[:, None],
+               rng.normal((7.0, 7.0), 3.0, (n, 2)),
+               rng.normal((25.0, 25.0), 3.0, (n, 2)))
+pos = np.clip(pos, 0.5, 31.5).astype(np.float32)
+sim.init(pos, attrs)
+assert sim.engine.geom.uneven
+n0 = sim.n_agents()
+plan = FaultPlan((Fault(step=5, kind="nan_attrs", frac=0.08),
+                  Fault(step=9, kind="device_loss", survivors=2)), seed=11)
+sv = Supervisor(sim, Supervised(dir={ck!r}, every=4, keep=9),
+                fault_plan=plan)
+sv.run(12)
+assert sim.iteration == 12, sim.iteration
+# the degraded restore inherited rcb ownership from the checkpoint
+assert sim.engine.geom.uneven, sim.engine.geom
+assert sim.engine.geom.n_devices == 2, sim.engine.geom.mesh_shape
+assert sim.n_agents() == n0, (sim.n_agents(), n0)
+recs = sv.events("recovered")
+assert len(recs) == 2, recs
+check_bitexact(sim, {ck!r}, recs[-1]["rolled_back_to"],
+               12 - recs[-1]["rolled_back_to"], n_devices=2)
+print("OK rcb recovery")
+""", devices=4)
+    assert "OK rcb recovery" in out
+
+
+def test_sharded_healthy_guarded_run_no_false_positives(tmp_path):
+    out = run_sub(SHARDED_COMMON + """
+from repro.core import DeltaConfig
+sim = make_sim(beh, interior=(8, 8), mesh_shape=(2, 2), cap=24, dt=0.5,
+               delta=DeltaConfig(enabled=True, refresh_interval=4),
+               guards="error")
+sim.init(pos, attrs)
+sim.run(16)
+import repro.core.guards as guards_mod
+assert guards_mod.health_counts(sim.state).tolist() == [0, 0, 0, 0, 0]
+assert sim.n_agents() == n
+print("OK healthy sharded guarded")
+""", devices=4)
+    assert "OK healthy sharded guarded" in out
