@@ -1,0 +1,104 @@
+"""Parameter sweep + ABC calibration through the scenario server.
+
+Two workloads the batching server turns from N sequential runs into a few
+vmapped dispatches (docs/serving.md):
+
+1. **Sweep** — a grid over the infection rate ``beta`` of the
+   ``sir_mechanics`` family, every point streamed as S/I/R frames from
+   shared ensemble batches.
+2. **Calibration** — approximate Bayesian computation (ABC rejection with
+   a shrinking tolerance): a hidden "true" beta produces an observed
+   attack rate; each round submits a batch of candidate betas, keeps the
+   candidates whose simulated attack rate lands within tolerance, and
+   resamples around the survivors.  The accepted cloud is the ABC
+   posterior; its mean is the fitted beta.
+
+    PYTHONPATH=src python examples/param_sweep.py
+
+Everything runs in-process: the server, its compiled-runner cache, and
+the compile-cache telemetry printed at the end are the same machinery the
+CI serve smoke exercises.
+"""
+
+import numpy as np
+
+from repro.launch.serve import (
+    ScenarioRequest,
+    ScenarioServer,
+    sir_mechanics_family,
+)
+
+N_AGENTS = 200
+STEPS = 20
+SLOT = 8
+
+
+def attack_rate(handle) -> float:
+    """Final fraction of agents ever infected (I + R at the horizon)."""
+    _, final = handle.frames[-1]
+    return float(final[1] + final[2]) / float(final.sum())
+
+
+def run_batch(server, betas, seed0=0, stream_every=0):
+    rids = [server.submit(ScenarioRequest(
+                family="sir_mechanics", params={"beta": float(b)},
+                steps=STEPS, stream_every=stream_every, seed=seed0 + i))
+            for i, b in enumerate(betas)]
+    server.drain()
+    return [server.handle(r) for r in rids]
+
+
+def main():
+    server = ScenarioServer([sir_mechanics_family(n_agents=N_AGENTS)],
+                            slot_size=SLOT)
+
+    # -- 1. sweep ------------------------------------------------------
+    grid = np.linspace(0.01, 0.15, 8)
+    print(f"sweep: {len(grid)} beta points, {STEPS} steps each")
+    for h in run_batch(server, grid, stream_every=10):
+        curve = " ".join(f"t={s}:I={int(f[1])}" for s, f in h.frames)
+        print(f"  beta={h.request.params['beta']:.3f}  {curve}  "
+              f"attack={attack_rate(h):.2f}")
+
+    # -- 2. ABC calibration -------------------------------------------
+    # A target on the steep part of the response curve (the sweep above
+    # shows attack rate saturating past beta ~0.07, where no finite data
+    # could identify beta).
+    rng = np.random.default_rng(7)
+    true_beta = 0.04
+    [obs_handle] = run_batch(server, [true_beta], seed0=100)
+    target = attack_rate(obs_handle)
+    print(f"\ncalibration target: attack rate {target:.2f} "
+          f"(hidden beta={true_beta})")
+
+    lo, hi = 0.005, 0.2
+    candidates = rng.uniform(lo, hi, SLOT)
+    accepted = []
+    for rnd, tol in enumerate((0.15, 0.08, 0.04)):
+        handles = run_batch(server, candidates, seed0=200 + rnd * SLOT)
+        scored = [(abs(attack_rate(h) - target),
+                   h.request.params["beta"]) for h in handles]
+        hits = [b for d, b in scored if d <= tol]
+        accepted = hits or [min(scored)[1]]
+        # resample around the surviving cloud (ABC-SMC style jitter)
+        width = max((hi - lo) * 0.5 ** (rnd + 1), 0.01)
+        candidates = np.clip(
+            rng.choice(accepted, SLOT) + rng.normal(0, width / 4, SLOT),
+            lo, hi)
+        print(f"  round {rnd}: tol={tol:.2f} accepted "
+              f"{len(hits)}/{len(handles)} -> "
+              f"beta in [{min(accepted):.3f}, {max(accepted):.3f}]")
+
+    fit = float(np.mean(accepted))
+    print(f"fitted beta = {fit:.3f} (true {true_beta})")
+
+    st = server.stats()
+    rc = st["caches"]["ensemble.runner"]
+    print(f"\nserver: {st['batches']} batches, mean occupancy "
+          f"{st['mean_occupancy']:.2f}, runner cache {rc['hits']}h/"
+          f"{rc['misses']}m — every batch after the first reused the "
+          "compiled ensemble runner")
+
+
+if __name__ == "__main__":
+    main()

@@ -29,6 +29,7 @@ from repro.analysis.contracts import (  # noqa: F401
     DisplacementBound,
     check_contracts,
     check_engine,
+    check_ensemble,
     check_supervision,
     displacement_bound,
     enforce,
@@ -58,6 +59,7 @@ __all__ = [
     "DisplacementBound",
     "check_contracts",
     "check_engine",
+    "check_ensemble",
     "check_supervision",
     "displacement_bound",
     "enforce",

@@ -459,3 +459,163 @@ def enforce(engine, mode: str = "error") -> List[Diagnostic]:
     for d in errors:
         warnings.warn(f"simcheck contract: {d.format()}", stacklevel=3)
     return errors
+
+
+# ---------------------------------------------------------------------------
+# Ensemble batch-safety (core.ensemble / launch.serve)
+# ---------------------------------------------------------------------------
+
+CONTRACT_ENSEMBLE = "ensemble-batch-safe"
+CONTRACT_ENSEMBLE_FACTORY = "ensemble-factory-static"
+
+# jax host-callback entry points: legal in a solo engine's cold path, but
+# inside a vmapped lane they fire once per replica per step on the host —
+# and several have no batching rule at all.
+_HOST_CALLBACK_NAMES = {"pure_callback", "io_callback", "host_callback",
+                        "callback", "debug_callback"}
+
+
+def _scan_host_callbacks(behavior, name: str) -> List[Diagnostic]:
+    import ast
+    import inspect
+    import textwrap
+
+    out: List[Diagnostic] = []
+
+    def scan_fn(fn, label):
+        try:
+            src = textwrap.dedent(inspect.getsource(fn))
+            tree = ast.parse(src)
+        except (OSError, TypeError, SyntaxError):
+            return
+        code = getattr(fn, "__code__", None)
+        filename = code.co_filename if code else "<source>"
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            func = node.func
+            attr = func.attr if isinstance(func, ast.Attribute) else (
+                func.id if isinstance(func, ast.Name) else None)
+            if attr in _HOST_CALLBACK_NAMES:
+                out.append(Diagnostic(
+                    severity="error", contract=CONTRACT_ENSEMBLE,
+                    message=(f"host callback `{attr}` in a behavior "
+                             "kernel: under the vmapped ensemble runner "
+                             "it fires per replica per step on the host "
+                             "(or fails to batch entirely)"),
+                    hint="compute on-device with jnp ops; read metrics "
+                         "through per-replica reducers "
+                         "(operations.batch_*) at segment boundaries",
+                    location=f"{label} ({filename}:{node.lineno})"))
+
+    def rec(b, path):
+        children = tuple(getattr(b, "children", ()) or ())
+        if children:
+            for i, c in enumerate(children):
+                rec(c, f"{path}.b{i}")
+            return
+        scan_fn(b.pair_fn, f"{path}.pair_fn")
+        scan_fn(b.update_fn, f"{path}.update_fn")
+
+    rec(behavior, name)
+    return out
+
+
+def check_ensemble(ensemble) -> List[Diagnostic]:
+    """Batch-safety contract of one ensemble family (duck-typed: needs
+    ``behavior_fn``, ``param_names``, ``proto_engine()``).
+
+    Four passes, all static — this is what lets ``launch.serve`` reject an
+    incompatible scenario request with a diagnostic instead of a trace
+    error mid-batch:
+
+    1. the solo engine contracts over the family's proto engine (a family
+       whose solo runs are broken is broken batched, too);
+    2. an abstract-trace probe of the behavior factory: `eval_shape` with
+       parameter *tracers* catches factories that branch on or concretize
+       parameter values (``float(params[...])`` radii, ``if beta > 0``) —
+       legal with solo floats, fatal under vmap;
+    3. structural stability: the behavior built at two different concrete
+       parameter points must agree on schema, radius, pair attrs,
+       accumulators, and spawn capability (per-replica shape divergence
+       cannot batch);
+    4. the hot-path lint re-run with ``params`` *traced* (the ensemble
+       threads them as per-replica scalars), every finding escalated to an
+       ensemble error.
+    """
+    import jax
+
+    out: List[Diagnostic] = []
+    try:
+        proto = ensemble.proto_engine()
+    except Exception as e:  # noqa: BLE001 — any factory failure is a finding
+        return [Diagnostic(
+            severity="error", contract=CONTRACT_ENSEMBLE_FACTORY,
+            message=f"behavior factory failed at the zero parameter "
+                    f"point: {type(e).__name__}: {e}",
+            hint="the factory must build at any parameter value — "
+                 "structure may not depend on the point",
+            location=_fn_label(ensemble.behavior_fn))]
+    out.extend(check_engine(proto))
+
+    names = tuple(ensemble.param_names)
+
+    def probe(params):
+        ensemble.behavior_fn(params)
+        return jnp.zeros(())
+
+    try:
+        jax.eval_shape(probe, {n: jax.ShapeDtypeStruct((), jnp.float32)
+                               for n in names})
+    except Exception as e:  # noqa: BLE001
+        msg = str(e).splitlines()[0] if str(e) else type(e).__name__
+        out.append(Diagnostic(
+            severity="error", contract=CONTRACT_ENSEMBLE_FACTORY,
+            message=(f"behavior factory concretizes a per-replica "
+                     f"parameter ({type(e).__name__}: {msg})"),
+            hint="parameters are tracers under the ensemble runner: no "
+                 "float()/if on them; keep radii and shapes static and "
+                 "gate numerically inside the kernel",
+            location=_fn_label(ensemble.behavior_fn)))
+        return out  # the remaining probes need a working factory
+
+    lo = ensemble.behavior_fn({n: jnp.float32(0.25) for n in names})
+    hi = ensemble.behavior_fn({n: jnp.float32(0.75) for n in names})
+    drift = []
+    if lo.schema != hi.schema:
+        drift.append("schema")
+    if float(lo.radius) != float(hi.radius):
+        drift.append("radius")
+    if tuple(lo.pair_attrs) != tuple(hi.pair_attrs):
+        drift.append("pair_attrs")
+    if sorted(lo.acc_spec) != sorted(hi.acc_spec):
+        drift.append("accumulators")
+    if bool(lo.can_spawn) != bool(hi.can_spawn):
+        drift.append("can_spawn")
+    if drift:
+        out.append(Diagnostic(
+            severity="error", contract=CONTRACT_ENSEMBLE_FACTORY,
+            message=("behavior structure varies with the parameter "
+                     f"point ({', '.join(drift)}): replicas of one "
+                     "family must share one trace"),
+            hint="move structural choices (schema, radii, accumulator "
+                 "specs) out of the swept parameters",
+            location=_fn_label(ensemble.behavior_fn)))
+
+    from repro.analysis.lint import lint_behavior
+    for d in lint_behavior(lo, "ensemble",
+                           static_args={"dt", "self", "cls"}):
+        out.append(Diagnostic(
+            severity="error", contract=CONTRACT_ENSEMBLE,
+            message=f"[{d.contract}] {d.message} (params are traced "
+                    "per-replica scalars under the ensemble runner)",
+            hint=d.hint, location=d.location))
+
+    out.extend(_scan_host_callbacks(lo, "ensemble"))
+    return out
+
+
+def _fn_label(fn) -> str:
+    mod = getattr(fn, "__module__", "")
+    name = getattr(fn, "__qualname__", getattr(fn, "__name__", repr(fn)))
+    return f"{mod}.{name}" if mod else name

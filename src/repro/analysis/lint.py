@@ -44,7 +44,7 @@ import ast
 import inspect
 import pathlib
 import textwrap
-from typing import Iterable, List, Sequence, Set
+from typing import Iterable, List, Optional, Sequence, Set
 
 from repro.analysis.diagnostics import Diagnostic
 
@@ -261,10 +261,11 @@ def _is_none_check(test: ast.AST) -> bool:
     return all(isinstance(op, (ast.Is, ast.IsNot)) for op in test.ops)
 
 
-def _traced_args(fdef) -> Set[str]:
+def _traced_args(fdef, static_args: Optional[Set[str]] = None) -> Set[str]:
+    static = _STATIC_ARGS if static_args is None else static_args
     names = [a.arg for a in fdef.args.args + fdef.args.kwonlyargs]
     return {n for n in names
-            if n not in _STATIC_ARGS and not n.startswith("_")}
+            if n not in static and not n.startswith("_")}
 
 
 def _propagate_taint(fdef, traced: Set[str]) -> Set[str]:
@@ -294,8 +295,15 @@ def _propagate_taint(fdef, traced: Set[str]) -> Set[str]:
     return traced
 
 
-def lint_hot_fn(fn, label: str = "") -> List[Diagnostic]:
-    """Hot-path lint of one pair/update function via its source."""
+def lint_hot_fn(fn, label: str = "",
+                static_args: Optional[Set[str]] = None) -> List[Diagnostic]:
+    """Hot-path lint of one pair/update function via its source.
+
+    ``static_args`` overrides the default set of non-traced argument names
+    (:data:`_STATIC_ARGS`).  The ensemble contract passes a set *without*
+    ``params``: under the vmapped runner parameters are traced per-replica
+    scalars, so branching on them — legal in a solo engine — becomes a
+    batch hazard."""
     try:
         src = textwrap.dedent(inspect.getsource(fn))
         tree = ast.parse(src)
@@ -314,7 +322,7 @@ def lint_hot_fn(fn, label: str = "") -> List[Diagnostic]:
         return f"{label or fn.__name__} ({filename}:" \
                f"{node.lineno + base_line})"
 
-    traced = _propagate_taint(fdef, _traced_args(fdef))
+    traced = _propagate_taint(fdef, _traced_args(fdef, static_args))
     out: List[Diagnostic] = []
     for node in ast.walk(fdef):
         if isinstance(node, (ast.If, ast.While)):
@@ -364,7 +372,9 @@ def lint_hot_fn(fn, label: str = "") -> List[Diagnostic]:
     return out
 
 
-def lint_behavior(behavior, name: str = "behavior") -> List[Diagnostic]:
+def lint_behavior(behavior, name: str = "behavior",
+                  static_args: Optional[Set[str]] = None
+                  ) -> List[Diagnostic]:
     """Hot-path lint over every leaf pair/update function of a behavior
     stack (composed wrappers are framework code and recursed through, not
     linted themselves)."""
@@ -376,8 +386,10 @@ def lint_behavior(behavior, name: str = "behavior") -> List[Diagnostic]:
             for i, c in enumerate(children):
                 rec(c, f"{path}.b{i}")
             return
-        out.extend(lint_hot_fn(b.pair_fn, f"{path}.pair_fn"))
-        out.extend(lint_hot_fn(b.update_fn, f"{path}.update_fn"))
+        out.extend(lint_hot_fn(b.pair_fn, f"{path}.pair_fn",
+                               static_args=static_args))
+        out.extend(lint_hot_fn(b.update_fn, f"{path}.update_fn",
+                               static_args=static_args))
 
     rec(behavior, name)
     return out

@@ -22,14 +22,21 @@ Public API:
   GuardConfig / HealthReport / HealthError
                            — runtime health guards fused into the step
                              (docs/resilience.md)
+  Ensemble / EnsembleState — vmapped many-config runner: R parameter
+                             points of one family per dispatch
+                             (docs/serving.md)
+  cache_stats              — hit/miss/evict counters for every bounded
+                             compile cache in the process
 """
 
 from repro.core import operations
 from repro.core.agent_soa import AgentSchema, AgentSoA, GID_COUNT, GID_RANK, POS
 from repro.core.behaviors import Behavior, compose
+from repro.core.compile_cache import cache_stats
 from repro.core.delta import DeltaConfig
 from repro.core.domain import Domain, Partition
 from repro.core.engine import Engine, SimState, total_agents
+from repro.core.ensemble import Ensemble, EnsembleState, ensemble_health_counts
 from repro.core.grid import GridGeom
 from repro.core.guards import (
     GUARD_NAMES,
@@ -44,8 +51,10 @@ from repro.core.simulation import Checkpoint, Rebalance, Simulation
 __all__ = [
     "AgentSchema", "AgentSoA", "GID_COUNT", "GID_RANK", "POS",
     "Behavior", "compose", "Checkpoint", "DeltaConfig", "Domain", "Engine",
+    "Ensemble", "EnsembleState",
     "GUARD_NAMES", "GuardConfig", "HealthError", "HealthReport",
     "Partition", "SimState", "GridGeom", "Rebalance", "Rebalancer",
     "Simulation",
-    "health_counts", "operations", "total_agents",
+    "cache_stats", "ensemble_health_counts", "health_counts", "operations",
+    "total_agents",
 ]

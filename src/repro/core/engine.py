@@ -15,7 +15,6 @@ code path.
 from __future__ import annotations
 
 import dataclasses
-import functools
 import math
 from functools import partial
 from typing import Dict, Optional, Tuple
@@ -32,6 +31,7 @@ from repro.core.agent_soa import (
     flat_view,
 )
 from repro.core.behaviors import Behavior
+from repro.core.compile_cache import memoize
 from repro.core.delta import DeltaConfig, Slab
 from repro.core.domain import Domain, spatial_axis_names
 from repro.core.grid import (
@@ -795,7 +795,10 @@ class Engine:
 
 # ---------------------------------------------------------------------------
 # Compiled step/segment caches (module level so structurally-equal engines
-# share executables across Engine/Simulation instances)
+# share executables across Engine/Simulation instances).  Backed by the
+# bounded + instrumented core.compile_cache registry: a long-lived server
+# must not leak executables, and its hit/miss/evict counters are reported
+# (repro.core.compile_cache.cache_stats / the scenario server's stats()).
 # ---------------------------------------------------------------------------
 
 def _mesh_for(engine: "Engine"):
@@ -806,7 +809,7 @@ def _mesh_for(engine: "Engine"):
     return make_abm_mesh(engine.geom.mesh_shape)
 
 
-@functools.lru_cache(maxsize=64)
+@memoize("engine.local_step", maxsize=64)
 def _cached_local_step(engine: "Engine"):
     comm = LocalComm(toroidal=engine.geom.toroidal)
 
@@ -830,7 +833,7 @@ def _shard_comm(engine: "Engine", axis_names: Tuple[str, ...]):
     return comm, P(*axis_names)
 
 
-@functools.lru_cache(maxsize=64)
+@memoize("engine.sharded_step", maxsize=64)
 def _cached_sharded_step(engine: "Engine", mesh,
                          axis_names: Tuple[str, ...]):
     comm, spec = _shard_comm(engine, axis_names)
@@ -853,7 +856,7 @@ def _cached_sharded_step(engine: "Engine", mesh,
     return step
 
 
-@functools.lru_cache(maxsize=64)
+@memoize("engine.segment_runner", maxsize=64)
 def _cached_segment_runner(engine: "Engine", mesh,
                            axis_names: Tuple[str, ...]):
     if mesh is None:

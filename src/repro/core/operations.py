@@ -129,3 +129,50 @@ def positions_of(state) -> np.ndarray:
     v = np.asarray(state.soa.valid).ravel()
     pos = np.asarray(state.soa.attrs["pos"])
     return pos.reshape(-1, pos.shape[-1])[v]
+
+
+# ---------------------------------------------------------------------------
+# Batched (per-replica) reducers — the ensemble analogue of the family
+# above.  Each takes a *stacked* SimState (every leaf carrying a leading
+# (R,) replica axis, core.ensemble) and reduces each lane independently,
+# returning an (R, ...) array: lane r's value is bit-identical to the solo
+# reducer on replica r, untouched by its batch neighbors.
+# ---------------------------------------------------------------------------
+
+def batch_agent_count(state) -> np.ndarray:
+    """Per-replica live-agent totals: (R,) int64."""
+    v = state.soa.valid
+    return np.asarray(jnp.sum(v.reshape(v.shape[0], -1), axis=1),
+                      dtype=np.int64)
+
+
+def batch_attr_sum(attr: str, name: str = "") -> Callable:
+    """Per-replica sum of a scalar attribute over live agents: (R,)."""
+
+    def reduce(state) -> np.ndarray:
+        soa = state.soa
+        r = soa.valid.shape[0]
+        a = soa.attrs[attr].reshape(r, -1)
+        v = soa.valid.reshape(r, -1)
+        return np.asarray(jnp.sum(jnp.where(v, a, 0), axis=1))
+
+    reduce.__name__ = name or f"batch_sum_{attr}"
+    return reduce
+
+
+def batch_attr_counts(attr: str, values: Sequence[int],
+                      name: str = "") -> Callable:
+    """Per-replica compartment counts of an integer attribute (e.g. the
+    SIR occupation per ensemble lane): (R, len(values)) int64."""
+    vals = tuple(values)
+
+    def reduce(state) -> np.ndarray:
+        soa = state.soa
+        r = soa.valid.shape[0]
+        a = soa.attrs[attr].reshape(r, -1)
+        v = soa.valid.reshape(r, -1)
+        cols = [jnp.sum((a == val) & v, axis=1) for val in vals]
+        return np.asarray(jnp.stack(cols, axis=1), dtype=np.int64)
+
+    reduce.__name__ = name or f"batch_counts_{attr}"
+    return reduce

@@ -35,6 +35,7 @@ from repro.analysis import (
     Report,
     audit_engine,
     check_engine,
+    check_ensemble,
     lint_behavior,
     lint_paths,
     with_context,
@@ -116,6 +117,36 @@ def check_sim_module(name: str, *, jaxpr: bool = True,
     return rep
 
 
+def ensemble_families() -> List[str]:
+    """Sims that publish an ensemble compatibility family (a module-level
+    ``ensemble_family()`` builder, see core.ensemble)."""
+    out = []
+    for name in SIMS:
+        mod = importlib.import_module(f"repro.sims.{name}")
+        if hasattr(mod, "ensemble_family"):
+            out.append(name)
+    return out
+
+
+def check_ensemble_module(name: str) -> Report:
+    """Batch-safety contract over a sim's published ensemble family —
+    the same :func:`repro.analysis.check_ensemble` pass the scenario
+    server runs before admitting a family's requests."""
+    rep = Report()
+    mod = importlib.import_module(f"repro.sims.{name}")
+    fam = getattr(mod, "ensemble_family", None)
+    if fam is None:
+        from repro.analysis import Diagnostic
+        rep.add(Diagnostic(
+            severity="info", contract="ensemble-batch-safe",
+            message=f"sims.{name} publishes no ensemble family "
+                    "(no ensemble_family() builder)",
+            location=f"sims.{name}"))
+        return rep
+    rep.extend(with_context(check_ensemble(fam()), f"ensemble.{name}"))
+    return rep
+
+
 def _default_lint_root() -> str:
     import repro
     return str(pathlib.Path(repro.__file__).parent)
@@ -133,6 +164,10 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     ap.add_argument("--lint", nargs="*", metavar="PATH",
                     help="lint source paths (flag alone lints the "
                          "installed repro package)")
+    ap.add_argument("--ensemble", action="append", default=[],
+                    choices=SIMS + ["all"], metavar="SIM",
+                    help="check a sim's ensemble family for batch "
+                         "safety ('all' checks every published family)")
     ap.add_argument("--strict", action="store_true",
                     help="warnings also fail (errors always do)")
     ap.add_argument("--format", default="text", choices=["text", "json"])
@@ -145,9 +180,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     sims = list(args.sim)
     if "all" in sims:
         sims = SIMS
-    if not sims and args.lint is None:
+    ensembles = list(args.ensemble)
+    if "all" in ensembles:
+        ensembles = ensemble_families()
+    if not sims and args.lint is None and not ensembles:
         # bare invocation: audit everything
         sims = SIMS
+        ensembles = ensemble_families()
         args.lint = []
 
     rep = Report()
@@ -158,6 +197,8 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
         rep.extend(check_sim_module(
             name, jaxpr=not args.no_jaxpr,
             variants=not args.no_variants))
+    for name in ensembles:
+        rep.extend(check_ensemble_module(name))
 
     out = rep.format_json() if args.format == "json" else rep.format_text()
     print(out)

@@ -4,7 +4,7 @@ benchmark (Figure 3 shows its first three iterations)."""
 
 from __future__ import annotations
 
-from functools import lru_cache, partial
+from functools import partial
 
 import jax
 import jax.numpy as jnp
@@ -12,6 +12,7 @@ import numpy as np
 
 from repro.core import AgentSchema, Behavior, Simulation
 from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
+from repro.core.compile_cache import memoize
 from repro.sims.common import init_agents, make_sim, uniform_positions
 
 SCHEMA = AgentSchema.create({
@@ -23,7 +24,7 @@ SCHEMA = AgentSchema.create({
 # Cached on the (hashable) parameter tuple: repeated builds return the
 # *same* Behavior object, so the engine's compiled step/segment caches hit
 # across Simulation instances instead of re-tracing per run.
-@lru_cache(maxsize=32)
+@memoize("sims.cell_clustering.behavior", maxsize=32)
 def behavior(repulsion=2.0, adhesion=0.6, radius=2.0, max_step=0.5
              ) -> Behavior:
     return Behavior(

@@ -3,14 +3,13 @@ saturates — exercises the spawn path, capacity handling and migration."""
 
 from __future__ import annotations
 
-from functools import lru_cache
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AgentSchema, Behavior, POS, Simulation, operations
 from repro.core.behaviors import soft_repulsion_adhesion
+from repro.core.compile_cache import memoize
 from repro.sims.common import disk_positions, init_agents, make_sim
 
 SCHEMA = AgentSchema.create({
@@ -42,7 +41,7 @@ def _update(attrs, valid, acc, key, params, dt):
     return new, valid, spawn, child
 
 
-@lru_cache(maxsize=8)
+@memoize("sims.cell_proliferation.behavior", maxsize=8)
 def behavior(radius=2.0) -> Behavior:
     return Behavior(
         schema=SCHEMA,

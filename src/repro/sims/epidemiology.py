@@ -12,13 +12,12 @@ analogue of the paper's two-line ``SumOverAllRanks`` change (§3.4).
 
 from __future__ import annotations
 
-from functools import lru_cache
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AgentSchema, Behavior, POS, Simulation, operations
+from repro.core.compile_cache import memoize
 from repro.sims.common import init_agents, make_sim, uniform_positions
 
 S, I, R = 0, 1, 2
@@ -53,7 +52,7 @@ def _update(attrs, valid, acc, key, params, dt):
     return new, valid, spawn, None
 
 
-@lru_cache(maxsize=32)
+@memoize("sims.epidemiology.behavior", maxsize=32)
 def behavior(beta=0.03, gamma=0.25, sigma=1.2, radius=2.0) -> Behavior:
     return Behavior(
         schema=SCHEMA,

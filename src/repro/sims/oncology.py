@@ -9,14 +9,13 @@ identical in serial and distributed execution."""
 
 from __future__ import annotations
 
-from functools import lru_cache
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AgentSchema, Behavior, POS, Simulation, total_agents
 from repro.core.behaviors import soft_repulsion_adhesion
+from repro.core.compile_cache import memoize
 from repro.sims.common import disk_positions, init_agents, make_sim
 
 SCHEMA = AgentSchema.create({
@@ -50,7 +49,7 @@ def _pair(ai, aj, disp, dist2, params):
     return out
 
 
-@lru_cache(maxsize=8)
+@memoize("sims.oncology.behavior", maxsize=8)
 def behavior(radius=2.0) -> Behavior:
     return Behavior(
         schema=SCHEMA,

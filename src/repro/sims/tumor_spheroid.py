@@ -23,14 +23,13 @@ only: see ``examples/spheroid_3d.py``.
 
 from __future__ import annotations
 
-from functools import lru_cache
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 from repro.core import AgentSchema, Behavior, POS, Simulation, compose, total_agents
 from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
+from repro.core.compile_cache import memoize
 from repro.sims.common import ball_positions, init_agents, make_sim
 
 # Spatial dimensionality of this sim's default geometry (read by
@@ -81,7 +80,7 @@ def _growth_update(attrs, valid, acc, key, params, dt):
     return new, valid, spawn, child
 
 
-@lru_cache(maxsize=8)
+@memoize("sims.tumor_spheroid.behavior", maxsize=8)
 def behavior(radius=2.0, repulsion=4.0, adhesion=0.4) -> Behavior:
     """``compose(mechanics, growth)`` — union schema
     {diameter, ctype, nutrient}, both pair kernels over one 3^3 sweep."""

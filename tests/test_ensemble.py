@@ -1,0 +1,481 @@
+"""Ensemble runner + scenario server tests.
+
+The load-bearing property is *bit-exactness*: replica r of a vmapped
+ensemble run must equal the solo run of the same parameter point — same
+f32 arithmetic, same RNG stream, same guard words — locally, on a sharded
+mesh, and on an uneven RCB partition (the sharded cases run in
+subprocesses, as the engine tests do, because XLA placeholder devices
+must be configured before jax initializes).
+"""
+
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 4, timeout: int = 1200) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    p = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+def _tree_equal(a, b):
+    import jax
+
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(la) == len(lb)
+    for (ka, xa), (_, xb) in zip(la, lb):
+        assert np.array_equal(np.asarray(xa), np.asarray(xb)), ka
+
+
+POINTS = [{"beta": 0.02}, {"beta": 0.08, "sigma": 0.5},
+          {"gamma": 0.3, "sir_radius": 1.0}]
+
+
+def _solo_chunked(ens, eng, s0, n_steps):
+    """Solo reference with the exact segment schedule Ensemble.run uses
+    (refresh-interval chunks when delta encoding is on)."""
+    seg = eng.make_segment_runner(None)
+    if not ens.delta_cfg.enabled:
+        return seg(s0, n_steps, True)
+    r = max(int(ens.delta_cfg.refresh_interval), 1)
+    done, s = 0, s0
+    while done < n_steps:
+        n = min(r, n_steps - done)
+        s = seg(s, n, True)
+        done += n
+    return s
+
+
+# ---------------------------------------------------------------------------
+# Local bit-exactness + padding + cache
+# ---------------------------------------------------------------------------
+
+def test_ensemble_bitexact_local_vs_solo():
+    from repro.core import GuardConfig
+    from repro.core.ensemble import replica_state
+    from repro.sims import sir_mechanics as sm
+
+    ens = sm.ensemble_family(interior=(8, 8),
+                             guards=GuardConfig(policy="warn"))
+    estate = sm.ensemble_init(ens, POINTS, n_agents=200,
+                              initial_infected=10)
+    out, _ = ens.run(estate, 12)
+    for r, p in enumerate(POINTS):
+        eng = ens.solo_engine({**sm.ensemble_defaults(), **p})
+        solo = eng.make_segment_runner(None)(
+            replica_state(estate.state, r), 12, True)
+        _tree_equal(solo, replica_state(out.state, r))
+
+
+def test_ensemble_bitexact_local_delta():
+    import jax.numpy as jnp
+
+    from repro.core import DeltaConfig
+    from repro.core.ensemble import replica_state
+    from repro.sims import sir_mechanics as sm
+
+    delta = DeltaConfig(enabled=True, qdtype=jnp.int16,
+                        refresh_interval=4)
+    ens = sm.ensemble_family(interior=(8, 8), delta=delta)
+    estate = sm.ensemble_init(ens, POINTS, n_agents=150,
+                              initial_infected=8)
+    out, _ = ens.run(estate, 10)  # 3 refresh chunks: 4 + 4 + 2
+    for r, p in enumerate(POINTS):
+        eng = ens.solo_engine({**sm.ensemble_defaults(), **p})
+        solo = _solo_chunked(ens, eng, replica_state(estate.state, r), 10)
+        _tree_equal(solo, replica_state(out.state, r))
+
+
+def test_padding_is_inert():
+    from repro.core.ensemble import replica_state
+    from repro.sims import sir_mechanics as sm
+
+    ens = sm.ensemble_family(interior=(8, 8))
+    estate = sm.ensemble_init(ens, POINTS, n_agents=120,
+                              initial_infected=6)
+    out, _ = ens.run(estate, 8)
+    padded = ens.pad_to(estate, 8)
+    assert padded.replicas == 8 and padded.n_active == 3
+    assert list(padded.active) == [True] * 3 + [False] * 5
+    out_p, _ = ens.run(padded, 8)
+    for r in range(len(POINTS)):
+        _tree_equal(replica_state(out.state, r),
+                    replica_state(out_p.state, r))
+
+
+def test_runner_cache_hits_on_same_family():
+    from repro.core.ensemble import _RUNNER_CACHE
+    from repro.sims import sir_mechanics as sm
+
+    ens = sm.ensemble_family(interior=(8, 8))
+    estate = sm.ensemble_init(ens, POINTS[:2], n_agents=100,
+                              initial_infected=5)
+    s0 = _RUNNER_CACHE.stats()
+    ens.run(estate, 4)
+    s1 = _RUNNER_CACHE.stats()
+    # a second run — and a *rebuilt* Ensemble of the same family — hit
+    ens.run(estate, 4)
+    ens2 = sm.ensemble_family(interior=(8, 8))
+    assert ens2.fingerprint == ens.fingerprint
+    ens2.run(estate, 4)
+    s2 = _RUNNER_CACHE.stats()
+    assert s1.misses >= s0.misses  # first run may build or reuse
+    assert s2.misses == s1.misses  # no rebuilds after the first
+    assert s2.hits >= s1.hits + 2
+
+
+def test_per_replica_reducers_and_health():
+    from repro.core import GuardConfig, health_counts, operations
+    from repro.core.ensemble import ensemble_health_counts, replica_state
+    from repro.sims import sir_mechanics as sm
+
+    ens = sm.ensemble_family(interior=(8, 8),
+                             guards=GuardConfig(policy="warn"))
+    estate = sm.ensemble_init(ens, POINTS, n_agents=150,
+                              initial_infected=8)
+    out, _ = ens.run(estate, 6)
+    counts = operations.batch_attr_counts("state", (sm.S, sm.I, sm.R))(
+        out.state)
+    assert counts.shape == (3, 3)
+    assert (counts.sum(axis=1) == 150).all()
+    h = ensemble_health_counts(out)
+    assert h.shape[0] == 3
+    for r in range(3):
+        solo = replica_state(out.state, r)
+        np.testing.assert_array_equal(h[r], health_counts(solo))
+        st = np.asarray(solo.soa.attrs["state"]).ravel()
+        v = np.asarray(solo.soa.valid).ravel()
+        expect = [int(((st == s) & v).sum()) for s in (sm.S, sm.I, sm.R)]
+        assert list(counts[r]) == expect
+
+
+# ---------------------------------------------------------------------------
+# Sharded + uneven-partition bit-exactness (subprocess: needs devices)
+# ---------------------------------------------------------------------------
+
+ENSEMBLE_COMMON = """
+import numpy as np, jax
+from repro.core import GuardConfig
+from repro.core.ensemble import replica_state
+from repro.launch.mesh import make_abm_mesh
+from repro.sims import sir_mechanics as sm
+
+POINTS = [{"beta": 0.02}, {"beta": 0.08, "sigma": 0.5},
+          {"gamma": 0.3, "sir_radius": 1.0}]
+
+def tree_equal(a, b):
+    la = jax.tree_util.tree_leaves_with_path(a)
+    lb = jax.tree_util.tree_leaves_with_path(b)
+    assert len(la) == len(lb)
+    for (ka, xa), (_, xb) in zip(la, lb):
+        assert np.array_equal(np.asarray(xa), np.asarray(xb)), ka
+"""
+
+
+def test_ensemble_bitexact_sharded_mesh():
+    run_sub(ENSEMBLE_COMMON + """
+ens = sm.ensemble_family(interior=(5, 5), mesh_shape=(2, 2),
+                         guards=GuardConfig(policy="warn"))
+mesh = make_abm_mesh((2, 2))
+estate = sm.ensemble_init(ens, POINTS, n_agents=240, initial_infected=12)
+out, _ = ens.run(estate, 10, mesh=mesh)
+for r, p in enumerate(POINTS):
+    eng = ens.solo_engine({**sm.ensemble_defaults(), **p})
+    seg = eng.make_segment_runner(mesh)
+    solo = seg(replica_state(estate.state, r), 10, True)
+    tree_equal(solo, replica_state(out.state, r))
+print("sharded ensemble bit-exact")
+""")
+
+
+def test_ensemble_bitexact_uneven_partition():
+    run_sub(ENSEMBLE_COMMON + """
+from repro.core import Partition
+part = Partition.from_widths([(4, 8), (7, 5)])
+ens = sm.ensemble_family(partition=part,
+                         guards=GuardConfig(policy="warn"))
+assert ens.geom.mesh_shape == (2, 2)
+mesh = make_abm_mesh((2, 2))
+estate = sm.ensemble_init(ens, POINTS[:2], n_agents=200,
+                          initial_infected=10)
+out, _ = ens.run(estate, 8, mesh=mesh)
+from repro.core.ensemble import ensemble_health_counts
+h = ensemble_health_counts(out)
+assert h.shape[0] == 2 and (h == 0).all(), h
+for r, p in enumerate(POINTS[:2]):
+    eng = ens.solo_engine({**sm.ensemble_defaults(), **p})
+    seg = eng.make_segment_runner(mesh)
+    solo = seg(replica_state(estate.state, r), 8, True)
+    tree_equal(solo, replica_state(out.state, r))
+print("uneven-partition ensemble bit-exact")
+""")
+
+
+# ---------------------------------------------------------------------------
+# check_ensemble contract
+# ---------------------------------------------------------------------------
+
+def test_check_ensemble_accepts_shipped_family():
+    from repro.analysis import check_ensemble
+    from repro.sims import sir_mechanics as sm
+
+    assert check_ensemble(sm.ensemble_family()) == []
+
+
+def test_check_ensemble_rejects_concretizing_factory():
+    import dataclasses
+
+    from repro.analysis import check_ensemble
+    from repro.core import Domain
+    from repro.core.ensemble import Ensemble
+    from repro.sims import cell_clustering as cc
+
+    def bad(params):
+        return dataclasses.replace(cc.behavior(),
+                                   radius=float(params["radius"]))
+
+    ens = Ensemble(
+        geom=Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+                    cap=24, boundary="toroidal"),
+        behavior_fn=bad, param_names=("radius",))
+    diags = check_ensemble(ens)
+    assert any(d.contract == "ensemble-factory-static"
+               and d.severity == "error" for d in diags)
+
+
+def test_check_ensemble_rejects_param_branch():
+    import dataclasses
+
+    import jax.numpy as jnp
+
+    from repro.analysis import check_ensemble
+    from repro.core import Domain
+    from repro.core.ensemble import Ensemble
+    from repro.sims import cell_clustering as cc
+
+    def branching_update(attrs, valid, acc, key, params, dt):
+        if params["gain"] > 1.0:  # legal solo (params static), not batched
+            f = acc["force"] * 2.0
+        else:
+            f = acc["force"]
+        new = dict(attrs)
+        new["pos"] = attrs["pos"] + jnp.where(valid[..., None], f * dt, 0.0)
+        return new, valid, jnp.zeros_like(valid), None
+
+    def fam(params):
+        return dataclasses.replace(
+            cc.behavior(), update_fn=branching_update,
+            params={"repulsion": 2.0, "adhesion": 0.6,
+                    "same_type_only": 1.0, "gain": params["gain"]})
+
+    ens = Ensemble(
+        geom=Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+                    cap=24, boundary="toroidal"),
+        behavior_fn=fam, param_names=("gain",))
+    diags = check_ensemble(ens)
+    assert any(d.contract == "ensemble-batch-safe"
+               and "hot-python-branch" in d.message for d in diags)
+
+
+def test_simcheck_cli_ensemble_flag():
+    from repro.launch.simcheck import main
+
+    assert main(["--ensemble", "sir_mechanics", "--no-jaxpr"]) == 0
+
+
+# ---------------------------------------------------------------------------
+# Scenario server
+# ---------------------------------------------------------------------------
+
+def _server(slot=4, n_agents=120):
+    from repro.launch.serve import ScenarioServer, sir_mechanics_family
+
+    return ScenarioServer([sir_mechanics_family(n_agents=n_agents)],
+                          slot_size=slot)
+
+
+def test_serve_streams_frames_per_request():
+    from repro.launch.serve import ScenarioRequest
+
+    server = _server()
+    rids = [server.submit(ScenarioRequest(
+                family="sir_mechanics", params={"beta": b}, steps=9,
+                stream_every=3, seed=i))
+            for i, b in enumerate((0.02, 0.06))]
+    assert server.queue_depth() == 2
+    done = server.drain()
+    assert done == 2 and server.queue_depth() == 0
+    for rid in rids:
+        h = server.handle(rid)
+        assert h.status == "done"
+        assert [s for s, _ in h.frames] == [3, 6, 9]
+        for _, f in h.frames:
+            assert f.shape == (3,) and int(f.sum()) == 120
+    st = server.stats()
+    assert st["batches"] == 1 and st["mean_occupancy"] == 0.5
+
+
+def test_serve_mixed_budgets_share_batch():
+    from repro.launch.serve import ScenarioRequest
+
+    server = _server()
+    a = server.submit(ScenarioRequest(family="sir_mechanics",
+                                      params={}, steps=4))
+    b = server.submit(ScenarioRequest(family="sir_mechanics",
+                                      params={}, steps=10,
+                                      stream_every=4, seed=1))
+    server.drain()
+    ha, hb = server.handle(a), server.handle(b)
+    assert [s for s, _ in ha.frames] == [4]
+    assert [s for s, _ in hb.frames] == [4, 8, 10]
+    assert server.stats()["batches"] == 1
+
+
+def test_serve_rejections():
+    from repro.launch.serve import ScenarioRequest
+
+    server = _server()
+    r1 = server.submit(ScenarioRequest(family="nope", params={}, steps=4))
+    h1 = server.handle(r1)
+    assert h1.status == "rejected"
+    assert h1.diagnostics[0].contract == "serve-unknown-family"
+    r2 = server.submit(ScenarioRequest(
+        family="sir_mechanics", params={"not_a_knob": 1.0}, steps=4))
+    h2 = server.handle(r2)
+    assert h2.status == "rejected"
+    assert h2.diagnostics[0].contract == "serve-unknown-param"
+    assert "not_a_knob" in h2.diagnostics[0].message
+    r3 = server.submit(ScenarioRequest(
+        family="sir_mechanics", params={}, steps=0))
+    assert server.handle(r3).status == "rejected"
+    assert server.queue_depth() == 0
+    assert server.stats()["requests"]["rejected"] == 3
+
+
+def test_serve_rejects_unsafe_family_with_diagnostic():
+    import dataclasses
+
+    from repro.core import Domain
+    from repro.core.ensemble import Ensemble
+    from repro.launch.serve import (
+        ScenarioFamily, ScenarioRequest, ScenarioServer)
+    from repro.sims import cell_clustering as cc
+
+    def bad(params):
+        return dataclasses.replace(cc.behavior(),
+                                   radius=float(params["radius"]))
+
+    server = ScenarioServer(slot_size=2)
+    diags = server.register(ScenarioFamily(
+        name="bad", ensemble=Ensemble(
+            geom=Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(1, 1),
+                        cap=24, boundary="toroidal"),
+            behavior_fn=bad, param_names=("radius",)),
+        init_point=lambda e, seed: None,
+        metric=lambda s: np.zeros((1, 1))))
+    assert any(d.severity == "error" for d in diags)
+    rid = server.submit(ScenarioRequest(family="bad",
+                                        params={"radius": 1.0}, steps=2))
+    h = server.handle(rid)
+    assert h.status == "rejected"
+    assert any(d.contract == "ensemble-factory-static"
+               for d in h.diagnostics)
+
+
+def test_serve_second_request_hits_runner_cache():
+    from repro.core.ensemble import _RUNNER_CACHE
+    from repro.launch.serve import ScenarioRequest
+
+    server = _server(slot=2)
+    req = ScenarioRequest(family="sir_mechanics", params={}, steps=3)
+    server.submit(req)
+    server.drain()
+    s1 = _RUNNER_CACHE.stats()
+    server.submit(ScenarioRequest(family="sir_mechanics",
+                                  params={"beta": 0.09}, steps=3))
+    server.drain()
+    s2 = _RUNNER_CACHE.stats()
+    assert s2.misses == s1.misses
+    assert s2.hits > s1.hits
+    assert server.stats()["caches"]["ensemble.runner"]["hits"] == s2.hits
+
+
+# ---------------------------------------------------------------------------
+# Satellite units: instrumented caches, bench-row merge
+# ---------------------------------------------------------------------------
+
+def test_memoize_counters_and_bound():
+    from repro.core.compile_cache import CompiledCache, get_cache, memoize
+
+    calls = []
+
+    @memoize("test.ensemble.memo", maxsize=2)
+    def build(x):
+        calls.append(x)
+        return x * 10
+
+    assert build(1) == 10 and build(1) == 10
+    st = get_cache("test.ensemble.memo").stats()
+    assert (st.hits, st.misses, st.evictions) == (1, 1, 0)
+    build(2), build(3)  # evicts key 1
+    assert get_cache("test.ensemble.memo").stats().evictions == 1
+    build(1)
+    assert calls == [1, 2, 3, 1]
+
+    c = CompiledCache("test.ensemble.raw", maxsize=1)
+    assert c.get_or_build("a", lambda: 1) == 1
+    assert c.get_or_build("b", lambda: 2) == 2
+    assert "a" not in c and "b" in c
+    assert c.stats().evictions == 1
+
+
+def test_engine_and_sims_caches_registered():
+    from repro.core.compile_cache import cache_stats
+    from repro.sims import cell_clustering as cc
+
+    cc.behavior()
+    cc.behavior()
+    stats = cache_stats()
+    assert "sims.cell_clustering.behavior" in stats
+    assert stats["sims.cell_clustering.behavior"]["hits"] >= 1
+    for name in ("engine.local_step", "engine.sharded_step",
+                 "engine.segment_runner"):
+        assert name in stats, sorted(stats)
+        assert stats[name]["maxsize"] == 64
+
+
+def test_bench_results_merge_by_name(tmp_path):
+    sys.path.insert(0, os.path.join(ROOT, "benchmarks"))
+    try:
+        from run import merge_rows
+    finally:
+        sys.path.pop(0)
+
+    out = tmp_path / "BENCH_results.json"
+    out.write_text(json.dumps([
+        {"name": "old_row", "us_per_call": 1.0, "derived": "keep me"},
+        {"name": "updated", "us_per_call": 2.0, "derived": "stale"}]))
+    merged = merge_rows(out, [("updated", 3.0, "fresh"),
+                              ("new_row", 4.0, "")])
+    by_name = {r["name"]: r for r in merged}
+    assert set(by_name) == {"old_row", "updated", "new_row"}
+    assert by_name["old_row"]["derived"] == "keep me"
+    assert by_name["updated"]["us_per_call"] == 3.0
+    # and a corrupt history is rebuilt rather than crashing
+    out.write_text("not json")
+    assert merge_rows(out, [("a", 1.0, "")])[0]["name"] == "a"
