@@ -1,0 +1,59 @@
+"""CI guard: compressed aura wire bytes must not regress.
+
+Recomputes the steady-state int8-delta halo payload per iteration for
+each bundled sim and compares it against the checked-in
+``halo_bytes_per_iter_*`` rows in ``BENCH_results.json``.  Unlike the
+timing rows, these are *static* properties of the slab spec (payload
+shapes per directed edge), so any increase is a real payload regression
+— a widened slab, a field that stopped compressing, a codec fallback —
+not machine noise.  Exits non-zero on regression or missing rows.
+
+    PYTHONPATH=src python benchmarks/check_halo_bytes.py
+"""
+
+import json
+import pathlib
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parents[1]
+sys.path.insert(0, str(ROOT / "src"))
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import DeltaConfig
+from repro.sims import (cell_clustering, cell_proliferation, epidemiology,
+                        oncology)
+
+SIMS = (
+    ("cell_clustering", cell_clustering, dict(n_agents=300)),
+    ("cell_proliferation", cell_proliferation, dict(n_agents=50)),
+    ("epidemiology", epidemiology, dict(n_agents=400)),
+    ("oncology", oncology, dict(n_agents=30)),
+)
+
+
+def main() -> int:
+    rows = {r["name"]: r for r in
+            json.loads((ROOT / "BENCH_results.json").read_text())}
+    cfg = DeltaConfig(enabled=True, qdtype=jnp.int8, refresh_interval=16)
+    fail = False
+    for name, mod, kw in SIMS:
+        state, _ = mod.run(steps=8, delta=cfg, **kw)
+        comp = int(np.asarray(state.halo_bytes).sum())
+        row = rows.get(f"halo_bytes_per_iter_{name}")
+        if row is None:
+            print(f"MISSING   halo_bytes_per_iter_{name} "
+                  "(run benchmarks/run.py --only comm_budget)")
+            fail = True
+            continue
+        pinned = float(row["us_per_call"])
+        ok = comp <= pinned
+        print(f"{'OK       ' if ok else 'REGRESSED'} {name}: "
+              f"compressed {comp}B/iter vs pinned {pinned:.0f}B/iter")
+        fail |= not ok
+    return 1 if fail else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

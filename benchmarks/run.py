@@ -15,6 +15,12 @@ Prints ``name,us_per_call,derived`` CSV rows:
                       takes 3-D blocks)
   halo_bytes_3d     — 3-D aura-exchange wire bytes/iter (6 directed edges),
                       full f32 vs int16 delta
+  halo_bytes_per_iter_* / overlap_efficiency / reshard_downtime_steps
+                    — communication budget (ROADMAP item 1,
+                      docs/performance.md): per-sim steady-state aura wire
+                      bytes int8-compressed (R=16) vs raw, % of exchange
+                      wall time hidden behind the interior pass, re-shard
+                      downtime in steps host-path vs device-to-device
   sim_*             — paper Fig. 6 analogue: per-simulation iteration rate
                       (agent_updates/s, the Biocellion comparison metric
                       §3.8); sim_tumor_spheroid_3d tracks the 3-D flagship
@@ -501,6 +507,203 @@ report("tumor_spheroid", sim3.engine, sim3.state, sim3.n_agents())
 
 
 # ---------------------------------------------------------------------------
+# ROADMAP item 1: the communication budget (docs/performance.md)
+# ---------------------------------------------------------------------------
+
+def bench_comm_budget():
+    """Communication-budget rows: per-sim steady-state aura wire bytes
+    compressed (int8 delta, R=16) vs raw f32, the fraction of exchange
+    wall time the overlapped interior pass hides, and re-shard downtime
+    in steps for the host path vs the device-to-device collective."""
+    from repro.core import DeltaConfig
+    from repro.sims import (cell_clustering, cell_proliferation,
+                            epidemiology, oncology)
+
+    cfg = DeltaConfig(enabled=True, qdtype=jnp.int8, refresh_interval=16)
+    for name, mod, kw in (
+        ("cell_clustering", cell_clustering, dict(n_agents=300)),
+        ("cell_proliferation", cell_proliferation, dict(n_agents=50)),
+        ("epidemiology", epidemiology, dict(n_agents=400)),
+        ("oncology", oncology, dict(n_agents=30)),
+    ):
+        sp, _ = mod.run(steps=8, **kw)
+        raw = int(np.asarray(sp.halo_bytes).sum())
+        sd, _ = mod.run(steps=8, delta=cfg, **kw)
+        comp = int(np.asarray(sd.halo_bytes).sum())
+        # Static per-slot byte split from the slab spec: int attrs and
+        # the valid mask ride the codec unchanged, float attrs quantize
+        # 4B -> 1B (+ one 4B scale per field per slab), so the whole-slab
+        # reduction is diluted by the integer payload while the float
+        # payload itself hits the codec's steady-state 4R/(4+(R-1)q).
+        nd = int(np.asarray(sd.soa.attrs["pos"]).shape[-1])
+        fB = iB = 0
+        for _n, v in sd.soa.attrs.items():
+            per = int(np.dtype(np.asarray(v).dtype).itemsize) * int(
+                np.prod(np.asarray(v).shape[nd + 1:], dtype=int))
+            if np.issubdtype(np.asarray(v).dtype, np.floating):
+                fB += per
+            else:
+                iB += per
+        tot = fB + iB + 1                      # + 1B valid mask
+        raw_f = raw * fB / tot
+        comp_f = comp - raw * (iB + 1) / tot   # ints pass through as-is
+        amort = (raw + 15 * comp) / 16
+        emit(f"halo_bytes_per_iter_{name}", float(comp),
+             f"compressed={comp}B_raw={raw}B"
+             f"_slab_reduction={raw / max(comp, 1):.2f}x"
+             f"_float_payload_reduction={raw_f / max(comp_f, 1e-9):.2f}x"
+             f"_amortized={raw / max(amort, 1e-9):.2f}x_at_R=16")
+
+    # --- overlap efficiency (subprocess: 2x2 placeholder mesh) ---------
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses, time, numpy as np, jax, jax.numpy as jnp
+from repro.core import DeltaConfig, Domain, Engine
+from repro.core.domain import spatial_axis_names
+from repro.core.engine import _shard_comm, shard_map_compat
+from repro.core.grid import clear_ring
+from repro.core.halo import halo_exchange
+from repro.core.neighbors import sweep_accumulate
+from repro.launch.mesh import make_abm_mesh
+from repro.sims import cell_clustering
+
+beh = cell_clustering.behavior()
+geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=24)
+cfg = DeltaConfig(enabled=True, qdtype=jnp.int8, refresh_interval=16)
+eng = Engine(geom=geom, behavior=beh, delta_cfg=cfg, dt=0.1)
+rng = np.random.default_rng(0)
+n = 600
+pos = rng.uniform(0.5, 31.5, (n, 2)).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, n).astype(np.int32)}
+state = eng.init_state(pos, attrs, seed=0)
+mesh = make_abm_mesh((2, 2))
+axes = tuple(spatial_axis_names(2))
+comm, spec = _shard_comm(eng, axes)
+
+# a few real steps so the timed delta exchange runs against warm refs
+step = eng.make_sharded_step(mesh)
+state = step(state, full_halo=True)
+for _ in range(3):
+    state = step(state, full_halo=False)
+jax.block_until_ready(state.soa.valid)
+
+idx0 = (0, 0)
+
+def exch_body(state):
+    # the wire leg of local_step in isolation: ring invalidation, codec
+    # encode, ppermute per directed edge, codec decode, ring fill
+    refs = {d: {f: v[idx0] for f, v in slab.items()}
+            for d, slab in state.refs.items()}
+    soa_pre = clear_ring(state.soa)
+    soa2, _refs2, nb, _of = halo_exchange(
+        geom, soa_pre, comm, refs, cfg, False, None)
+    return soa2.valid, jnp.reshape(nb, (1, 1))
+
+def interior_body(state):
+    # the interior pass in isolation: the monolithic sweep on the
+    # ring-invalidated SoA (exactly what overlaps the exchange)
+    soa_pre = clear_ring(state.soa)
+    acc = sweep_accumulate(geom, soa_pre, beh.pair_fn, beh.pair_attrs,
+                           beh.radius, beh.params, backend="tiled")
+    return acc
+
+f_exch = jax.jit(shard_map_compat(
+    exch_body, mesh=mesh, in_specs=spec, out_specs=(spec, spec)))
+f_int = jax.jit(shard_map_compat(
+    interior_body, mesh=mesh, in_specs=spec, out_specs=spec))
+
+def timeit(fn, n=10, warmup=2):
+    for _ in range(warmup):
+        jax.block_until_ready(fn(state))
+    t0 = time.perf_counter()
+    for _ in range(n):
+        jax.block_until_ready(fn(state))
+    return (time.perf_counter() - t0) / n * 1e6
+
+t_exch = timeit(f_exch)
+t_int = timeit(f_int)
+hidden = min(t_int, t_exch) / t_exch * 100.0
+
+def step_rate(overlap):
+    e = dataclasses.replace(eng, overlap=overlap)
+    st = e.make_sharded_step(mesh)(state, full_halo=True)
+    f = lambda: jax.block_until_ready(
+        e.make_sharded_step(mesh)(state, full_halo=False).soa.valid)
+    for _ in range(2):
+        f()
+    t0 = time.perf_counter()
+    for _ in range(6):
+        f()
+    return (time.perf_counter() - t0) / 6 * 1e6
+
+t_on, t_off = step_rate("on"), step_rate("off")
+print(f"overlap_efficiency,{t_exch:.1f},"
+      f"hidden={hidden:.0f}%_t_exchange={t_exch:.0f}us_t_interior={t_int:.0f}us"
+      f"_step_overlap_on={t_on:.0f}us_off={t_off:.0f}us")
+"""
+    run_sub_bench(code, "overlap_")
+
+    # --- re-shard downtime: host vs device transport (subprocess) ------
+    code = """
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import time, numpy as np, jax, jax.numpy as jnp
+from repro.core import (AgentSchema, Behavior, Domain, Engine, Rebalancer,
+                        total_agents)
+from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
+from repro.launch.mesh import make_abm_mesh
+
+schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                             "ctype": ((), jnp.int32)})
+beh = Behavior(schema=schema, pair_fn=soft_repulsion_adhesion,
+               pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+               radius=2.0, params={"repulsion": 2.0, "adhesion": 0.6,
+                                   "same_type_only": 1.0, "max_step": 0.5})
+rng = np.random.default_rng(0)
+n = 600
+c = np.asarray([(8.0, 8.0), (24.0, 24.0)])[rng.integers(0, 2, n)]
+pos = np.clip(c + rng.normal(0, 3.0, (n, 2)), 0.5, 31.5).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, n).astype(np.int32)}
+geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=48)
+eng = Engine(geom=geom, behavior=beh, dt=0.1)
+state = eng.init_state(pos, attrs, seed=0)
+mesh = make_abm_mesh((2, 2))
+
+step = eng.make_sharded_step(mesh)
+st = step(state, full_halo=True)
+t0 = time.perf_counter()
+for _ in range(6):
+    st = step(st, full_halo=True)
+jax.block_until_ready(st.soa.valid)
+dt = (time.perf_counter() - t0) / 6
+
+mig = {}
+for transport in ("host", "device"):
+    # one warm pass populates the compiled-migration cache, the timed
+    # pass (fresh Rebalancer, same state) reports steady re-shard cost
+    for rnd in range(2):
+        rb = Rebalancer(every=1, threshold=0.2, ownership="rcb",
+                        transport=transport)
+        e2, s2, did = rb.maybe_reshard(eng, state)
+        assert did, rb.history
+        rec = rb.history[-1]
+        assert rec["transport"] == transport, rec
+        assert total_agents(s2) == n
+    mig[transport] = rec["migration_s"]
+host_steps = mig["host"] / dt
+dev_steps = mig["device"] / dt
+print(f"reshard_downtime_steps,{mig['device']*1e6:.1f},"
+      f"host={host_steps:.2f}_device={dev_steps:.2f}_steps"
+      f"_at_step={dt*1e6:.0f}us"
+      f"_migration_host={mig['host']*1e6:.0f}us_device={mig['device']*1e6:.0f}us")
+"""
+    run_sub_bench(code, "reshard_downtime")
+
+
+# ---------------------------------------------------------------------------
 # Facade overhead: Simulation.run vs the raw Engine.drive loop
 # ---------------------------------------------------------------------------
 
@@ -811,6 +1014,7 @@ BENCHES = {
     "sweep": bench_sweep,
     "sweep_3d": bench_sweep_3d,
     "halo_bytes_3d": bench_halo_bytes_3d,
+    "comm_budget": bench_comm_budget,
     "sim": bench_sims,
     "sim_tumor_spheroid": bench_sim_tumor_spheroid,
     "api_overhead": bench_api_overhead,

@@ -29,10 +29,13 @@ steady-state reduction at refresh interval R is ``4R / (4 + (R-1)*q)`` — e.g.
 from __future__ import annotations
 
 import dataclasses
+import math
 from typing import Any, Dict, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.core.compile_cache import memoize
 
 Array = jax.Array
 
@@ -52,6 +55,15 @@ class DeltaConfig:
     # the qdtype range; encode_delta counts those clipped elements so the
     # exchange can fall back to a full refresh.
     scale: Any = None
+    # Migration-payload position codec (None = raw f32 migration).  Set to
+    # an int dtype (int16) to transmit emigrant positions as fixed-point
+    # offsets from the sender's device center: migration slabs have no
+    # temporal reference (slots churn every hop), but positions within a
+    # slab span at most the sender's padded local box, so a static scale
+    # covering that box + one ring of slack holds them with bounded error
+    # (half_range / iinfo(migration).max per axis).  Positions only — the
+    # remaining float attrs ride raw.
+    migration: Any = None
 
 
 def _is_float(a: Array) -> bool:
@@ -127,14 +139,81 @@ def decode_delta(payload: Slab, ref: Slab, cfg: DeltaConfig) -> Tuple[Slab, Slab
     return out, dict(out)
 
 
-def payload_bytes(payload: Slab) -> int:
-    """Exact static wire bytes of a payload pytree."""
-    import math
+@memoize("delta.payload_bytes", maxsize=256)
+def _spec_bytes(spec: Tuple[Tuple[str, Tuple[int, ...]], ...]) -> int:
+    return sum(int(jnp.dtype(d).itemsize) * math.prod(s) for d, s in spec)
 
-    total = 0
-    for a in jax.tree_util.tree_leaves(payload):
-        total += int(jnp.dtype(a.dtype).itemsize) * math.prod(a.shape)
-    return total
+
+def payload_bytes(payload: Slab) -> int:
+    """Exact static wire bytes of a payload pytree.
+
+    The per-spec total is memoized on :mod:`repro.core.compile_cache`
+    (payloads carry a handful of distinct (dtype, shape) signatures per
+    run, but the exchange accounts bytes every directed edge of every
+    traced step)."""
+    spec = tuple(sorted(
+        (str(a.dtype), tuple(a.shape))
+        for a in jax.tree_util.tree_leaves(payload)))
+    return _spec_bytes(spec)
+
+
+def encode_migration(slab: Slab, pos_name: str, center: Array,
+                     half_range, cfg: DeltaConfig,
+                     lsz=None, toroidal=()) -> Tuple[Slab, Array]:
+    """Quantize the position entry of a migration payload (paper §2.3
+    applied to the *spatial* rather than temporal redundancy: an emigrant
+    sits within one ring of the sender's local box, so its offset from the
+    box center is small and a narrow fixed-point encoding holds it).
+
+    ``center`` is the sender's (nd,) reference point; it rides the payload
+    under ``pos_name + "/center"`` so the receiver dequantizes against the
+    sender's frame (device origins differ, and under uneven ownership not
+    even uniformly).  ``half_range`` is the static per-axis quantization
+    range (± around center); on toroidal axes the offset is min-image
+    wrapped with period ``lsz`` first, so a migrant crossing the periodic
+    seam still encodes as a small offset.  Returns ``(payload,
+    overflow_count)`` — overflow counts coordinates that saturated the
+    range before clipping (impossible while agents honor the ≤1 cell/step
+    migration contract, counted so the driver can see violations).
+    """
+    qinfo = jnp.iinfo(cfg.migration)
+    qmax = jnp.float32(qinfo.max)
+    scale = jnp.asarray(half_range, jnp.float32) / qmax       # (nd,)
+    p = slab[pos_name].astype(jnp.float32)
+    d = p - center
+    if any(toroidal):
+        L = jnp.asarray(lsz, jnp.float32)
+        d = jnp.where(jnp.asarray(toroidal), d - L * jnp.round(d / L), d)
+    qf = jnp.round(d / scale)
+    oob = (qf > qinfo.max) | (qf < qinfo.min)
+    if "valid" in slab:
+        # Dead slots carry stale coordinates from arbitrary frames; their
+        # payload bytes are discarded at re-binning, so only live slots
+        # count toward the contract-violation tally.
+        oob = oob & slab["valid"][..., None]
+    overflow = jnp.sum(oob, dtype=jnp.int32)
+    out = dict(slab)
+    out[pos_name] = jnp.clip(qf, qinfo.min, qinfo.max).astype(cfg.migration)
+    out[pos_name + "/center"] = center.astype(jnp.float32)
+    return out, overflow
+
+
+def decode_migration(payload: Slab, pos_name: str, half_range,
+                     cfg: DeltaConfig, lsz=None, toroidal=()) -> Slab:
+    """Receiver-side inverse of :func:`encode_migration`: reconstruct
+    positions in the sender's frame, then wrap toroidal axes back into the
+    fundamental domain (the closed-loop mod that ``wrap_pos`` used to
+    apply pre-send now lands here, after dequantization)."""
+    qinfo = jnp.iinfo(cfg.migration)
+    scale = jnp.asarray(half_range, jnp.float32) / jnp.float32(qinfo.max)
+    out = dict(payload)
+    center = out.pop(pos_name + "/center")
+    p = center + out[pos_name].astype(jnp.float32) * scale
+    if any(toroidal):
+        L = jnp.asarray(lsz, jnp.float32)
+        p = jnp.where(jnp.asarray(toroidal), jnp.mod(p, L), p)
+    out[pos_name] = p
+    return out
 
 
 def zeros_like_slab(slab_spec: Slab) -> Slab:

@@ -32,7 +32,9 @@ from repro.core.agent_soa import (
 )
 from repro.core.behaviors import Behavior
 from repro.core.compile_cache import memoize
-from repro.core.delta import DeltaConfig, Slab
+from repro.core.delta import (
+    DeltaConfig, Slab, decode_migration, encode_migration,
+)
 from repro.core.domain import Domain, spatial_axis_names
 from repro.core.grid import (
     bin_agents,
@@ -64,7 +66,7 @@ from repro.core.guards import (
     nan_count,
     residency_counts,
 )
-from repro.core.neighbors import sweep_accumulate
+from repro.core.neighbors import sweep_accumulate, sweep_accumulate_overlapped
 
 Array = jax.Array
 
@@ -133,6 +135,16 @@ class Engine:
     # Pallas kernel on TPU (2-D domains; 3-D always tiles);
     # "reference" | "tiled" | "pallas" force one.
     sweep_backend: str = "auto"
+    # Communication hiding (core.neighbors.sweep_accumulate_overlapped):
+    # the aura exchange is issued before the interior sweep and consumed
+    # only by the boundary pass, so XLA overlaps the ppermute collectives
+    # with interior compute.  "auto" (default) enables it exactly where a
+    # wire exists — multi-device meshes — and keeps the single-dispatch
+    # monolithic sweep on LocalComm, where there is nothing to hide;
+    # "on" | "off" force it.  The split is pinned bit-exact against the
+    # monolithic sweep (tests/test_sweep.py), so this knob never changes
+    # results, only scheduling.
+    overlap: str = "auto"
     # Construction-time contract gate (analysis.contracts.enforce):
     # "off" (default — the Simulation facade owns checking, and keeping
     # internally-built engines identical preserves compiled-step cache
@@ -146,6 +158,9 @@ class Engine:
     guards: GuardConfig = GuardConfig()
 
     def __post_init__(self):
+        if self.overlap not in ("auto", "on", "off"):
+            raise ValueError(
+                f"overlap={self.overlap!r}; expected 'auto', 'on' or 'off'")
         if self.check != "off":
             from repro.analysis.contracts import enforce
             enforce(self, mode=self.check)
@@ -380,24 +395,42 @@ class Engine:
                     g = g.at[GUARD_SLAB].add(slab_bad)
 
         # 1. Aura update (rebuilt from scratch each iteration, §2.2.1).
-        soa = clear_ring(soa) if owned is None \
+        # The pre-exchange SoA (ring invalidated) is kept alive: under the
+        # overlapped sweep it is the interior pass's input buffer, so the
+        # ppermute exchange below writes into what is effectively a double
+        # buffer and nothing downstream of the interior pass waits on it.
+        soa_pre = clear_ring(soa) if owned is None \
             else mask_unowned(soa, geom, owned)
         soa, refs, hbytes, oflow = halo_exchange(
-            geom, soa, comm, refs, self.delta_cfg, full_halo, owned
+            geom, soa_pre, comm, refs, self.delta_cfg, full_halo, owned
         )
         coflow = coflow + oflow
 
         # NaN/Inf are checked right after the exchange: a corrupted halo
-        # receive is caught here, before the sweep spreads it into
-        # neighbors' accumulators.
+        # receive is caught here, before it spreads into neighbors'
+        # accumulators — under the overlapped sweep that means before the
+        # boundary pass (the only consumer of the received ring) reads it.
         if gcfg.enabled and gcfg.nan:
             g = g.at[GUARD_NAN].add(nan_count(soa))
 
-        # 2. Local interaction (backend-dispatched fused sweep).
-        acc = sweep_accumulate(
-            geom, soa, beh.pair_fn, beh.pair_attrs, beh.radius, beh.params,
-            backend=self.sweep_backend,
-        )
+        # 2. Local interaction (backend-dispatched fused sweep).  With
+        # overlap enabled the interior pass depends only on soa_pre, so
+        # XLA schedules the exchange concurrently with it; the boundary
+        # pass then overwrites the ring-adjacent faces from the exchanged
+        # SoA (bit-exact vs the monolithic sweep at every owned cell).
+        use_overlap = self.overlap == "on" or (
+            self.overlap == "auto" and not isinstance(comm, LocalComm))
+        if use_overlap:
+            acc = sweep_accumulate_overlapped(
+                geom, soa_pre, soa, beh.pair_fn, beh.pair_attrs,
+                beh.radius, beh.params, backend=self.sweep_backend,
+                owned=owned,
+            )
+        else:
+            acc = sweep_accumulate(
+                geom, soa, beh.pair_fn, beh.pair_attrs, beh.radius,
+                beh.params, backend=self.sweep_backend,
+            )
 
         # 3. Pointwise update on interior agents.  Under uneven ownership
         # the padded interior slice still contains this device's aura ring
@@ -455,8 +488,9 @@ class Engine:
         dropped = dropped + d1
 
         # 5. Agent migration: dimension-ordered ring exchange over all axes.
-        soa3, d2 = self._migrate(soa2, comm, origin, lsz, owned)
+        soa3, d2, moflow = self._migrate(soa2, comm, origin, lsz, owned)
         dropped = dropped + d2
+        coflow = coflow + moflow
 
         # Post-migration guard: the global ledger must balance up to the
         # capacity drops this step reported.  (GID uniqueness is checked
@@ -491,7 +525,8 @@ class Engine:
         )
 
     def _migrate(self, soa: AgentSoA, comm: Comm, origin: Array,
-                 lsz: Array, owned=None) -> Tuple[AgentSoA, Array]:
+                 lsz: Array, owned=None
+                 ) -> Tuple[AgentSoA, Array, Array]:
         """Dimension-ordered emigrant routing with one-pass re-binning.
 
         Axis-0 faces (incl. corner cells) are exchanged first.  Diagonal
@@ -517,11 +552,28 @@ class Engine:
         The embedding coordinate of a forwarded block inside a widened
         payload is only a placement slot (everything re-bins by *position*
         in the final pass), so it stays at the static legacy coordinate.
+
+        With ``delta_cfg.migration`` set (and the codec enabled) emigrant
+        positions cross the wire as narrow fixed-point offsets from the
+        sender's box center (delta.encode_migration) instead of raw f32 —
+        returns the clip-overflow count as a third value so the driver
+        can observe a violated ≤1 cell/step contract.
         """
         geom = self.geom
         nd = geom.ndim
         shape = geom.local_shape
         tor = geom.toroidal
+        cfg = self.delta_cfg
+        mig_q = cfg.migration if cfg.enabled else None
+        moflow = jnp.int32(0)
+        if mig_q is not None:
+            # Static quantization frame: box center at origin + half the
+            # padded extent, range covering that extent plus two cells of
+            # ring/rounding slack on each side.
+            half_ext = np.asarray(
+                [(s - 2) * geom.cell_size / 2.0 for s in shape], np.float32)
+            half_rng = half_ext + 2.0 * np.float32(geom.cell_size)
+            center = origin.astype(jnp.float32) + half_ext
 
         def wrap_pos(slab: Slab) -> Slab:
             if not any(tor):
@@ -532,6 +584,18 @@ class Engine:
             out[POS] = wrapped if all(tor) else jnp.where(
                 jnp.asarray(tor), wrapped, p)
             return out
+
+        def ship(slab: Slab, axis: int, dirn: int):
+            """One ring hop of a widened face, through the position codec
+            when configured (the codec's min-image offset + receiver-side
+            mod subsumes wrap_pos)."""
+            if mig_q is None:
+                return comm.shift(wrap_pos(slab), axis, dirn), jnp.int32(0)
+            enc, oflow = encode_migration(
+                slab, POS, center, half_rng, cfg, lsz=lsz, toroidal=tor)
+            return decode_migration(
+                comm.shift(enc, axis, dirn), POS, half_rng, cfg,
+                lsz=lsz, toroidal=tor), oflow
 
         def fl(slab: Slab):
             slab = dict(slab)
@@ -588,8 +652,9 @@ class Engine:
                     out[n] = jnp.concatenate(parts, axis=g)
                 return out
 
-            recv_p = comm.shift(wrap_pos(widen(out_p, blocks_p)), a, +1)
-            recv_m = comm.shift(wrap_pos(widen(out_m, blocks_m)), a, -1)
+            recv_p, of_p = ship(widen(out_p, blocks_p), a, +1)
+            recv_m, of_m = ship(widen(out_m, blocks_m), a, -1)
+            moflow = moflow + of_p + of_m
 
             v = soa.valid.at[ring_index(a, 0)].set(False) \
                          .at[ring_index(a, hi_idx)].set(False)
@@ -603,7 +668,8 @@ class Engine:
         cat = {n: jnp.concatenate([base_attrs[n]] + [p[0][n] for p in parts])
                for n in base_attrs}
         catv = jnp.concatenate([base_valid] + [p[1] for p in parts])
-        return bin_agents(geom, cat, catv, origin, owned)
+        binned, d = bin_agents(geom, cat, catv, origin, owned)
+        return binned, d, moflow
 
     # ------------------------------------------------------------------
     # Compiled step factories
@@ -731,6 +797,10 @@ class Engine:
                 if rebalancer is not None and rebalancer.every > 0:
                     e = rebalancer.every
                     nxt = min(nxt, (i // e + 1) * e)
+                    if getattr(rebalancer, "_pending", None) is not None:
+                        # deferred snapshot in flight: its plan lands on
+                        # the next iteration, so run exactly one step
+                        nxt = min(nxt, i + 1)
                 if eng.delta_cfg.enabled:
                     nxt = min(nxt, (i // r + 1) * r)
                 if fault_plan is not None:

@@ -32,6 +32,7 @@ behavior and for composed stacks; tests/test_domain.py pins the 3-D parity.
 
 from __future__ import annotations
 
+import dataclasses
 import itertools
 from typing import Callable, Dict, Optional, Tuple
 
@@ -306,3 +307,140 @@ def sweep_accumulate(
             geom, soa, pair_fn, pair_attrs, radius, params)
     return pair_accumulate_pallas(
         geom, soa, pair_fn, pair_attrs, radius, params)
+
+
+# ---------------------------------------------------------------------------
+# Overlapped interior/boundary split (communication hiding)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class _SlabGeom:
+    """Domain stand-in for a face slab: every backend reads exactly these
+    attributes, so the unmodified sweep machinery runs on a sub-block of
+    the local grid (the 3-plane band around a boundary hyperplane)."""
+    local_shape: Tuple[int, ...]
+    interior: Tuple[int, ...]
+    ndim: int
+    cap: int
+    toroidal: Tuple[bool, ...]
+    domain_size: Tuple[float, ...]
+
+
+def _slab_soa(soa: AgentSoA, starts, lengths) -> AgentSoA:
+    """Dynamic-slice a grid-aligned sub-block out of the SoA (``starts``
+    may be traced along the uneven-ownership axis)."""
+    nd = len(lengths)
+    st = [jnp.asarray(s, jnp.int32) for s in starts]
+
+    def sl(a):
+        full = st + [jnp.int32(0)] * (a.ndim - nd)
+        size = tuple(lengths) + a.shape[nd:]
+        return jax.lax.dynamic_slice(a, full, size)
+
+    return AgentSoA(attrs={n: sl(v) for n, v in soa.attrs.items()},
+                    valid=sl(soa.valid))
+
+
+def _sweep_dispatch(geom, soa, pair_fn, pair_attrs, radius, params, backend):
+    if backend == "reference":
+        return pair_accumulate(geom, soa, pair_fn, pair_attrs, radius, params)
+    if backend == "tiled":
+        return pair_accumulate_tiled(
+            geom, soa, pair_fn, pair_attrs, radius, params)
+    return pair_accumulate_pallas(
+        geom, soa, pair_fn, pair_attrs, radius, params)
+
+
+def _face_sweep(
+    geom: Domain,
+    soa_post: AgentSoA,
+    pair_fn: PairFn,
+    pair_attrs: Tuple[str, ...],
+    radius: float,
+    params: dict,
+    backend: str,
+    axis: int,
+    face_idx,
+) -> Dict[str, Array]:
+    """Recompute the accumulators of the 1-thick interior hyperplane at
+    local index ``face_idx`` along ``axis`` from the post-exchange SoA.
+
+    The 3-plane band ``[face_idx - 1, face_idx + 1]`` along ``axis`` (full
+    padded extent on every other axis) is the complete 3^D stencil support
+    of the face, so the unmodified backend sweep over the band — with the
+    band's own 1-plane "interior" — evaluates exactly the per-cell
+    reduction the monolithic sweep would, restricted to the face.
+    ``face_idx`` may be traced (the uneven-ownership boundary sits at the
+    device's owned extent)."""
+    nd = geom.ndim
+    shape = geom.local_shape
+    starts = [0] * nd
+    starts[axis] = (face_idx - 1 if isinstance(face_idx, int)
+                    else jnp.asarray(face_idx, jnp.int32) - 1)
+    lengths = list(shape)
+    lengths[axis] = 3
+    band = _slab_soa(soa_post, starts, lengths)
+    vgeom = _SlabGeom(
+        local_shape=tuple(lengths),
+        interior=tuple(h - 2 for h in lengths),
+        ndim=nd, cap=geom.cap, toroidal=geom.toroidal,
+        domain_size=geom.domain_size)
+    return _sweep_dispatch(
+        vgeom, band, pair_fn, pair_attrs, radius, params, backend)
+
+
+def sweep_accumulate_overlapped(
+    geom: Domain,
+    soa_pre: AgentSoA,
+    soa_post: AgentSoA,
+    pair_fn: PairFn,
+    pair_attrs: Tuple[str, ...],
+    radius: float,
+    params: dict,
+    *,
+    backend: str = "reference",
+    owned=None,
+) -> Dict[str, Array]:
+    """Interior/boundary split sweep for communication hiding.
+
+    ``soa_pre`` is the SoA *before* the aura exchange (ring invalidated by
+    ``clear_ring``/``mask_unowned``) and ``soa_post`` the SoA after it.
+    The interior pass runs the full monolithic sweep on ``soa_pre`` — it
+    has no data dependence on the exchange, so XLA schedules the
+    ``ppermute`` collectives concurrently with it.  Deep cells (local
+    index ``[2, h-3]`` per axis) never read a ring hyperplane, and the
+    exchange writes *only* ring hyperplanes, so their interior-pass values
+    are bit-exact already.  The boundary pass then recomputes each
+    ring-adjacent face (index 1, and ``h-2`` — or the owned extent under
+    uneven ownership) from ``soa_post`` and *overwrites* those acc planes.
+    The overwrite is idempotent at corners: every face writes a cell's
+    full correct value, so overlapping faces agree and nothing double
+    counts.  Per backend the result matches the monolithic sweep on
+    ``soa_post`` bit-for-bit at every owned cell (and at every interior
+    cell on the equal split, where the faces cover all ring-adjacent
+    planes).
+    """
+    backend = resolve_sweep_backend(backend, geom.ndim)
+    acc = _sweep_dispatch(
+        geom, soa_pre, pair_fn, pair_attrs, radius, params, backend)
+    nd = geom.ndim
+    for axis in range(nd):
+        lo = 1
+        hi = (geom.local_shape[axis] - 2 if owned is None
+              else jnp.asarray(owned[axis], jnp.int32))
+        faces = [lo, hi]
+        for face_idx in faces:
+            facc = _face_sweep(
+                geom, soa_post, pair_fn, pair_attrs, radius, params,
+                backend, axis, face_idx)
+            starts = [0] * nd
+            starts[axis] = (face_idx - 1 if isinstance(face_idx, int)
+                            else jnp.asarray(face_idx, jnp.int32) - 1)
+            new_acc = {}
+            for name, a in acc.items():
+                st = [jnp.asarray(s, jnp.int32) for s in starts]
+                st = st + [jnp.int32(0)] * (a.ndim - nd)
+                new_acc[name] = jax.lax.dynamic_update_slice(
+                    a, facc[name].astype(a.dtype), st)
+            acc = new_acc
+    return acc

@@ -15,14 +15,22 @@ load balancing at *re-shard boundaries* (DESIGN note in core.load_balance):
    planners (``choose_partition`` for the realizable plan — equal-split or
    box-granular uneven per its ``ownership`` knob; ``plan_rcb`` /
    ``plan_diffusive`` as reported bounds) and triggers a re-shard.
-3. The mass migration is paid exactly once per re-shard:
-   ``flatten_state`` gathers every live agent to host, ``reshard_state``
-   re-derives the :class:`Domain` (new mesh shape, new device origins) and
-   re-initializes through ``Engine.init_state`` — preserving global agent
-   identifiers, the RNG lineage, the iteration counter, and the cumulative
-   drop diagnostics.  Delta-encoding references are reset, so the first
+3. The mass migration is paid exactly once per re-shard.  On an unchanged
+   device count ``reshard_state`` takes the *device-to-device* fast path
+   (:func:`reshard_state_device`): one compiled global re-bin whose outputs
+   are pinned to the new mesh, so XLA lowers the layout change to
+   collective permutes and no agent bytes ever cross the host boundary.
+   Otherwise (elastic restores, single-device geometries) the legacy host
+   path runs: ``flatten_state`` gathers every live agent to host and
+   ``reshard_state`` re-initializes through ``Engine.init_state``.  Both
+   preserve global agent identifiers, the RNG lineage, the iteration
+   counter, and the cumulative drop diagnostics — bit-exactly the same
+   result either way.  Delta-encoding references are reset, so the first
    aura exchange after a re-shard must be a full refresh (the drivers force
-   ``full_halo=True`` on the next step).
+   ``full_halo=True`` on the next step).  ``Rebalancer(defer=True)``
+   additionally overlaps the *planning* input with compute: the validity
+   snapshot is copied device-to-host asynchronously while the old mesh
+   keeps stepping, and the plan+apply lands one step later.
 
 Realizability note: the engine shards one uniform SoA over an N-D spatial
 device mesh.  Realizable plans are the equal-split factorizations AND —
@@ -44,13 +52,16 @@ from __future__ import annotations
 
 import dataclasses
 import itertools
+import math
 import time
 from typing import Callable, Dict, List, Optional, Tuple
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.agent_soa import POS
+from repro.core.agent_soa import POS, AgentSoA
+from repro.core.compile_cache import memoize
 from repro.core.domain import Domain, Partition
 from repro.core.engine import Engine, SimState
 from repro.core.load_balance import (
@@ -183,8 +194,19 @@ def occupancy_histogram(
     paper's runtime-weighted box loads — a box full of expensive agents
     then weighs more than one full of cheap agents.
     """
+    return _histogram_from_valid(geom, state.soa.valid, runtimes)
+
+
+def _histogram_from_valid(
+    geom: Domain,
+    valid,
+    runtimes: Optional[np.ndarray] = None,
+) -> np.ndarray:
+    """:func:`occupancy_histogram` body over a bare validity array — the
+    deferred-plan path feeds it an async host snapshot taken one step
+    earlier, so the old mesh keeps stepping while the copy lands."""
     nd = geom.ndim
-    counts = _owned_valid_blocks(geom, state.soa.valid).sum(axis=-1)
+    counts = _owned_valid_blocks(geom, valid).sum(axis=-1)
     if runtimes is not None:
         rt = np.asarray(runtimes, np.float64).reshape(geom.mesh_shape)
         dev_counts = counts.sum(axis=_interior_axes(geom))
@@ -393,6 +415,7 @@ def reshard_state(
     engine: Engine, state: SimState,
     mesh_shape: Optional[Tuple[int, ...]] = None,
     partition: Optional[Partition] = None,
+    transport: str = "auto",
 ) -> Tuple[Engine, SimState]:
     """Mass-migrate ``state`` onto a new device mesh — an equal split over
     ``mesh_shape``, or the uneven box-granular ``partition`` (cuts in
@@ -404,11 +427,33 @@ def reshard_state(
     the old root key folded with the iteration), and the cumulative drop
     count.  Delta references are re-zeroed — callers must run the next step
     with ``full_halo=True``.
+
+    ``transport`` picks the migration path: ``"host"`` is the legacy
+    flatten-to-host round trip; ``"device"`` is the collective
+    device-to-device re-bin (:func:`reshard_state_device` — zero agent
+    bytes through host, requires an unchanged device count); ``"auto"``
+    (default) takes the device path whenever it is realizable and falls
+    back to host otherwise (elastic restores onto a different device
+    count, single-device geometries).
     """
     if (mesh_shape is None) == (partition is None):
         raise ValueError(
             "reshard_state takes exactly one of mesh_shape (equal split) "
             "or partition (uneven ownership)")
+    if transport not in ("auto", "host", "device"):
+        raise ValueError(
+            f"unknown transport {transport!r}; expected 'auto', 'host', "
+            "or 'device'")
+    n_new = math.prod(mesh_shape if mesh_shape is not None
+                      else partition.mesh_shape)
+    if transport == "device" or (
+            transport == "auto" and n_new == engine.geom.n_devices
+            and n_new > 1 and jax.device_count() >= n_new):
+        # realizability is decided here, not by catching the device path's
+        # errors: a genuine failure there (cell-capacity overflow) must
+        # propagate, not silently retry through the host round trip
+        return reshard_state_device(
+            engine, state, mesh_shape=mesh_shape, partition=partition)
     flat = flatten_state(engine.geom, state)
     if partition is not None:
         new_geom = engine.geom.repartition(partition)
@@ -425,6 +470,285 @@ def reshard_state(
     if flat.dropped_total:
         new_state.dropped = new_state.dropped.at[
             (0,) * new_geom.ndim].add(jnp.int32(flat.dropped_total))
+    return new_engine, new_state
+
+
+# ---------------------------------------------------------------------------
+# 3b. Device-to-device mass migration (no host round trip)
+# ---------------------------------------------------------------------------
+
+def _interleave_flat(geom: Domain, a):
+    """Global sharded array -> flat per-slot view in the canonical
+    interleaved order (c0, i0, c1, i1, ..., slot) — the traced twin of
+    :func:`_interior_blocks` + ravel, so the device path enumerates agents
+    in exactly the order the host path does (slot assignment downstream is
+    order-dependent through the stable sort)."""
+    nd = geom.ndim
+    shape: Tuple[int, ...] = ()
+    for m, h in zip(geom.mesh_shape, geom.local_shape):
+        shape += (m, h)
+    a = a.reshape(shape + a.shape[nd:])
+    sl: Tuple = ()
+    for _ in range(nd):
+        sl += (slice(None), slice(1, -1))
+    a = a[sl]
+    return a.reshape((-1,) + a.shape[2 * nd + 1:])
+
+
+def _owned_flat_mask(geom: Domain) -> Optional[np.ndarray]:
+    """Static per-slot validity mask over the interleaved flat order for
+    uneven old geometries (padding + per-device aura ring excluded), or
+    None on the equal split (the interior slice already excludes the
+    ring)."""
+    if not geom.uneven:
+        return None
+    shape: Tuple[int, ...] = ()
+    for m, i in zip(geom.mesh_shape, geom.interior):
+        shape += (m, i)
+    mask = np.ones(shape, bool)
+    widths = geom.partition.widths
+    for a in range(geom.ndim):
+        for ci, w in enumerate(widths[a]):
+            sl = [slice(None)] * mask.ndim
+            sl[2 * a] = ci
+            sl[2 * a + 1] = slice(w, None)
+            mask[tuple(sl)] = False
+    return np.repeat(mask.ravel(), geom.cap)
+
+
+@memoize("reshard.device_migration", maxsize=32)
+def _cached_device_migration(engine: Engine, new_geom: Domain):
+    """Compiled device-to-device migration: old-mesh sharded state in,
+    new-mesh sharded state out, agents never touching host.
+
+    The body is the global generalization of ``grid.bin_agents``: flatten
+    every owned slot in the canonical interleaved order, route each agent
+    to its new device (equal-split floor-divide or searchsorted partition
+    cuts — the same arithmetic ``Engine.init_state`` runs on host), then
+    one stable argsort over the combined (device, local cell) key assigns
+    slots *identically* to the host path's per-device binning (the stable
+    global sort preserves original order within every (device, cell) run,
+    exactly like host-side selection followed by a per-device stable
+    sort).  ``out_shardings`` pins every output to the new mesh, so XLA
+    lowers the layout change to collective permutes of the per-device
+    shards.
+    """
+    from repro.launch.mesh import make_abm_mesh  # deferred: device state
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.core.domain import spatial_axis_names
+
+    old = engine.geom
+    nd = old.ndim
+    cap = old.cap
+    cs = float(new_geom.cell_size)
+    mesh_to = new_geom.mesh_shape
+    lshape = new_geom.local_shape
+    n_ranks = new_geom.n_devices
+    part = new_geom.partition
+    # Static routing tables, computed with the same float64->float32
+    # rounding the host path uses.
+    if part is None:
+        lens = [i * cs for i in new_geom.interior]
+        origins = [
+            (np.arange(m, dtype=np.float64) * lens[a]).astype(np.float32)
+            for a, m in enumerate(mesh_to)]
+        cuts = owned_w = None
+    else:
+        cuts = [np.asarray(part.cuts[a]) for a in range(nd)]
+        origins = [
+            (np.asarray(part.cuts[a][:-1], np.float64) * cs
+             ).astype(np.float32) for a in range(nd)]
+        owned_w = [np.asarray(part.widths[a], np.int32) for a in range(nd)]
+    old_mask = _owned_flat_mask(old)
+    n_local = math.prod(lshape)
+    total = n_local * n_ranks * cap
+    # Pin every output to the new mesh: the jit boundary then owes XLA a
+    # layout change from old-mesh to new-mesh shards, which GSPMD lowers
+    # to collective permutes — the "mass migration" without a host hop.
+    dev_mesh = make_abm_mesh(mesh_to)
+    out_sh = NamedSharding(dev_mesh, P(*spatial_axis_names(nd)))
+    rep_sh = NamedSharding(dev_mesh, P())
+
+    def migrate(state: SimState):
+        fvalid = _interleave_flat(old, state.soa.valid)
+        if old_mask is not None:
+            fvalid = fvalid & jnp.asarray(old_mask)
+        flats = {n: _interleave_flat(old, a)
+                 for n, a in state.soa.attrs.items()}
+        pos = flats[POS]
+        n = fvalid.shape[0]
+
+        # 1. Route to the owning device of the new partition.
+        dev = []
+        for a in range(nd):
+            if cuts is None:
+                d = jnp.floor_divide(
+                    pos[:, a], jnp.float32(lens[a])).astype(jnp.int32)
+            else:
+                cell = jnp.clip(
+                    jnp.floor_divide(
+                        pos[:, a], jnp.float32(cs)).astype(jnp.int32),
+                    0, new_geom.global_cells[a] - 1)
+                d = (jnp.searchsorted(
+                    jnp.asarray(cuts[a]), cell, side="right") - 1
+                ).astype(jnp.int32)
+            dev.append(jnp.clip(d, 0, mesh_to[a] - 1))
+
+        # 2. Local cell on that device (cell_of semantics incl. the halo
+        # offset and the uneven-ownership clamp).
+        origin = jnp.stack(
+            [jnp.asarray(origins[a])[dev[a]] for a in range(nd)], axis=1)
+        rel = (pos - origin) / jnp.float32(cs)
+        c = jnp.floor(rel).astype(jnp.int32) + 1
+        cell = []
+        for a in range(nd):
+            if owned_w is None:
+                cell.append(jnp.clip(c[:, a], 0, lshape[a] - 1))
+            else:
+                cell.append(jnp.clip(
+                    c[:, a], 0, jnp.asarray(owned_w[a])[dev[a]] + 1))
+
+        # 3. One global stable sort over (device, local cell).
+        devlin = dev[0]
+        for a in range(1, nd):
+            devlin = devlin * mesh_to[a] + dev[a]
+        clocal = cell[0]
+        for a in range(1, nd):
+            clocal = clocal * lshape[a] + cell[a]
+        sentinel = n_ranks * n_local
+        skey = jnp.where(fvalid, devlin * n_local + clocal, sentinel)
+        order = jnp.argsort(skey, stable=True)
+        sorted_key = skey[order]
+        idx = jnp.arange(n, dtype=jnp.int32)
+        is_start = jnp.concatenate(
+            [jnp.ones((1,), jnp.bool_),
+             sorted_key[1:] != sorted_key[:-1]])
+        # lax.cummax, NOT lax.associative_scan(jnp.maximum, ...): the
+        # generic scan's slice/concat decomposition miscompiles under
+        # GSPMD auto-partitioning (this function runs partitioned over the
+        # old mesh — unlike grid.bin_agents, whose identical idiom sits
+        # inside shard_map and never meets the partitioner).  cummax
+        # lowers to a dedicated op the partitioner handles correctly.
+        start_idx = jax.lax.cummax(
+            jnp.where(is_start, idx, jnp.int32(-1)))
+        rank = idx - start_idx
+        ok = (sorted_key < sentinel) & (rank < cap)
+        n_dropped = jnp.sum((sorted_key < sentinel) & (rank >= cap))
+
+        # 4. Scatter into the new global cell-slot grid.  Flat target
+        # index folds (dev, cell) straight into the global axes
+        # (global index along axis a = dev_a * h'_a + cell_a).
+        gidx = dev[0] * lshape[0] + cell[0]
+        for a in range(1, nd):
+            gidx = (gidx * (mesh_to[a] * lshape[a])
+                    + dev[a] * lshape[a] + cell[a])
+        slot = jnp.where(ok, gidx[order] * cap + rank, total)
+        gshape = tuple(m * h for m, h in zip(mesh_to, lshape))
+        new_attrs = {}
+        for name, a in flats.items():
+            src = a[order]
+            tgt = jnp.zeros((total + 1,) + a.shape[1:], a.dtype)
+            new_attrs[name] = tgt.at[slot].set(src)[:total].reshape(
+                gshape + (cap,) + a.shape[1:])
+        v = jnp.zeros((total + 1,), jnp.bool_).at[slot].set(ok)
+        new_soa = AgentSoA(attrs=new_attrs,
+                           valid=v[:total].reshape(gshape + (cap,)))
+
+        # 5. Engine carry: spawn-counter floors (per-rank max carried id +
+        # the global floor max), iteration counter, RNG lineage, drops.
+        from repro.core.agent_soa import GID_COUNT, GID_RANK
+        g_rank = flats[GID_RANK]
+        g_count = flats[GID_COUNT]
+        in_range = fvalid & (g_rank >= 0) & (g_rank < n_ranks)
+        counters = jnp.zeros((n_ranks,), jnp.int32).at[
+            jnp.where(in_range, g_rank, 0)
+        ].max(jnp.where(in_range, g_count + 1, 0))
+        floor = jnp.max(state.gid_counter).astype(jnp.int32)
+        counters = jnp.maximum(counters, floor).reshape(mesh_to)
+
+        it0 = jnp.max(state.it)
+        base_key = state.key[(0,) * nd].astype(jnp.uint32)
+        root = jax.random.fold_in(base_key, it0)
+        keys = jax.random.split(root, n_ranks).reshape(mesh_to + (-1,))
+        dropped = jnp.zeros(mesh_to, jnp.int32).at[(0,) * nd].add(
+            jnp.sum(state.dropped).astype(jnp.int32))
+        nguards = state.health.shape[-1]
+        out = (new_soa, counters, jnp.full(mesh_to, it0, jnp.int32),
+               keys, dropped,
+               jnp.zeros(mesh_to + (nguards,), jnp.int32))
+        out = jax.tree_util.tree_map(
+            lambda a: jax.lax.with_sharding_constraint(a, out_sh), out)
+        return out + (jax.lax.with_sharding_constraint(
+            n_dropped, rep_sh),)
+
+    return jax.jit(migrate)
+
+
+def reshard_state_device(
+    engine: Engine, state: SimState,
+    mesh_shape: Optional[Tuple[int, ...]] = None,
+    partition: Optional[Partition] = None,
+) -> Tuple[Engine, SimState]:
+    """Device-to-device mass migration: the collective-permute fast path
+    of :func:`reshard_state`.
+
+    Agents move directly between device shards inside one compiled
+    dispatch — ``flatten_state`` is never called and no agent bytes cross
+    the host boundary (the only host-visible scalar is the overflow-drop
+    diagnostic, which mirrors ``init_state``'s capacity check).  Requires
+    the device count to stay unchanged (elastic restores go through the
+    host path) and a multi-device geometry.  Bit-exact with the host
+    path: same routing arithmetic, same stable-sort slot assignment, same
+    carry (spawn floors, iteration, RNG lineage, cumulative drops).
+    """
+    if (mesh_shape is None) == (partition is None):
+        raise ValueError(
+            "reshard_state_device takes exactly one of mesh_shape or "
+            "partition")
+    if partition is not None:
+        new_geom = engine.geom.repartition(partition)
+    else:
+        new_geom = engine.geom.with_mesh_shape(mesh_shape)
+    if new_geom.n_devices != engine.geom.n_devices:
+        raise ValueError(
+            f"device path needs an unchanged device count "
+            f"({engine.geom.n_devices} -> {new_geom.n_devices}); use the "
+            "host path")
+    if new_geom.n_devices == 1:
+        raise ValueError("single-device re-shard has no wire to avoid; "
+                         "use the host path")
+    if jax.device_count() < new_geom.n_devices:
+        raise ValueError(
+            f"device path needs {new_geom.n_devices} devices, have "
+            f"{jax.device_count()}; use the host path")
+    migrate = _cached_device_migration(engine, new_geom)
+    (new_soa, counters, it, keys, dropped, health,
+     n_dropped) = migrate(state)
+    if int(n_dropped) != 0:
+        raise ValueError(
+            f"cell capacity overflow during device re-shard: "
+            f"{int(n_dropped)} agents dropped; raise geom.cap")
+    new_engine = dataclasses.replace(engine, geom=new_geom)
+    mesh_to = new_geom.mesh_shape
+    # Fresh zero aura references on the new geometry (the next step must
+    # run with full_halo=True, exactly like the host path).
+    from repro.core.engine import _bcast
+    from repro.core.halo import init_refs
+    nd = new_geom.ndim
+    sample = AgentSoA(
+        attrs={n: jnp.zeros(new_geom.local_shape + (new_geom.cap,)
+                            + a.shape[nd + 1:], a.dtype)
+               for n, a in new_soa.attrs.items()},
+        valid=jnp.zeros(new_geom.local_shape + (new_geom.cap,), jnp.bool_))
+    refs0 = init_refs(new_geom, sample)
+    refs = {d: {f: _bcast(v, mesh_to) for f, v in slab.items()}
+            for d, slab in refs0.items()}
+    new_state = SimState(
+        soa=new_soa, refs=refs, it=it, key=keys,
+        gid_counter=counters, dropped=dropped,
+        halo_bytes=jnp.zeros(mesh_to, jnp.int32),
+        codec_overflow=jnp.zeros(mesh_to, jnp.int32),
+        health=health)
     return new_engine, new_state
 
 
@@ -452,6 +776,16 @@ class Rebalancer:
     realize: ``"equal"`` (historical equal-split meshes only) or ``"rcb"``
     (box-granular rectilinear partitions on padded per-device grids with
     masked halo exchange — the live analogue of the RCB bound).
+    ``transport`` picks the migration path for applied re-shards
+    (``reshard_state``'s knob: ``"auto"`` takes the device-to-device
+    collective whenever realizable).  ``defer=True`` splits each check in
+    two: at the due tick the validity snapshot starts an *async*
+    device-to-host copy and the call returns immediately, so the old mesh
+    keeps stepping while the copy lands and the plan builds; the
+    histogram/threshold/plan/apply work runs on the next step against that
+    one-step-stale snapshot (plan quality is unaffected — agents move at
+    most one cell per step — and the migration itself always uses the
+    live state).
     ``history`` records every decision (both applied and declined) with
     the planner diagnostics; ``engine`` always points at the engine
     matching the latest state.
@@ -461,18 +795,28 @@ class Rebalancer:
     threshold: float = 0.5
     min_gain: float = 1.5
     ownership: str = "equal"
+    transport: str = "auto"
+    defer: bool = False
     make_step: Callable[[Engine], Callable] = default_make_step
     runtimes: Optional[np.ndarray] = None   # optional measured per-device times
     engine: Optional[Engine] = None
     history: List[dict] = dataclasses.field(default_factory=list)
+    _pending: Optional[dict] = dataclasses.field(
+        default=None, init=False, repr=False)
 
     def __post_init__(self):
         if self.ownership not in ("equal", "rcb"):
             raise ValueError(
                 f"unknown ownership {self.ownership!r}; expected 'equal' "
                 "or 'rcb'")
+        if self.transport not in ("auto", "host", "device"):
+            raise ValueError(
+                f"unknown transport {self.transport!r}; expected 'auto', "
+                "'host', or 'device'")
 
     def due(self, i: int) -> bool:
+        if self._pending is not None:
+            return True   # deferred plan lands on the very next check
         return self.every > 0 and i % self.every == 0
 
     def maybe_reshard(
@@ -482,7 +826,28 @@ class Rebalancer:
         if (self.runtimes is not None
                 and np.asarray(self.runtimes).shape != engine.geom.mesh_shape):
             self.runtimes = None  # measured on a different mesh: stale
-        hist = occupancy_histogram(engine.geom, state, self.runtimes)
+        snapshot = None
+        if self.defer:
+            if self._pending is None:
+                # Phase 1: kick off the device-to-host copy and return
+                # without blocking on any device value.  The drive loop
+                # dispatches the next step on the old mesh immediately;
+                # the copy overlaps it.
+                valid = state.soa.valid
+                if hasattr(valid, "copy_to_host_async"):
+                    valid.copy_to_host_async()
+                self._pending = {"valid": valid, "geom": engine.geom,
+                                 "runtimes": self.runtimes}
+                return engine, state, False
+            pend, self._pending = self._pending, None
+            if pend["geom"] == engine.geom:
+                snapshot = pend   # else geometry changed underneath: replan
+        if snapshot is not None:
+            hist = _histogram_from_valid(
+                engine.geom, np.asarray(snapshot["valid"]),
+                snapshot["runtimes"])
+        else:
+            hist = occupancy_histogram(engine.geom, state, self.runtimes)
         mesh = engine.geom.mesh_shape
         # a box grid coarser than the mesh (large box_factor) has no
         # per-device load reading: treat as maximally imbalanced and let the
@@ -500,6 +865,8 @@ class Rebalancer:
             "imbalance_before": cur,
             "applied": False,
         }
+        if snapshot is not None:
+            record["deferred"] = True
         if cur <= self.threshold:
             self.history.append(record)
             return engine, state, False
@@ -542,12 +909,18 @@ class Rebalancer:
         t0 = time.perf_counter()
         if uneven:
             new_engine, new_state = reshard_state(
-                engine, state, partition=plan.partition)
+                engine, state, partition=plan.partition,
+                transport=self.transport)
         else:
             new_engine, new_state = reshard_state(
-                engine, state, plan.mesh_shape)
+                engine, state, plan.mesh_shape, transport=self.transport)
+        # rebalance plans never change the device count, so auto resolves
+        # to the device-to-device collective on any multi-device mesh
+        used = ("host" if self.transport == "host"
+                or engine.geom.n_devices == 1 else "device")
         record.update(
             applied=True,
+            transport=used,
             migration_s=time.perf_counter() - t0,
             imbalance_after=current_imbalance(new_engine.geom, new_state),
         )

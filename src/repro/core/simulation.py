@@ -77,6 +77,14 @@ class Rebalance:
     partitions (padded per-device grids + masked halo exchange,
     docs/load_balancing.md), closing the gap to the reported RCB bound on
     clustered densities.
+
+    ``transport`` picks the mass-migration path for applied re-shards
+    (``"auto"`` takes the zero-host-bytes device-to-device collective
+    whenever the device count is unchanged; ``"host"`` forces the legacy
+    flatten round trip).  ``defer=True`` makes each rebalance check
+    two-phase: the occupancy snapshot starts an async device-to-host copy
+    at the due tick and the old mesh keeps stepping while the plan builds;
+    the decision (and any migration) lands one step later.
     """
 
     every: int = 10
@@ -84,6 +92,24 @@ class Rebalance:
     min_gain: float = 1.5
     weighted: bool = False
     ownership: str = "equal"
+    transport: str = "auto"
+    defer: bool = False
+
+
+@dataclasses.dataclass
+class _RebalanceOp(Operation):
+    """The scheduled rebalance check.  With a deferred (async-snapshot)
+    plan pending on the rebalancer, the op is due on *every* tick so the
+    plan+apply phase lands one step after the snapshot — the segment
+    scheduler then also breaks fusion there, keeping the landing tick a
+    host control point."""
+
+    rb: Optional[Rebalancer] = None
+
+    def due(self, tick: int) -> bool:
+        if self.rb is not None and self.rb._pending is not None:
+            return True
+        return super().due(tick)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -121,6 +147,13 @@ class Simulation:
         (``"auto" | "reference" | "tiled" | "pallas"``, see
         docs/performance.md); ``"auto"`` picks the tiled XLA sweep on
         CPU/GPU and the Pallas kernel on TPU.
+      overlap: communication hiding (``"auto" | "on" | "off"``, see
+        docs/performance.md): split the sweep into an interior pass that
+        runs concurrently with the ``ppermute`` aura exchange and a
+        boundary pass that consumes it.  ``"auto"`` enables the split
+        exactly where a wire exists (multi-device meshes).  Results are
+        pinned bit-exact against the monolithic sweep, so the knob only
+        changes scheduling.
       check: construction-time contract gate (docs/contracts.md).
         ``"error"`` (default) raises :class:`repro.analysis.ContractError`
         on any error-severity finding — e.g. a ``Behavior.radius`` larger
@@ -144,6 +177,7 @@ class Simulation:
                  rebalance: Union[Rebalance, int, None] = None,
                  checkpoint: Union[Checkpoint, str, None] = None,
                  sweep_backend: str = "auto",
+                 overlap: str = "auto",
                  check: str = "error",
                  guards: Union[GuardConfig, str, None] = None):
         if isinstance(geom, dict):
@@ -160,7 +194,7 @@ class Simulation:
         self.engine: Engine = Engine(
             geom=geom, behavior=behavior,
             delta_cfg=delta or DeltaConfig(enabled=False), dt=dt,
-            sweep_backend=sweep_backend,
+            sweep_backend=sweep_backend, overlap=overlap,
             guards=as_guard_config(guards))
         self._check = check
         from repro.analysis.contracts import enforce
@@ -183,10 +217,12 @@ class Simulation:
             self.rebalancer = Rebalancer(
                 every=rebalance.every, threshold=rebalance.threshold,
                 min_gain=rebalance.min_gain,
-                ownership=rebalance.ownership)
-            self._ops.append(Operation(
+                ownership=rebalance.ownership,
+                transport=rebalance.transport, defer=rebalance.defer)
+            self._ops.append(_RebalanceOp(
                 fn=Simulation._maybe_rebalance, every=rebalance.every,
-                name="rebalance", pre=True, record=False))
+                name="rebalance", pre=True, record=False,
+                rb=self.rebalancer))
 
         if isinstance(checkpoint, str):
             checkpoint = Checkpoint(dir=checkpoint)

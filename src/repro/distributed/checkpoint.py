@@ -182,6 +182,18 @@ class AsyncCheckpointer:
         return self.last_path
 
 
+def _delta_meta(cfg) -> Optional[Dict]:
+    """JSON-able record of an engine's aura-codec config (None if absent)."""
+    if cfg is None:
+        return None
+    return {
+        "enabled": bool(cfg.enabled),
+        "qdtype": np.dtype(cfg.qdtype).name,
+        "refresh_interval": int(cfg.refresh_interval),
+        "scale": None if cfg.scale is None else float(cfg.scale),
+    }
+
+
 def _abm_snapshot(engine, state, extras: Optional[Dict] = None
                   ) -> Tuple[Dict, Dict]:
     """Build the logical (mesh-independent) checkpoint tree + extras for
@@ -220,6 +232,12 @@ def _abm_snapshot(engine, state, extras: Optional[Dict] = None
         "partition": ([list(c) for c in geom.partition.cuts]
                       if geom.uneven else None),
         "ownership": "rcb" if geom.uneven else "equal",
+        # aura-codec provenance: restore re-applies the same delta config
+        # by default so a recovery replay stays bit-exact with the
+        # checkpointed run (the quantized closed loop is part of the
+        # dynamics once enabled).  Legacy checkpoints without the key
+        # restore with the codec off, as before.
+        "delta": _delta_meta(getattr(engine, "delta_cfg", None)),
     }
     return tree, {"abm": abm_meta, **(extras or {})}
 

@@ -101,6 +101,19 @@ def elastic_restore_abm(ckpt_dir: str, behavior, *,
             interior=tuple(g // m for g, m in zip(global_cells,
                                                   mesh_shape)),
             mesh_shape=mesh_shape, **geom_kw)
+    if delta_cfg is None:
+        # Re-apply the checkpointed run's aura codec: once the quantized
+        # closed loop is on, it is part of the dynamics, so a bit-exact
+        # recovery replay must restore with the same config.  Legacy
+        # checkpoints (no "delta" key) restore with the codec off.
+        dmeta = meta.get("delta")
+        if dmeta is not None:
+            delta_cfg = DeltaConfig(
+                enabled=bool(dmeta["enabled"]),
+                qdtype=getattr(jnp, dmeta["qdtype"]),
+                refresh_interval=int(dmeta["refresh_interval"]),
+                scale=dmeta["scale"],
+            )
     engine = Engine(
         geom=geom, behavior=behavior,
         delta_cfg=delta_cfg or DeltaConfig(enabled=False),

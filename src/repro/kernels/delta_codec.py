@@ -94,3 +94,94 @@ def delta_decode_kernel(q, ref, scale, *, block: int = 1024,
         out_shape=jax.ShapeDtypeStruct((n, l), ref.dtype),
         interpret=interpret,
     )(q, ref, scale_arr)
+
+
+# ---------------------------------------------------------------------------
+# Migration position codec (delta.encode_migration / decode_migration)
+# ---------------------------------------------------------------------------
+# Migration slabs have no temporal reference, so the payload is a one-shot
+# fixed-point offset from the sender's box center: q = clip(round((x -
+# center) / scale)) -> int16, per-axis scale.  The min-image wrap on
+# toroidal axes is a cheap XLA prologue in the wrapper (same division of
+# labor as the slab max-abs reduction above); the kernels stream the
+# quantize/dequantize elementwise through VMEM.
+
+_I16_MAX = 32767.0
+
+
+def _mig_encode_kernel(d_ref, scale_ref, q_ref, oflow_ref):
+    d = d_ref[...].astype(jnp.float32)
+    q = jnp.round(d / scale_ref[...])
+    # Saturation means the migrant broke the <=1 cell/step contract (the
+    # range covers the padded box + slack) — count it, never hide it.
+    oflow_ref[0] = jnp.sum((jnp.abs(q) > _I16_MAX).astype(jnp.int32))
+    q_ref[...] = jnp.clip(q, -_I16_MAX, _I16_MAX).astype(jnp.int16)
+
+
+def _mig_decode_kernel(q_ref, center_ref, scale_ref, x_ref):
+    x_ref[...] = (center_ref[...] +
+                  q_ref[...].astype(jnp.float32) * scale_ref[...])
+
+
+def migration_pos_encode_kernel(pos, center, scale, *, valid=None,
+                                lsz=None, toroidal=(),
+                                block: int = 1024, interpret: bool = True):
+    """pos (N, D) f32; center (D,) f32; scale (D,) f32 ->
+    (q (N, D) int16, overflow () int32).
+
+    ``valid`` (N,) bool, when given, zeroes dead rows' offsets before the
+    kernel so stale coordinates neither overflow-count nor clip; toroidal
+    axes are min-image wrapped with period ``lsz`` first."""
+    n, d = pos.shape
+    off = pos.astype(jnp.float32) - center.astype(jnp.float32)
+    if any(toroidal):
+        L = jnp.asarray(lsz, jnp.float32)
+        off = jnp.where(jnp.asarray(toroidal),
+                        off - L * jnp.round(off / L), off)
+    if valid is not None:
+        off = jnp.where(valid[:, None], off, 0.0)
+    bn = _blocked(n, block)
+    grid = n // bn
+    q, oflow = pl.pallas_call(
+        _mig_encode_kernel,
+        grid=(grid,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.int16),
+            jax.ShapeDtypeStruct((grid,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(off, scale.astype(jnp.float32).reshape(1, d))
+    return q, jnp.sum(oflow)
+
+
+def migration_pos_decode_kernel(q, center, scale, *, lsz=None, toroidal=(),
+                                block: int = 1024, interpret: bool = True):
+    """q (N, D) int16; center (D,) f32; scale (D,) f32 -> pos (N, D) f32,
+    wrapped back into the fundamental domain on toroidal axes."""
+    n, d = q.shape
+    bn = _blocked(n, block)
+    pos = pl.pallas_call(
+        _mig_decode_kernel,
+        grid=(n // bn,),
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+            pl.BlockSpec((1, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bn, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), jnp.float32),
+        interpret=interpret,
+    )(q, center.astype(jnp.float32).reshape(1, d),
+      scale.astype(jnp.float32).reshape(1, d))
+    if any(toroidal):
+        L = jnp.asarray(lsz, jnp.float32)
+        pos = jnp.where(jnp.asarray(toroidal), jnp.mod(pos, L), pos)
+    return pos

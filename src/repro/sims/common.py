@@ -21,6 +21,43 @@ from repro.core import (
 from repro.core.engine import SimState, warn_if_stale_engine
 
 
+def resolve_delta(delta, n_devices: int) -> Optional[DeltaConfig]:
+    """Per-sim codec quality knob -> the facade's ``DeltaConfig``.
+
+    ``None`` (default) enables the int8 delta codec exactly where a wire
+    exists — multi-device meshes — and keeps single-device runs on full
+    refresh (the exchange there is a local copy; quantizing it would cost
+    accuracy for zero wire savings).  Shorthands: ``"int8"`` / ``"int16"``
+    pick the quantized payload width; a ``"+mig"`` suffix (``"int8+mig"``)
+    additionally sends emigrant positions through the int16 migration
+    codec; ``"full"``/``"off"`` force raw f32 slabs every step.  A
+    :class:`DeltaConfig` passes through untouched.
+    """
+    if delta is None:
+        if n_devices <= 1:
+            return None
+        return DeltaConfig(enabled=True)       # int8, refresh_interval=16
+    if isinstance(delta, DeltaConfig):
+        return delta
+    if isinstance(delta, str):
+        if delta in ("off", "full"):
+            return DeltaConfig(enabled=False)
+        base, _, mig = delta.partition("+")
+        if base in ("int8", "int16") and mig in ("", "mig"):
+            import jax.numpy as jnp
+            return DeltaConfig(
+                enabled=True,
+                qdtype=jnp.int8 if base == "int8" else jnp.int16,
+                migration=jnp.int16 if mig else None)
+        raise ValueError(
+            f"unknown delta quality {delta!r}; expected 'int8', 'int16', "
+            "'int8+mig', 'int16+mig', 'full'/'off', a DeltaConfig, or "
+            "None (auto)")
+    raise TypeError(
+        f"delta must be a DeltaConfig, a quality string, or None; "
+        f"got {type(delta).__name__}")
+
+
 def make_sim(
     behaviors,
     *,
@@ -31,12 +68,13 @@ def make_sim(
     boundary: Union[str, Tuple[str, ...]] = "closed",
     domain: Optional[Domain] = None,
     partition: Optional[Partition] = None,
-    delta: Optional[DeltaConfig] = None,
+    delta: Union[DeltaConfig, str, None] = None,
     dt: float = 0.1,
     mesh=None,
     rebalance: Union[Rebalance, int, None] = None,
     checkpoint=None,
     sweep_backend: str = "auto",
+    overlap: str = "auto",
     check: str = "error",
     guards=None,
 ) -> Simulation:
@@ -48,6 +86,12 @@ def make_sim(
     ``partition=`` starts the run on an uneven box-granular ownership
     (cuts in cells): it defines its own mesh shape and padded per-device
     interior, so it overrides ``interior``/``mesh_shape``.
+
+    ``delta=`` is the per-sim codec quality knob (:func:`resolve_delta`):
+    multi-device sims default to the int8 delta-encoded aura exchange
+    (paper §2.3 — positions are smooth, deltas are tiny); pass ``"int16"``
+    for a higher-fidelity payload, ``"off"`` for raw f32 slabs (bit-exact
+    with the single-device oracle), or a full :class:`DeltaConfig`.
     """
     if partition is not None:
         if domain is not None:
@@ -56,14 +100,18 @@ def make_sim(
             cell_size=cell_size, interior=partition.max_widths,
             mesh_shape=partition.mesh_shape, cap=cap, boundary=boundary,
             partition=partition)
+        n_devices = geom.n_devices
     else:
         geom = domain if domain is not None else dict(
             cell_size=cell_size, interior=interior, mesh_shape=mesh_shape,
             cap=cap, boundary=boundary)
+        n_devices = geom.n_devices if isinstance(geom, Domain) else \
+            int(np.prod(geom["mesh_shape"]))
     return Simulation(
-        geom, behaviors, mesh=mesh, delta=delta, dt=dt,
-        rebalance=rebalance, checkpoint=checkpoint,
-        sweep_backend=sweep_backend, check=check, guards=guards)
+        geom, behaviors, mesh=mesh, delta=resolve_delta(delta, n_devices),
+        dt=dt, rebalance=rebalance, checkpoint=checkpoint,
+        sweep_backend=sweep_backend, overlap=overlap, check=check,
+        guards=guards)
 
 
 def init_agents(sim, positions: np.ndarray, attrs, seed: int = 0):

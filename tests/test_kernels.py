@@ -170,3 +170,49 @@ def test_delta_encode_fixed_overflow_and_adaptive_zero():
     q, scale = ops.delta_encode(x, ref_slab)              # adaptive
     out = ops.delta_decode(q, ref_slab, scale)
     np.testing.assert_allclose(np.asarray(out), np.asarray(x), atol=1e-5)
+
+
+def test_migration_pos_codec_kernel_matches_reference():
+    """Pallas migration position codec == the jnp reference used on the
+    engine's migration hop (core.delta.encode_migration), including the
+    min-image wrap on toroidal axes and the valid-masked overflow count;
+    round-trip error is bounded by scale/2 per axis."""
+    from repro.core.delta import (
+        DeltaConfig, decode_migration, encode_migration,
+    )
+    from repro.kernels import delta_codec
+
+    rng = np.random.default_rng(7)
+    n, d = 96, 2
+    lsz = np.asarray([32.0, 24.0], np.float32)
+    toroidal = (True, False)
+    center = jnp.asarray([16.0, 12.0], jnp.float32)
+    half_rng = np.asarray([18.0, 14.0], np.float32)
+    pos = jnp.asarray(rng.uniform([0, 0], lsz, (n, d)), jnp.float32)
+    valid = jnp.asarray(rng.random(n) < 0.8)
+    cfg = DeltaConfig(migration=jnp.int16)
+
+    want, want_of = encode_migration(
+        {"pos": pos, "valid": valid}, "pos", center, half_rng, cfg,
+        lsz=lsz, toroidal=toroidal)
+    scale = jnp.asarray(half_rng) / 32767.0
+    got_q, got_of = delta_codec.migration_pos_encode_kernel(
+        pos, center, scale, valid=valid, lsz=lsz, toroidal=toroidal,
+        interpret=True)
+    v = np.asarray(valid)
+    np.testing.assert_array_equal(np.asarray(got_q)[v],
+                                  np.asarray(want["pos"])[v])
+    assert int(got_of) == int(want_of) == 0
+
+    got_pos = delta_codec.migration_pos_decode_kernel(
+        got_q, center, scale, lsz=lsz, toroidal=toroidal, interpret=True)
+    want_dec = decode_migration(
+        dict(want), "pos", half_rng, cfg, lsz=lsz, toroidal=toroidal)
+    # same math, different fusion: the interpret-mode kernel and the XLA
+    # reference may differ in the last ulp of center + q*scale
+    np.testing.assert_allclose(np.asarray(got_pos)[v],
+                               np.asarray(want_dec["pos"])[v], atol=1e-5)
+    # quantization error bound (min-image distance on the toroidal axis)
+    err = np.abs(np.asarray(got_pos) - np.asarray(pos))[v]
+    err[:, 0] = np.minimum(err[:, 0], lsz[0] - err[:, 0])
+    assert err.max() <= float(np.max(scale)) * 0.5 + 1e-5

@@ -244,6 +244,26 @@ def test_rebalancer_declines_below_threshold_and_without_gain():
     assert not resharded
 
 
+def test_reshard_transport_validation():
+    eng, state = make_skewed_state()
+    with pytest.raises(ValueError, match="transport"):
+        reshard_state(eng, state, (1, 4), transport="carrier-pigeon")
+    # explicit device transport without enough real devices must refuse
+    # loudly, never silently fall back to the host round trip
+    with pytest.raises(ValueError, match="use the host path"):
+        reshard_state(eng, state, (1, 4), transport="device")
+
+
+def test_reshard_auto_transport_falls_back_to_host_when_unrealizable():
+    """auto on a single real device (this test process) must take the host
+    path and still produce the full re-shard result."""
+    eng, state = make_skewed_state()
+    gids = gid_set(state)
+    eng2, state2 = reshard_state(eng, state, (4, 1), transport="auto")
+    assert eng2.geom.mesh_shape == (4, 1)
+    assert gid_set(state2) == gids
+
+
 def test_flatten_state_roundtrip_single_device():
     eng, state = make_skewed_state(mesh_shape=(1, 1))
     flat = flatten_state(eng.geom, state)
@@ -353,6 +373,121 @@ err = np.max(np.abs(sorted_positions(s1) - sorted_positions(s4)))
 assert err < 1e-4, f"divergence {err}"
 assert after * 2 <= before, (before, after)
 print("OK", before, "->", after, "err", err)
+""")
+    assert "OK" in out
+
+
+def test_device_reshard_bit_exact_vs_host_and_zero_host_bytes():
+    """The device-to-device transport must reproduce the host path
+    bit-for-bit (slots, carry, RNG lineage) on fresh AND stepped states,
+    for equal-split and uneven-partition targets — and must never call
+    ``flatten_state`` (no agent bytes through host)."""
+    out = run_sub("""
+import numpy as np, jax.numpy as jnp
+import repro.core.reshard as rs
+from repro.core import AgentSchema, Behavior, Engine, Domain
+from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
+from repro.core.reshard import (occupancy_histogram, plan_reshard,
+                                reshard_state)
+
+schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                             "ctype": ((), jnp.int32)})
+beh = Behavior(schema=schema, pair_fn=soft_repulsion_adhesion,
+               pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+               radius=2.0, params={"repulsion": 2.0, "adhesion": 0.4,
+                                   "same_type_only": 1.0, "max_step": 0.5})
+
+def make(seed=0):
+    geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=32)
+    eng = Engine(geom=geom, behavior=beh, dt=0.1)
+    rng = np.random.default_rng(seed)
+    n = 400
+    c = np.asarray([(8.0, 8.0), (24.0, 24.0)])[rng.integers(0, 2, n)]
+    pos = np.clip(c + rng.normal(0, 3.0, (n, 2)), 0.5, 31.5).astype(np.float32)
+    attrs = {"diameter": np.full((n,), 1.0, np.float32),
+             "ctype": rng.integers(0, 2, n).astype(np.int32)}
+    return eng, eng.init_state(pos, attrs, seed=seed)
+
+for stepped in (False, True):
+    for target in ("equal", "partition"):
+        eng, st = make()
+        if stepped:
+            eng, st, _ = eng.drive(st, 3)
+        if target == "equal":
+            kw = dict(mesh_shape=(4, 1))
+        else:
+            plan = plan_reshard(occupancy_histogram(eng.geom, st), eng.geom)
+            kw = dict(partition=plan.partition)
+        eh, sh = reshard_state(eng, st, transport="host", **kw)
+
+        orig, calls = rs.flatten_state, []
+        rs.flatten_state = lambda *a, **k: calls.append(1)
+        try:
+            ed, sd = reshard_state(eng, st, transport="device", **kw)
+        finally:
+            rs.flatten_state = orig
+        assert not calls, "device path touched flatten_state"
+        assert eh.geom == ed.geom
+        np.testing.assert_array_equal(np.asarray(sh.soa.valid),
+                                      np.asarray(sd.soa.valid))
+        for name in sh.soa.attrs:
+            np.testing.assert_array_equal(np.asarray(sh.soa.attrs[name]),
+                                          np.asarray(sd.soa.attrs[name]),
+                                          err_msg=name)
+        for f in ("it", "key", "gid_counter", "dropped"):
+            np.testing.assert_array_equal(np.asarray(getattr(sh, f)),
+                                          np.asarray(getattr(sd, f)),
+                                          err_msg=f)
+        print("bit-exact", "stepped" if stepped else "fresh", target)
+print("OK")
+""")
+    assert "OK" in out
+
+
+def test_deferred_rebalance_overlaps_plan_with_device_migration():
+    """defer=True: the snapshot tick returns without re-sharding (the old
+    mesh keeps stepping), the decision lands one step later, applied
+    migrations ride the device transport, and the population is
+    conserved."""
+    out = run_sub("""
+import numpy as np, jax.numpy as jnp
+import repro.core.reshard as rs
+from repro.core import AgentSchema, Behavior, Engine, Domain, Rebalancer, total_agents
+from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
+
+schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                             "ctype": ((), jnp.int32)})
+beh = Behavior(schema=schema, pair_fn=soft_repulsion_adhesion,
+               pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+               radius=2.0, params={"repulsion": 2.0, "adhesion": 0.4,
+                                   "same_type_only": 1.0, "max_step": 0.5})
+geom = Domain(cell_size=2.0, interior=(8, 8), mesh_shape=(2, 2), cap=32)
+eng = Engine(geom=geom, behavior=beh, dt=0.1)
+rng = np.random.default_rng(0)
+n = 400
+c = np.asarray([(8.0, 8.0), (24.0, 24.0)])[rng.integers(0, 2, n)]
+pos = np.clip(c + rng.normal(0, 3.0, (n, 2)), 0.5, 31.5).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, n).astype(np.int32)}
+st = eng.init_state(pos, attrs, seed=0)
+
+orig, calls = rs.flatten_state, []
+rs.flatten_state = lambda *a, **k: calls.append(1)
+try:
+    rb = Rebalancer(every=4, threshold=0.2, min_gain=1.05,
+                    ownership="rcb", defer=True)
+    e2, s2, _ = eng.drive(st, 12, rebalancer=rb)
+finally:
+    rs.flatten_state = orig
+applied = [h for h in rb.history if h["applied"]]
+assert applied, rb.history
+# phase 2 lands one step after the every=4 snapshot ticks
+assert all(h["it"] % 4 == 1 for h in rb.history), rb.history
+assert all(h.get("deferred") for h in rb.history)
+assert all(h["transport"] == "device" for h in applied)
+assert not calls, "deferred device migration touched flatten_state"
+assert total_agents(s2) + int(np.sum(np.asarray(s2.dropped))) == n
+print("OK")
 """)
     assert "OK" in out
 

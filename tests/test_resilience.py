@@ -453,6 +453,38 @@ print("OK sharded halo-fault recovery")
     assert "OK sharded halo-fault recovery" in out
 
 
+def test_overlapped_halo_fault_still_caught_before_boundary_pass(tmp_path):
+    """Guard re-placement regression for the overlapped sweep: with the
+    aura exchange hidden behind the interior pass (``overlap="on"``), a
+    corrupted boundary receive (chaos ``halo_slab`` fault) must still be
+    caught by the ``nan_inf`` guard *before* the boundary pass consumes
+    the received ring — i.e. detection fires at the same step as on the
+    sequential path, the recorded error is a HealthError (a guard trip,
+    not NaN silently spreading through the boundary-face accumulators
+    into positions), and supervised rollback recovery stays bit-exact."""
+    ck = str(tmp_path / "ck")
+    out = run_sub(SHARDED_COMMON + f"""
+sim = make_sim(beh, interior=(8, 16), mesh_shape=(2, 1), cap=24, dt=0.5,
+               guards="error", overlap="on")
+sim.init(pos, attrs)
+plan = FaultPlan((Fault(step=6, kind="halo_slab", axis=0),), seed=3)
+sv = Supervisor(sim, Supervised(dir={ck!r}, every=4, keep=9),
+                fault_plan=plan)
+sv.run(10)
+assert sim.iteration == 10, sim.iteration
+rec = sv.events("recovered")
+# caught at the fault step: rollback target is the checkpoint just
+# below step 6, not some later step reached on corrupted state
+assert len(rec) == 1 and rec[0]["rolled_back_to"] == 4, rec
+assert rec[0]["error_type"] == "HealthError", rec
+check_bitexact(sim, {ck!r}, 4, 6)
+p = np.asarray(sim.state.soa.attrs["pos"])
+assert np.isfinite(p[np.asarray(sim.state.soa.valid)]).all()
+print("OK overlapped halo-fault recovery")
+""", devices=2)
+    assert "OK overlapped halo-fault recovery" in out
+
+
 def test_sharded_device_loss_degrades_and_recovers(tmp_path):
     ck = str(tmp_path / "ck")
     out = run_sub(SHARDED_COMMON + f"""

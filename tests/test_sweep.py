@@ -17,6 +17,10 @@ tolerance.  The scan-fused driver runs the identical per-step graph inside
 ``fori_loop`` and is pinned bit-exact.
 """
 
+import os
+import subprocess
+import sys
+import textwrap
 import warnings
 
 import jax
@@ -29,11 +33,14 @@ from repro.core import (
     total_agents,
 )
 from repro.core.behaviors import displacement_update, soft_repulsion_adhesion
+from repro.core.grid import clear_ring
+from repro.core.halo import LocalComm, halo_exchange
 from repro.core.neighbors import (
     SWEEP_BACKENDS,
     pair_accumulate,
     resolve_sweep_backend,
     sweep_accumulate,
+    sweep_accumulate_overlapped,
 )
 from repro.sims import (
     cell_clustering, cell_proliferation, epidemiology, oncology,
@@ -373,3 +380,152 @@ def test_one_pass_migration_conserves_through_diagonal_wrap():
     v = np.asarray(state.soa.valid).ravel()
     keys = gr[v].astype(np.int64) * (1 << 32) + gc[v]
     assert len(np.unique(keys)) == n
+
+
+# ---------------------------------------------------------------------------
+# overlapped interior/boundary split vs the monolithic sweep
+# ---------------------------------------------------------------------------
+
+def split_vs_monolithic(eng, state, backend):
+    """(overlapped, monolithic) accumulators for one engine state, built
+    exactly the way ``Engine.local_step`` builds them: ``soa_pre`` is the
+    ring-invalidated SoA (the interior pass's input) and ``soa_post`` the
+    SoA after a full-refresh LocalComm aura exchange (wrap fill on
+    toroidal axes, cleared ring on closed ones)."""
+    geom, beh = eng.geom, eng.behavior
+    soa_pre = clear_ring(state.soa)
+    idx0 = (0,) * geom.ndim
+    refs = {d: {f: v[idx0] for f, v in slab.items()}
+            for d, slab in state.refs.items()}
+    comm = LocalComm(toroidal=geom.toroidal)
+    soa_post, _, _, _ = halo_exchange(
+        geom, soa_pre, comm, refs, eng.delta_cfg, True, None)
+
+    fn = jax.jit(lambda pre, post: (
+        sweep_accumulate_overlapped(
+            geom, pre, post, beh.pair_fn, beh.pair_attrs, beh.radius,
+            beh.params, backend=backend),
+        sweep_accumulate(
+            geom, post, beh.pair_fn, beh.pair_attrs, beh.radius,
+            beh.params, backend=backend)))
+    return fn(soa_pre, soa_post)
+
+
+@pytest.mark.parametrize("name", sorted(SIM_BEHAVIORS))
+@pytest.mark.parametrize("backend", ["reference", "tiled", "pallas"])
+def test_overlapped_split_bitexact_vs_monolithic(name, backend):
+    """The interior/boundary split is a pure re-schedule: on the equal
+    split every interior cell's accumulators must match the monolithic
+    sweep bit-for-bit, per backend, for every bundled sim."""
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        beh, boundary = SIM_BEHAVIORS[name]
+        eng, state = make_state(beh, boundary)
+        got, want = split_vs_monolithic(eng, state, backend)
+        assert_acc_close(got, want, atol=0)
+
+
+@pytest.mark.parametrize("backend", ["reference", "tiled", "pallas"])
+def test_overlapped_split_bitexact_3d_spheroid(backend):
+    """3-D composed spheroid stack: the split recomputes 6 faces whose
+    3-plane bands overlap at edges and corners — the idempotent-overwrite
+    argument must hold in 3-D too, bit-for-bit."""
+    from repro.sims import tumor_spheroid
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        beh = tumor_spheroid.behavior()
+        geom = Domain(cell_size=2.0, interior=(3, 4, 5),
+                      mesh_shape=(1, 1, 1), cap=12, boundary="closed")
+        eng = Engine(geom=geom, behavior=beh, dt=0.1)
+        rng = np.random.default_rng(7)
+        n = 150
+        size = geom.domain_size
+        pos = rng.uniform([0.5] * 3, [s - 0.5 for s in size], (n, 3)
+                          ).astype(np.float32)
+        attrs = {"diameter": rng.uniform(0.6, 1.4, n).astype(np.float32),
+                 "ctype": np.ones((n,), np.int32),
+                 "nutrient": rng.uniform(0.0, 1.0, n).astype(np.float32)}
+        state = eng.init_state(pos, attrs, seed=0)
+        got, want = split_vs_monolithic(eng, state, backend)
+        assert_acc_close(got, want, atol=0)
+
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run_sub(code: str, devices: int = 4, timeout: int = 1800) -> str:
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={devices}")
+    env["PYTHONPATH"] = os.path.join(ROOT, "src")
+    p = subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(code)],
+        capture_output=True, text=True, timeout=timeout, env=env)
+    assert p.returncode == 0, f"STDOUT:\n{p.stdout}\nSTDERR:\n{p.stderr}"
+    return p.stdout
+
+
+def test_engine_overlap_sharded_matches_sequential():
+    """Full driven runs on a 2x2 mesh, overlap on vs off, all three
+    backends, equal split and uneven RCB ownership, delta-by-default.
+
+    Equal split: the boundary faces cover every ring-adjacent plane, so
+    the whole run (positions, gids, validity) is pinned bit-exact.
+    Uneven RCB: the face index is traced (the owned extent), XLA fuses
+    the dynamic-sliced band differently, and FMA contraction can flip
+    the last bits of float force chains — positions are pinned to 1e-5,
+    ids and population exactly."""
+    out = run_sub("""
+import numpy as np, jax.numpy as jnp
+from repro.core import AgentSchema, Behavior, Partition
+from repro.core.behaviors import soft_repulsion_adhesion, displacement_update
+from repro.sims.common import make_sim
+
+schema = AgentSchema.create({"diameter": ((), jnp.float32),
+                             "ctype": ((), jnp.int32)})
+beh = Behavior(schema=schema, pair_fn=soft_repulsion_adhesion,
+               pair_attrs=("diameter", "ctype"), update_fn=displacement_update,
+               radius=2.0, params={"repulsion": 2.0, "adhesion": 0.4,
+                                   "same_type_only": 1.0, "max_step": 0.5})
+rng = np.random.default_rng(0)
+n = 300
+pos = rng.uniform(0.5, 31.5, size=(n, 2)).astype(np.float32)
+attrs = {"diameter": np.full((n,), 1.0, np.float32),
+         "ctype": rng.integers(0, 2, size=(n,)).astype(np.int32)}
+
+def key(state):
+    v = np.asarray(state.soa.valid).ravel()
+    p = np.asarray(state.soa.attrs["pos"]).reshape(-1, 2)[v]
+    gr = np.asarray(state.soa.attrs["gid_rank"]).ravel()[v]
+    gc = np.asarray(state.soa.attrs["gid_count"]).ravel()[v]
+    o = np.lexsort((gc, gr))
+    return p[o], gr[o], gc[o]
+
+def run(overlap, backend, part=None):
+    kw = (dict(partition=part) if part is not None
+          else dict(interior=(8, 8), mesh_shape=(2, 2)))
+    sim = make_sim(beh, cap=24, dt=0.5, overlap=overlap,
+                   sweep_backend=backend, **kw)
+    sim.init(pos, attrs)
+    sim.run(6)
+    return key(sim.state)
+
+import warnings
+part = Partition(cuts=((0, 6, 16), (0, 9, 16)))
+for backend in ("reference", "tiled", "pallas"):
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        seq = run("off", backend)
+        ovl = run("on", backend)
+        for a, b in zip(seq, ovl):
+            np.testing.assert_array_equal(a, b)   # equal split: bit-exact
+        sequ = run("off", backend, part)
+        ovlu = run("on", backend, part)
+        np.testing.assert_array_equal(sequ[1], ovlu[1])
+        np.testing.assert_array_equal(sequ[2], ovlu[2])
+        np.testing.assert_allclose(sequ[0], ovlu[0], atol=1e-5)
+    print("OK", backend)
+print("OK overlap sharded")
+""", devices=4)
+    assert "OK overlap sharded" in out
